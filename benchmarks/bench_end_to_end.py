@@ -1,0 +1,38 @@
+"""Paper Fig 8: end-to-end 12-model workload — Hydra vs model parallelism,
+pipeline parallelism, and task parallelism, with GPU utilization.
+
+Real training through the SHARP executor at smoke scale; baselines replay
+the same measured per-shard unit runtimes under their schedules."""
+
+from __future__ import annotations
+
+from benchmarks.common import (baseline_reports, bert_grid_tasks, emit,
+                               run_hydra)
+
+N_DEVICES = 8
+BUDGET = 4500 * 10**3   # < one whole model+opt: task parallelism OOMs (paper §2.2)
+
+
+def run():
+    tasks = bert_grid_tasks(n_models=12, steps=2)
+    orch, report = run_hydra(tasks, n_devices=N_DEVICES, budget=BUDGET)
+    base = baseline_reports(orch, tasks, N_DEVICES, BUDGET)
+    mp = base["model_parallel"]
+
+    emit("fig8_hydra", report.makespan * 1e6,
+         f"speedup_vs_mp={mp.makespan / report.makespan:.2f};"
+         f"util={report.avg_utilization:.2f}")
+    emit("fig8_model_parallel", mp.makespan * 1e6,
+         f"speedup_vs_mp=1.00;util={mp.avg_utilization:.2f}")
+    pipe = base["pipeline"]
+    emit("fig8_pipeline", pipe.makespan * 1e6,
+         f"speedup_vs_mp={mp.makespan / pipe.makespan:.2f};"
+         f"util={pipe.avg_utilization:.2f}")
+    tp = base["task_parallel"]
+    if tp is None:
+        emit("fig8_task_parallel", 0.0,
+             "OOM=model_exceeds_single_device (paper §2.2: cannot run)")
+    else:
+        emit("fig8_task_parallel", tp.makespan * 1e6,
+             f"speedup_vs_mp={mp.makespan / tp.makespan:.2f};"
+             f"util={tp.avg_utilization:.2f}")

@@ -1,0 +1,60 @@
+"""Kernel micro-benchmarks: XLA reference path wall-times on CPU (the
+Pallas kernels themselves target TPU; interpret-mode timing is not a perf
+signal, so what we measure here is the oracle path the dry-run lowers)."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit
+from repro.kernels import ref
+from repro.models.ssm import ssd_chunked
+
+
+def _time(fn, *args, iters=5):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run():
+    key = jax.random.PRNGKey(0)
+    # attention oracle
+    b, s, nh, nkv, hd = 1, 512, 8, 2, 64
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (b, nh, s, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (b, nkv, s, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (b, nkv, s, hd), jnp.float32)
+    fn = jax.jit(lambda q, k, v: ref.flash_attention_ref(q, k, v, causal=True))
+    us = _time(fn, q, k, v)
+    flops = 4 * b * nh * s * s * hd / 2   # causal half
+    emit("kernel_attention_ref_512", us, f"gflops={flops / us / 1e3:.2f}")
+
+    # SSD chunked scan
+    b, s, h, p, n = 2, 1024, 4, 64, 64
+    ks = jax.random.split(key, 4)
+    x = jax.random.normal(ks[0], (b, s, h, p))
+    la = -jnp.abs(jax.random.normal(ks[1], (b, s, h))) * 0.1
+    bc = jax.random.normal(ks[2], (b, s, h, n)) * 0.3
+    cc = jax.random.normal(ks[3], (b, s, h, n)) * 0.3
+    fn = jax.jit(lambda *a: ssd_chunked(*a, 128)[0])
+    us = _time(fn, x, la, bc, cc)
+    emit("kernel_ssd_chunked_1024", us, f"chunk=128")
+
+    # fused swiglu oracle
+    m, d, f = 1024, 512, 2048
+    ks = jax.random.split(key, 4)
+    xm = jax.random.normal(ks[0], (m, d))
+    wg = jax.random.normal(ks[1], (d, f)) * 0.05
+    wu = jax.random.normal(ks[2], (d, f)) * 0.05
+    wd = jax.random.normal(ks[3], (f, d)) * 0.05
+    fn = jax.jit(ref.swiglu_ref)
+    us = _time(fn, xm, wg, wu, wd)
+    emit("kernel_swiglu_ref", us, f"gflops={6 * m * d * f / us / 1e3:.2f}")

@@ -1,0 +1,32 @@
+"""Paper Fig 10: impact of model scale — Hydra's speedup over strict model
+parallelism should stay roughly constant as models grow (more shard units,
+similar per-unit times)."""
+
+from __future__ import annotations
+
+from benchmarks.common import baseline_reports, emit, make_loader, run_hydra
+from repro.configs import get_config
+from repro.core import ModelTask
+
+SCALES = {           # (n_layers, d_model, d_ff) smoke-scale ladder
+    "s": (2, 128, 256),
+    "m": (4, 192, 384),
+    "l": (6, 256, 512),
+}
+
+
+def run():
+    for name, (L, d, f) in SCALES.items():
+        cfg = get_config("bert-large-1b", smoke=True).replace(
+            n_layers=L, d_model=d, n_heads=4, n_kv_heads=4, head_dim=d // 4,
+            d_ff=f)
+        tasks = [ModelTask(cfg, make_loader(cfg, seed=i), lr=1e-3, epochs=1,
+                           steps_per_epoch=2, seed=i, batch=2, seq=64)
+                 for i in range(8)]
+        budget = 4 * 10**6 * (1 + "sml".index(name))
+        orch, report = run_hydra(tasks, n_devices=8, budget=budget)
+        mp = baseline_reports(orch, tasks, 8, budget)["model_parallel"]
+        shards = len(orch.models[0].partition.shards)
+        emit(f"fig10_scale_{name}", report.makespan * 1e6,
+             f"speedup_vs_mp={mp.makespan / report.makespan:.2f};"
+             f"shards={shards};util={report.avg_utilization:.2f}")

@@ -1,0 +1,22 @@
+"""Paper Fig 9B: speedup vs number of devices (4 models fixed).
+
+Expected: near-linear while #devices < #models, flattening once Hydra runs
+out of schedulable models (degree of parallelism inherited from task
+parallelism)."""
+
+from __future__ import annotations
+
+from benchmarks.common import (baseline_reports, bert_grid_tasks, emit,
+                               run_hydra)
+
+
+def run():
+    base_makespan = None
+    for n_dev in [1, 2, 4, 8]:
+        tasks = bert_grid_tasks(n_models=4, steps=2)
+        orch, report = run_hydra(tasks, n_devices=n_dev, budget=6 * 10**6)
+        if base_makespan is None:
+            base_makespan = report.makespan
+        emit(f"fig9b_gpus{n_dev}", report.makespan * 1e6,
+             f"speedup_vs_1dev={base_makespan / report.makespan:.2f};"
+             f"util={report.avg_utilization:.2f}")

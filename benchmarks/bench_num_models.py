@@ -1,0 +1,19 @@
+"""Paper Fig 9A: speedup vs number of models (8 devices fixed).
+
+Expected shape: ~linear speedup over model parallelism until #models
+saturates #devices, then flat (SHARP inherits task parallelism's limit)."""
+
+from __future__ import annotations
+
+from benchmarks.common import (baseline_reports, bert_grid_tasks, emit,
+                               run_hydra)
+
+
+def run():
+    for n_models in [2, 4, 8, 12]:
+        tasks = bert_grid_tasks(n_models=n_models, steps=2)
+        orch, report = run_hydra(tasks, n_devices=8, budget=6 * 10**6)
+        mp = baseline_reports(orch, tasks, 8, 6 * 10**6)["model_parallel"]
+        emit(f"fig9a_models{n_models}", report.makespan * 1e6,
+             f"speedup_vs_mp={mp.makespan / report.makespan:.2f};"
+             f"util={report.avg_utilization:.2f}")

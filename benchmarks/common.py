@@ -1,0 +1,75 @@
+"""Shared helpers for the benchmark suite.
+
+All multi-model benchmarks run *real* JAX training at smoke scale through
+the Hydra executor; device parallelism is virtualized (measured per-unit
+compute + modeled transfers on per-device clocks — see repro/core/sharp.py).
+Rows print as ``name,us_per_call,derived`` CSV.
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+import jax
+
+from repro.configs import get_config
+from repro.core import HydraConfig, ModelOrchestrator, ModelTask
+from repro.core import baselines as bl
+from repro.models import api
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    print(f"{name},{us_per_call:.1f},{derived}")
+    sys.stdout.flush()
+
+
+def make_loader(cfg, batch=2, seq=64, seed=0):
+    class L:
+        def __iter__(self):
+            def gen():
+                i = 0
+                while True:
+                    k = jax.random.fold_in(jax.random.PRNGKey(seed), i)
+                    yield api.make_dummy_batch(cfg, batch, seq, key=k)
+                    i += 1
+            return gen()
+
+    return L()
+
+
+def bert_grid_tasks(n_models=12, steps=2, seq=64, arch="bert-large-1b"):
+    """The paper's Table-2 style hyper-parameter grid at smoke scale:
+    batch {8,16,32} x lr {1e-3..1e-6} = 12 configs (we keep the *shape* of
+    the grid; batch is fixed smoke-small so runtimes stay CPU-feasible)."""
+    cfg = get_config(arch, smoke=True)
+    lrs = [1e-3, 1e-4, 1e-5, 1e-6]
+    tasks = []
+    for i in range(n_models):
+        tasks.append(ModelTask(cfg, make_loader(cfg, seed=i, seq=seq),
+                               lr=lrs[i % len(lrs)], epochs=1,
+                               steps_per_epoch=steps, seed=i,
+                               batch=2, seq=seq))
+    return tasks
+
+
+def run_hydra(tasks, n_devices=8, budget=6 * 10**6, link_bw=2e9,
+              sharp=True, db=True, scheduler="lrtf"):
+    hc = HydraConfig(n_devices=n_devices, device_budget_bytes=budget,
+                     link_bw=link_bw, enable_sharp=sharp,
+                     enable_double_buffer=db, scheduler=scheduler)
+    orch = ModelOrchestrator(tasks, hc)
+    report = orch.train_models()
+    return orch, report
+
+
+def baseline_reports(orch, tasks, n_devices, budget):
+    steps = [t.epochs * t.steps_per_epoch for t in tasks]
+    out = {"model_parallel": bl.model_parallel(orch.models, n_devices, steps),
+           "pipeline": bl.pipeline(orch.models, n_devices, steps)}
+    try:
+        out["task_parallel"] = bl.task_parallel(orch.models, n_devices,
+                                                steps, budget)
+    except MemoryError as e:
+        out["task_parallel"] = None
+    return out

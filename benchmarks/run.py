@@ -1,0 +1,39 @@
+"""Benchmark driver — one module per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run            # everything
+  PYTHONPATH=src python -m benchmarks.run fig8 table3
+
+Prints ``name,us_per_call,derived`` CSV rows.
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+SUITES = {
+    "fig7": ("benchmarks.bench_scheduler", "Fig 7  scheduler simulation"),
+    "fig8": ("benchmarks.bench_end_to_end", "Fig 8  end-to-end 12 models"),
+    "fig9a": ("benchmarks.bench_num_models", "Fig 9A #models sweep"),
+    "fig9b": ("benchmarks.bench_num_gpus", "Fig 9B #devices sweep"),
+    "fig10": ("benchmarks.bench_model_scale", "Fig 10 model scale"),
+    "table3": ("benchmarks.bench_ablation", "Table 3 ablation"),
+    "kernels": ("benchmarks.bench_kernels", "kernel micro-benchmarks"),
+}
+
+
+def main() -> None:
+    import importlib
+    which = [a for a in sys.argv[1:] if a in SUITES] or list(SUITES)
+    print("name,us_per_call,derived")
+    for key in which:
+        mod_name, desc = SUITES[key]
+        print(f"# --- {desc} ---")
+        t0 = time.time()
+        mod = importlib.import_module(mod_name)
+        mod.run()
+        print(f"# {key} done in {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

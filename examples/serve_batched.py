@@ -1,0 +1,53 @@
+"""Batched serving example: prefill a batch of prompts, then decode with the
+KV cache / recurrent state — across three architecture families (dense GQA,
+MoE, and a recurrent xLSTM whose state is O(1) in context length).
+
+    PYTHONPATH=src python examples/serve_batched.py
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models import api
+from repro.training import make_decode_step
+
+
+def serve_one(arch: str, batch=2, prompt_len=16, gen=8):
+    cfg = get_config(arch, smoke=True)
+    params = api.init_params(cfg, jax.random.PRNGKey(0))
+    state = api.init_decode_state(cfg, batch, prompt_len + gen + 4)
+    prompt = jax.random.randint(jax.random.PRNGKey(1), (batch, prompt_len),
+                                0, cfg.vocab_size, jnp.int32)
+
+    step = jax.jit(lambda p, s, t: api.decode_step(cfg, p, s, t))
+    logits = None
+    t0 = time.perf_counter()
+    for i in range(prompt_len):                       # prefill via decode
+        logits, state = step(params, state, prompt[:, i:i + 1])
+    prefill_s = time.perf_counter() - t0
+
+    decode = jax.jit(make_decode_step(cfg))
+    tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+    out = [tok]
+    t0 = time.perf_counter()
+    for _ in range(gen - 1):
+        tok, state = decode(params, state, tok)
+        out.append(tok)
+    jax.block_until_ready(tok)
+    decode_s = time.perf_counter() - t0
+    gen_toks = jnp.concatenate(out, axis=1)
+    print(f"{arch:18s} prefill {prefill_s * 1e3:7.1f} ms   "
+          f"decode {batch * (gen - 1) / max(decode_s, 1e-9):8.1f} tok/s   "
+          f"sample {gen_toks[0, :6].tolist()}")
+
+
+def main():
+    for arch in ("qwen3-0.6b", "mixtral-8x22b", "xlstm-350m"):
+        serve_one(arch)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,85 @@
+"""Sharded, spill-aware checkpointing.
+
+Format: one directory per step containing
+  * ``manifest.json`` — pytree structure, shapes, dtypes, step metadata
+  * ``arrays.npz``    — flattened leaves keyed by tree path
+
+Works on host-resident (spilled) shards without forcing promotion: leaves may
+be numpy arrays (host) or jax arrays (device) — both serialize; restore
+returns numpy so Hydra's memory manager decides placement.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten_with_paths(tree) -> dict[str, Any]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        flat[key] = leaf
+    return flat
+
+
+def save(directory: str, tree, *, step: int = 0,
+         metadata: Optional[dict] = None) -> str:
+    os.makedirs(directory, exist_ok=True)
+    flat = _flatten_with_paths(tree)
+    arrays = {}
+    manifest = {"step": step, "metadata": metadata or {}, "leaves": {}}
+    for key, leaf in flat.items():
+        arr = np.asarray(leaf)
+        arrays[key] = arr if arr.dtype != jnp.bfloat16 else \
+            arr.view(np.uint16)
+        manifest["leaves"][key] = {
+            "shape": list(arr.shape),
+            "dtype": "bfloat16" if arr.dtype == jnp.bfloat16 else str(arr.dtype),
+        }
+    np.savez(os.path.join(directory, "arrays.npz"), **arrays)
+    with open(os.path.join(directory, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    return directory
+
+
+def restore(directory: str, like=None) -> tuple[Any, dict]:
+    """Returns (tree, manifest). If ``like`` given, reshapes into its pytree
+    structure; otherwise returns the flat {path: array} dict."""
+    with open(os.path.join(directory, "manifest.json")) as f:
+        manifest = json.load(f)
+    with np.load(os.path.join(directory, "arrays.npz")) as z:
+        flat = {}
+        for key, meta in manifest["leaves"].items():
+            arr = z[key]
+            if meta["dtype"] == "bfloat16":
+                arr = arr.view(jnp.bfloat16)
+            flat[key] = arr
+    if like is None:
+        return flat, manifest
+    like_flat = _flatten_with_paths(like)
+    missing = set(like_flat) - set(flat)
+    if missing:
+        raise ValueError(f"checkpoint missing leaves: {sorted(missing)[:5]}")
+    paths, treedef = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for path, _ in paths:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        leaves.append(flat[key])
+    return jax.tree_util.tree_unflatten(treedef, leaves), manifest
+
+
+def latest_step(root: str) -> Optional[str]:
+    if not os.path.isdir(root):
+        return None
+    steps = [d for d in os.listdir(root) if d.startswith("step_")]
+    if not steps:
+        return None
+    return os.path.join(root, max(steps, key=lambda s: int(s.split("_")[1])))

@@ -1,0 +1,21 @@
+"""Hydra core: the paper's primary contribution.
+
+Spilling (§4.2) + automated partitioning (§4.3) + SHARP (§4.4) + shard
+orchestration (§4.5) + double buffering (§4.6) + Sharded-LRTF (§4.7).
+"""
+
+from repro.core.orchestrator import (ModelOrchestrator, ModelTask,
+                                     train_sequential_reference)
+from repro.core.partitioner import PartitionResult, Shard, partition
+from repro.core.scheduler import (ModelProgress, get_scheduler,
+                                  greedy_list_makespan, optimal_makespan,
+                                  sharded_lrtf)
+from repro.core.shard_graph import Segment, ShardPlan, build_plan
+from repro.core.sharp import HydraConfig, RunReport, SharpExecutor
+
+__all__ = ["ModelTask", "ModelOrchestrator", "train_sequential_reference",
+           "HydraConfig", "SharpExecutor", "RunReport",
+           "partition", "PartitionResult", "Shard",
+           "build_plan", "ShardPlan", "Segment",
+           "sharded_lrtf", "get_scheduler", "optimal_makespan",
+           "greedy_list_makespan", "ModelProgress"]

@@ -1,0 +1,180 @@
+"""Model spilling (paper §4.2): shard-granular promotion/demotion between
+device memory and host DRAM, with byte accounting per virtual device.
+
+On real TPU/GPU fleets promotion is ``jax.device_put`` into HBM and demotion
+is a host fetch; on this CPU dev container the transfers are physically
+host→host but the *mechanics* (buffer lifecycle, budget enforcement,
+double-buffer reservations, byte/traffic accounting) are identical and fully
+exercised.  The SHARP executor charges virtual transfer time =
+bytes / ``link_bw`` against the device timeline.
+
+Layout of the host store per model:
+    params:      family host tree (numpy-backed, prepare_host_params applied)
+    opt:         {shard_index: opt-state tree}  (own params)
+    shared_opt:  {name: opt-state tree}         (shared params)
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import shard_graph as sg
+from repro.core.partitioner import PartitionResult, Shard, tree_bytes
+
+
+def to_host(tree):
+    # np.array (copy) — np.asarray of a jax array is a read-only view
+    return jax.tree.map(lambda a: np.array(a), tree)
+
+
+def to_device(tree, device=None):
+    if device is None:
+        return jax.tree.map(jnp.asarray, tree)
+    return jax.tree.map(lambda a: jax.device_put(a, device), tree)
+
+
+@dataclass
+class TransferStats:
+    promoted_bytes: int = 0
+    demoted_bytes: int = 0
+    n_promotions: int = 0
+    n_demotions: int = 0
+    act_bytes_moved: int = 0
+
+    def total_bytes(self) -> int:
+        return self.promoted_bytes + self.demoted_bytes + self.act_bytes_moved
+
+
+class HostModelStore:
+    """DRAM-resident master copy of one model (params + optimizer state)."""
+
+    def __init__(self, cfg, plan: sg.ShardPlan, params, opt_cfg,
+                 partition: PartitionResult):
+        from repro.optim import optimizers as opt
+        self.cfg = cfg
+        self.plan = plan
+        self.partition = partition
+        self.params = sg.prepare_host_params(cfg, to_host(params))
+        self.opt_cfg = opt_cfg
+        self.opt: dict[int, Any] = {}
+        for shard in partition.shards:
+            own = self._own_params(shard)
+            self.opt[shard.index] = to_host(opt.init_state(opt_cfg, own))
+        self.shared_opt = {
+            name: to_host(opt.init_state(
+                opt_cfg, sg.resolve_ref(self.params, ref)))
+            for name, ref in plan.shared_refs.items()}
+        # accumulated grads for shared params within the current mini-batch
+        self.shared_grad_acc: dict[str, Any] = {}
+
+    # -- own (spillable) ---------------------------------------------------
+    def _own_params(self, shard: Shard):
+        return tuple(sg.resolve_ref(self.params,
+                                    self.plan.segments[i].param_ref)
+                     for i in range(shard.seg_lo, shard.seg_hi))
+
+    def promote_shard(self, shard: Shard):
+        """Host -> device: (own_params, shared_params, opt_state)."""
+        own = to_device(self._own_params(shard))
+        shared = {n: to_device(sg.resolve_ref(self.params,
+                                              self.plan.shared_refs[n]))
+                  for n in self.shard_shared_names(shard)}
+        opt_state = to_device(self.opt[shard.index])
+        return own, shared, opt_state
+
+    def demote_shard(self, shard: Shard, own, opt_state):
+        """Device -> host: write back possibly-updated params + opt state."""
+        for k, i in enumerate(range(shard.seg_lo, shard.seg_hi)):
+            ref = self.plan.segments[i].param_ref
+            if ref is not None and own[k] is not None:
+                sg.update_with_ref(self.params, ref, to_host(own[k]))
+        self.opt[shard.index] = to_host(opt_state)
+
+    def shard_shared_names(self, shard: Shard) -> list[str]:
+        names: list[str] = []
+        for i in range(shard.seg_lo, shard.seg_hi):
+            for n in self.plan.segments[i].shared:
+                if n not in names:
+                    names.append(n)
+        return names
+
+    # -- shared ------------------------------------------------------------
+    def accumulate_shared_grads(self, grads: dict[str, Any]):
+        for name, g in grads.items():
+            if g is None:
+                continue
+            if name in self.shared_grad_acc:
+                self.shared_grad_acc[name] = jax.tree.map(
+                    lambda a, b: a + np.asarray(b),
+                    self.shared_grad_acc[name], g)
+            else:
+                self.shared_grad_acc[name] = to_host(g)
+
+    def step_shared(self):
+        """Apply accumulated shared-param grads (mini-batch boundary)."""
+        from repro.optim import optimizers as opt
+        for name, g in self.shared_grad_acc.items():
+            ref = self.plan.shared_refs[name]
+            p = to_device(sg.resolve_ref(self.params, ref))
+            s = to_device(self.shared_opt[name])
+            new_p, new_s = opt.update(self.opt_cfg, p, to_device(g), s)
+            sg.update_with_ref(self.params, ref, to_host(new_p))
+            self.shared_opt[name] = to_host(new_s)
+        self.shared_grad_acc = {}
+
+    # -- sizes --------------------------------------------------------------
+    def shard_transfer_bytes(self, shard: Shard, *, train: bool = True) -> int:
+        own_b = sum(tree_bytes(p) for p in self._own_params(shard)
+                    if p is not None)
+        shared_b = sum(
+            tree_bytes(sg.resolve_ref(self.params, self.plan.shared_refs[n]))
+            for n in self.shard_shared_names(shard))
+        opt_b = tree_bytes(self.opt[shard.index]) if train else 0
+        return own_b + shared_b + opt_b
+
+    def model_params(self):
+        """Reassembled full param tree (reference comparisons/checkpoints)."""
+        return sg.restore_model_params(self.cfg, self.params)
+
+
+class DeviceMemory:
+    """Budget + double-buffer accounting for one virtual device."""
+
+    def __init__(self, device_id: int, budget_bytes: int,
+                 buffer_frac: float = 0.05):
+        self.device_id = device_id
+        self.budget = budget_bytes
+        self.buffer_budget = int(budget_bytes * buffer_frac)
+        self.resident_bytes = 0
+        self.buffered_bytes = 0
+        self.stats = TransferStats()
+
+    def charge_promotion(self, nbytes: int, *, into_buffer: bool):
+        if into_buffer:
+            self.buffered_bytes += nbytes
+        else:
+            self.resident_bytes += nbytes
+        self.stats.promoted_bytes += nbytes
+        self.stats.n_promotions += 1
+        assert self.resident_bytes + self.buffered_bytes <= self.budget, \
+            (f"device {self.device_id} over budget: "
+             f"{(self.resident_bytes + self.buffered_bytes)/1e9:.2f} GB "
+             f"> {self.budget/1e9:.2f} GB")
+
+    def activate_buffer(self):
+        """Promote the double-buffered shard to the active region."""
+        self.resident_bytes += self.buffered_bytes
+        self.buffered_bytes = 0
+
+    def charge_demotion(self, nbytes: int):
+        self.resident_bytes = max(0, self.resident_bytes - nbytes)
+        self.stats.demoted_bytes += nbytes
+        self.stats.n_demotions += 1
+
+    def charge_act(self, nbytes: int):
+        self.stats.act_bytes_moved += nbytes

@@ -1,0 +1,5 @@
+from repro.data.pipeline import (DataConfig, FileTokens, Prefetcher,
+                                 SyntheticTokens, make_dataset)
+
+__all__ = ["DataConfig", "SyntheticTokens", "FileTokens", "make_dataset",
+           "Prefetcher"]

@@ -1,0 +1,6 @@
+"""Pallas TPU kernels for the compute hot spots.
+
+Each kernel ships three parts: ``<name>.py`` (pl.pallas_call + BlockSpec
+tiling), wrappers in ``ops.py`` (jit'd public entry points), and oracles in
+``ref.py`` (pure-jnp ground truth for the allclose tests).
+"""

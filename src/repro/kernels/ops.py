@@ -1,0 +1,61 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+On the CPU dev container kernels run with ``interpret=True`` (the Pallas
+interpreter executes the kernel body faithfully); on TPU the same call sites
+compile to Mosaic.  ``repro.models.layers`` routes here when
+``cfg.attn_impl`` selects the kernel path.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import flash_attention_bhsd
+from repro.kernels.rmsnorm import rms_norm_2d
+from repro.kernels.ssd_scan import ssd_scan_bshpn
+from repro.kernels.swiglu import swiglu_2d
+
+_ON_TPU = jax.default_backend() == "tpu"
+
+
+def _interp(explicit):
+    return (not _ON_TPU) if explicit is None else explicit
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "interpret",
+                                   "block_q", "block_k"))
+def flash_attention(q, k, v, *, causal: bool = True, window=None,
+                    interpret=None, block_q: int = 128, block_k: int = 128):
+    """q: (b, sq, nh, hd); k/v: (b, sk, nkv, hd) — layer-layout entry point."""
+    out = flash_attention_bhsd(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3), causal=causal, window=window,
+        block_q=block_q, block_k=block_k, interpret=_interp(interpret))
+    return out.transpose(0, 2, 1, 3)
+
+
+@partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x, log_a, b_coef, c_coef, *, chunk: int = 256,
+             initial_state=None, interpret=None):
+    y = ssd_scan_bshpn(x, log_a, b_coef, c_coef, chunk=chunk,
+                       interpret=_interp(interpret))
+    return y, None   # kernel path does not export final state (training)
+
+
+@partial(jax.jit, static_argnames=("eps", "interpret"))
+def rms_norm(x, w, *, eps: float = 1e-6, interpret=None):
+    shape = x.shape
+    y = rms_norm_2d(x.reshape(-1, shape[-1]), w, eps=eps,
+                    interpret=_interp(interpret))
+    return y.reshape(shape)
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def swiglu(x, w_gate, w_up, w_down, *, interpret=None):
+    shape = x.shape
+    y = swiglu_2d(x.reshape(-1, shape[-1]), w_gate, w_up, w_down,
+                  interpret=_interp(interpret))
+    return y.reshape(*shape[:-1], w_down.shape[-1])

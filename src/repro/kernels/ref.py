@@ -1,0 +1,65 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, window=None):
+    """q: (b, nh, sq, hd); k/v: (b, nkv, sk, hd)."""
+    b, nh, sq, hd = q.shape
+    _, nkv, sk, _ = k.shape
+    groups = nh // nkv
+    qg = q.reshape(b, nkv, groups, sq, hd).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    logits = jnp.einsum("bkgqh,bksh->bkgqs", qg, kf) / math.sqrt(hd)
+    qpos = jnp.arange(sq)[:, None]
+    kpos = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    logits = jnp.where(mask[None, None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgqs,bksh->bkgqh", probs, vf)
+    return out.reshape(b, nh, sq, hd).astype(q.dtype)
+
+
+def ssd_scan_ref(x, log_a, b_coef, c_coef, *, chunk: int):
+    """Sequential-recurrence oracle (O(s) scan, independent of the chunked
+    algorithm): S_t = exp(a_t) S_{t-1} + B_t x_t^T ; y_t = C_t · S_t."""
+    bsz, s, h, p = x.shape
+    n = b_coef.shape[-1]
+    f32 = jnp.float32
+
+    def step(state, inp):
+        x_t, a_t, b_t, c_t = inp
+        state = state * jnp.exp(a_t.astype(f32))[..., None, None] \
+            + x_t.astype(f32)[..., None] * b_t.astype(f32)[..., None, :]
+        y = jnp.einsum("bhpn,bhn->bhp", state, c_t.astype(f32))
+        return state, y
+
+    init = jnp.zeros((bsz, h, p, n), f32)
+    xs = (x.transpose(1, 0, 2, 3), log_a.transpose(1, 0, 2),
+          b_coef.transpose(1, 0, 2, 3), c_coef.transpose(1, 0, 2, 3))
+    _, ys = jax.lax.scan(step, init, xs)
+    return ys.transpose(1, 0, 2, 3).astype(x.dtype)
+
+
+def rms_norm_ref(x, w, *, eps: float = 1e-6):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)
+            * w.astype(jnp.float32)).astype(x.dtype)
+
+
+def swiglu_ref(x, w_gate, w_up, w_down):
+    x32 = x.astype(jnp.float32)
+    g = x32 @ w_gate.astype(jnp.float32)
+    u = x32 @ w_up.astype(jnp.float32)
+    return ((jax.nn.silu(g) * u) @ w_down.astype(jnp.float32)).astype(x.dtype)

@@ -1,0 +1,31 @@
+"""Production mesh construction.
+
+A FUNCTION (not module-level constant) so importing never touches jax device
+state.  The dry-run sets ``--xla_force_host_platform_device_count=512``
+before any jax import; smoke tests and benchmarks see the real single CPU
+device.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """v5e pod mesh: 16×16 = 256 chips per pod; 2 pods = 512 chips."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_debug_mesh(n_data: int = 2, n_model: int = 2):
+    """Small host-device mesh for tests (requires >= n_data*n_model devices)."""
+    return jax.make_mesh((n_data, n_model), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+# v5e hardware constants (roofline)
+PEAK_FLOPS_BF16 = 197e12        # per chip
+HBM_BW = 819e9                  # bytes/s per chip
+ICI_BW = 50e9                   # bytes/s per link

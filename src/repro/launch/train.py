@@ -1,0 +1,130 @@
+"""SPMD training launcher.
+
+Single-model pjit training over a mesh — the substrate Hydra's multi-model
+layer schedules over sub-meshes of.  On the dev container it runs real steps
+on the CPU device (reduced configs); on a pod the same driver drives the
+production mesh.
+
+Usage:
+  python -m repro.launch.train --arch qwen3-0.6b --smoke --steps 20
+  python -m repro.launch.train --arch bert-large-1b --smoke --steps 200 \
+      --batch 8 --seq 128 --log-every 10 --ckpt-dir /tmp/ckpt
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import checkpoint as ckpt
+from repro.configs import get_config
+from repro.data import DataConfig, Prefetcher, make_dataset
+from repro.models import api
+from repro.optim import OptimizerConfig, init_state
+from repro.sharding import specs as sh
+from repro.training import make_train_step
+
+
+def make_mesh_for_args(args):
+    n = len(jax.devices())
+    if args.mesh == "production":
+        from repro.launch.mesh import make_production_mesh
+        return make_production_mesh(multi_pod=args.multi_pod)
+    if n == 1:
+        return jax.make_mesh((1, 1), ("data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    nd = max(1, n // 2)
+    return jax.make_mesh((nd, n // nd), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def train(args) -> dict:
+    cfg = get_config(args.arch, smoke=args.smoke)
+    mesh = make_mesh_for_args(args)
+    ocfg = OptimizerConfig(kind=args.optimizer, lr=args.lr,
+                           schedule="linear_warmup_cosine",
+                           warmup_steps=max(args.steps // 20, 1),
+                           total_steps=args.steps)
+
+    params = api.init_params(cfg, jax.random.PRNGKey(args.seed))
+    opt_state = init_state(ocfg, params)
+
+    pshard = sh.to_shardings(mesh, sh.param_specs(cfg, params, mesh))
+    oshard = sh.to_shardings(mesh, sh.opt_state_specs(cfg, opt_state, mesh))
+    params = jax.device_put(params, pshard)
+    opt_state = jax.device_put(opt_state, oshard)
+
+    data_cfg = DataConfig(batch_size=args.batch, seq_len=args.seq,
+                          vocab_size=cfg.vocab_size, seed=args.seed,
+                          path=args.data)
+    if cfg.family in ("audio", "vlm"):
+        def synth():
+            i = 0
+            while True:
+                yield api.make_dummy_batch(cfg, args.batch, args.seq,
+                                           key=jax.random.PRNGKey(i))
+                i += 1
+        it = synth()
+    else:
+        it = iter(Prefetcher(iter(make_dataset(data_cfg)), depth=2))
+
+    step_fn = jax.jit(
+        make_train_step(cfg, ocfg, accum_steps=args.accum),
+        in_shardings=(pshard, oshard, None),
+        out_shardings=(pshard, oshard, None),
+        donate_argnums=(0, 1))
+
+    history = []
+    t0 = time.perf_counter()
+    for step in range(args.steps):
+        batch = next(it)
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        if step % args.log_every == 0 or step == args.steps - 1:
+            loss = float(metrics["loss"])
+            dt = time.perf_counter() - t0
+            tok_s = args.batch * args.seq * (step + 1) / dt
+            print(f"step {step:5d}  loss {loss:8.4f}  "
+                  f"gnorm {float(metrics['grad_norm']):7.3f}  "
+                  f"{tok_s:9.0f} tok/s")
+            history.append({"step": step, "loss": loss})
+        if args.ckpt_dir and step and step % args.ckpt_every == 0:
+            ckpt.save(f"{args.ckpt_dir}/step_{step}", params, step=step)
+    if args.ckpt_dir:
+        ckpt.save(f"{args.ckpt_dir}/step_{args.steps}", params,
+                  step=args.steps)
+    return {"history": history,
+            "final_loss": history[-1]["loss"] if history else None,
+            "params": api.param_count(params)}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--optimizer", default="adamw")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--data", default=None, help="token .bin (else synthetic)")
+    ap.add_argument("--mesh", default="auto", choices=["auto", "production"])
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=100)
+    args = ap.parse_args()
+    out = train(args)
+    print(json.dumps({k: v for k, v in out.items() if k != "history"}))
+
+
+if __name__ == "__main__":
+    main()

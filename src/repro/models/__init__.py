@@ -1,0 +1,6 @@
+from repro.models.api import (decode_step, forward, init_decode_state,
+                              init_params, input_specs, make_dummy_batch,
+                              param_count)
+
+__all__ = ["init_params", "forward", "decode_step", "init_decode_state",
+           "input_specs", "make_dummy_batch", "param_count"]

@@ -1,0 +1,113 @@
+"""Unified model API: dispatch on ``cfg.family``.
+
+Every family module exposes the same surface:
+    init_params(cfg, key) -> params
+    forward(cfg, params, batch, *, window=None) -> logits [(b, s, V)]
+    init_decode_state(cfg, batch, max_seq) -> state
+    decode_step(cfg, params, state, tokens) -> (logits, state)
+    apply_layer_range(cfg, stacked_slice, x, ...)   (Hydra shard primitive)
+
+``input_specs`` builds ShapeDtypeStruct stand-ins for the dry-run — weak-type
+correct, shardable, zero allocation.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import encdec, hybrid, moe, ssm, transformer
+
+
+def family_module(cfg):
+    return {
+        "dense": transformer,
+        "vlm": transformer,
+        "moe": moe,
+        "ssm": ssm,
+        "hybrid": hybrid,
+        "audio": encdec,
+    }[cfg.family]
+
+
+def init_params(cfg, key):
+    return family_module(cfg).init_params(cfg, key)
+
+
+def forward(cfg, params, batch, *, window: Optional[int] = None,
+            last_only: bool = False):
+    return family_module(cfg).forward(cfg, params, batch, window=window,
+                                      last_only=last_only)
+
+
+def init_decode_state(cfg, batch: int, max_seq: int):
+    return family_module(cfg).init_decode_state(cfg, batch, max_seq)
+
+
+def decode_step(cfg, params, state, tokens, *, window: Optional[int] = None):
+    return family_module(cfg).decode_step(cfg, params, state, tokens,
+                                          window=window)
+
+
+def param_count(params) -> int:
+    return sum(x.size for x in jax.tree.leaves(params))
+
+
+# ---------------------------------------------------------------------------
+# input specs (dry-run stand-ins)
+# ---------------------------------------------------------------------------
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg, shape, *, kind: Optional[str] = None) -> dict[str, Any]:
+    """ShapeDtypeStruct inputs for (arch, input-shape).
+
+    kind 'train'/'prefill' -> full-sequence batch; 'decode' -> one token.
+    """
+    kind = kind or shape.kind
+    b, s = shape.global_batch, shape.seq_len
+    if kind == "decode":
+        return {"tokens": _sds((b, 1), jnp.int32)}
+    batch: dict[str, Any] = {}
+    if cfg.family == "audio":
+        batch["enc_embeds"] = _sds((b, cfg.encoder_len, cfg.d_model),
+                                   jnp.bfloat16)
+        batch["tokens"] = _sds((b, s), jnp.int32)
+        batch["labels"] = _sds((b, s), jnp.int32)
+    elif cfg.takes_embeddings:
+        # VLM: frontend stub emits fused patch+text embeddings
+        batch["embeds"] = _sds((b, s, cfg.d_model), jnp.bfloat16)
+        batch["labels"] = _sds((b, s), jnp.int32)
+    else:
+        batch["tokens"] = _sds((b, s), jnp.int32)
+        batch["labels"] = _sds((b, s), jnp.int32)
+    return batch
+
+
+def make_dummy_batch(cfg, batch_size: int, seq_len: int, key=None):
+    """Concrete random batch matching input_specs (smoke tests / examples)."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    k1, k2, k3 = jax.random.split(key, 3)
+    out: dict[str, Any] = {}
+    if cfg.family == "audio":
+        out["enc_embeds"] = jax.random.normal(
+            k1, (batch_size, cfg.encoder_len, cfg.d_model), jnp.bfloat16)
+        out["tokens"] = jax.random.randint(
+            k2, (batch_size, seq_len), 0, cfg.vocab_size, jnp.int32)
+        out["labels"] = jax.random.randint(
+            k3, (batch_size, seq_len), 0, cfg.vocab_size, jnp.int32)
+    elif cfg.takes_embeddings:
+        out["embeds"] = jax.random.normal(
+            k1, (batch_size, seq_len, cfg.d_model), jnp.bfloat16)
+        out["labels"] = jax.random.randint(
+            k3, (batch_size, seq_len), 0, cfg.vocab_size, jnp.int32)
+    else:
+        out["tokens"] = jax.random.randint(
+            k2, (batch_size, seq_len), 0, cfg.vocab_size, jnp.int32)
+        out["labels"] = jax.random.randint(
+            k3, (batch_size, seq_len), 0, cfg.vocab_size, jnp.int32)
+    return out

@@ -1,0 +1,200 @@
+"""Whisper-class encoder-decoder transformer.
+
+The mel-spectrogram + conv frontend is a stub per the assignment carve-out:
+``input_specs`` feeds precomputed frame embeddings ``(b, encoder_len, d)``.
+Encoder: bidirectional self-attention; decoder: causal self-attention +
+cross-attention to the encoder output.  LayerNorm + GELU (Whisper style),
+learned positions, no RoPE.
+
+For Hydra, the model is one queue: [embed, enc_0..enc_{E-1}, dec_0..dec_{D-1},
+head] — the encoder output is a boundary intermediate checkpointed between
+shard units like any other.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as nn
+from repro.sharding.context import constrain_batch
+
+
+def init_enc_layer(key, cfg):
+    k1, k2 = jax.random.split(key)
+    return {
+        "attn_norm": nn.init_layernorm(cfg.d_model, cfg.param_dtype),
+        "attn": nn.init_attention(k1, cfg),
+        "mlp_norm": nn.init_layernorm(cfg.d_model, cfg.param_dtype),
+        "mlp": nn.init_gelu_mlp(k2, cfg),
+    }
+
+
+def init_dec_layer(key, cfg):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "self_norm": nn.init_layernorm(cfg.d_model, cfg.param_dtype),
+        "self_attn": nn.init_attention(k1, cfg),
+        "cross_norm": nn.init_layernorm(cfg.d_model, cfg.param_dtype),
+        "cross_attn": nn.init_attention(k2, cfg),
+        "mlp_norm": nn.init_layernorm(cfg.d_model, cfg.param_dtype),
+        "mlp": nn.init_gelu_mlp(k3, cfg),
+    }
+
+
+def init_params(cfg, key):
+    ke, kp, kenc, kdec = jax.random.split(key, 4)
+    enc_keys = jax.random.split(kenc, cfg.n_encoder_layers)
+    dec_keys = jax.random.split(kdec, cfg.n_layers)
+    return {
+        "embed": nn.init_embedding(ke, cfg.vocab_size, cfg.d_model,
+                                   cfg.param_dtype),
+        # learned decoder positions (Whisper trains 448; we cap the table at 8k
+        # and clamp beyond — positions past the table reuse the last embedding)
+        "dec_pos": nn.embed_init(kp, (8192, cfg.d_model), cfg.param_dtype),
+        "encoder": jax.vmap(lambda k: init_enc_layer(k, cfg))(enc_keys),
+        "enc_final_norm": nn.init_layernorm(cfg.d_model, cfg.param_dtype),
+        "decoder": jax.vmap(lambda k: init_dec_layer(k, cfg))(dec_keys),
+        "final_norm": nn.init_layernorm(cfg.d_model, cfg.param_dtype),
+    }
+
+
+def sinusoidal_positions(n: int, d: int) -> jnp.ndarray:
+    pos = jnp.arange(n)[:, None].astype(jnp.float32)
+    dim = jnp.arange(d // 2)[None, :].astype(jnp.float32)
+    angle = pos / jnp.power(10000.0, 2 * dim / d)
+    return jnp.concatenate([jnp.sin(angle), jnp.cos(angle)], axis=-1)
+
+
+def apply_enc_layer(cfg, lp, x):
+    xn = constrain_batch(nn.layer_norm(lp["attn_norm"], x),
+                         seq_parallel=False)
+    h, _ = nn.attention(lp["attn"], xn, cfg,
+                        causal=False, rope=False, impl=cfg.attn_impl)
+    x = x + h
+    xn = constrain_batch(nn.layer_norm(lp["mlp_norm"], x),
+                         seq_parallel=False)
+    return x + nn.gelu_mlp(lp["mlp"], xn)
+
+
+def apply_dec_layer(cfg, lp, x, enc_out, *, window=None):
+    xn = constrain_batch(nn.layer_norm(lp["self_norm"], x),
+                         seq_parallel=False)
+    h, _ = nn.attention(lp["self_attn"], xn, cfg,
+                        causal=True, rope=False, window=window,
+                        impl=cfg.attn_impl)
+    x = x + h
+    xn = constrain_batch(nn.layer_norm(lp["cross_norm"], x),
+                         seq_parallel=False)
+    h, _ = nn.attention(lp["cross_attn"], xn, cfg,
+                        xkv=enc_out, causal=False, rope=False)
+    x = x + h
+    xn = constrain_batch(nn.layer_norm(lp["mlp_norm"], x),
+                         seq_parallel=False)
+    return x + nn.gelu_mlp(lp["mlp"], xn)
+
+
+def encode(cfg, params, frame_embeds):
+    """frame_embeds: (b, encoder_len, d) from the (stubbed) conv frontend."""
+    x = frame_embeds.astype(cfg.dtype)
+    x = x + sinusoidal_positions(x.shape[1], cfg.d_model).astype(cfg.dtype)
+    fn = jax.checkpoint(partial(apply_enc_layer, cfg)) if cfg.remat \
+        else partial(apply_enc_layer, cfg)
+
+    def body(h, lp):
+        return constrain_batch(fn(lp, h)), None
+
+    x, _ = jax.lax.scan(body, constrain_batch(x), params["encoder"])
+    return nn.layer_norm(params["enc_final_norm"], x)
+
+
+def decode_stack(cfg, params, tokens, enc_out, *, window=None, pos_offset=0):
+    b, s = tokens.shape
+    x = nn.embed(params["embed"], tokens, cfg.dtype)
+    # positions beyond the learned table clamp to its last entry
+    idx = jnp.clip(pos_offset + jnp.arange(s), 0,
+                   params["dec_pos"].shape[0] - 1)
+    x = x + params["dec_pos"][idx].astype(cfg.dtype)[None]
+    fn = jax.checkpoint(partial(apply_dec_layer, cfg, window=window)) \
+        if cfg.remat else partial(apply_dec_layer, cfg, window=window)
+
+    def body(h, lp):
+        return constrain_batch(fn(lp, h, enc_out)), None
+
+    x, _ = jax.lax.scan(body, constrain_batch(x), params["decoder"])
+    return nn.layer_norm(params["final_norm"], x)
+
+
+def forward(cfg, params, batch, *, window=None, last_only=False):
+    """batch: {"enc_embeds": (b, F, d), "tokens": (b, s)} -> logits."""
+    enc_out = encode(cfg, params, batch["enc_embeds"])
+    x = decode_stack(cfg, params, batch["tokens"], enc_out, window=window)
+    if last_only:
+        x = x[:, -1:]
+    return nn.unembed(params["embed"], x)
+
+
+# ---------------------------------------------------------------------------
+# decode (serve): cached self-attn KV + precomputed cross-attn KV
+# ---------------------------------------------------------------------------
+
+def init_decode_state(cfg, batch: int, max_seq: int, enc_out=None, params=None):
+    D = cfg.n_layers
+    state = {"kv": nn.init_kv_cache(cfg, batch, max_seq, n_layers=D)}
+    if enc_out is not None:
+        state["cross"] = precompute_cross_kv(cfg, params, enc_out)
+    else:
+        F = cfg.encoder_len
+        shape = (D, batch, F, cfg.n_kv_heads, cfg.head_dim)
+        state["cross"] = {"k": jnp.zeros(shape, jnp.bfloat16),
+                          "v": jnp.zeros(shape, jnp.bfloat16)}
+    return state
+
+
+def precompute_cross_kv(cfg, params, enc_out):
+    def per_layer(lp):
+        _, k, v = nn._project_qkv(lp["cross_attn"], enc_out, enc_out, cfg)
+        return k.astype(jnp.bfloat16), v.astype(jnp.bfloat16)
+
+    k, v = jax.vmap(per_layer)(params["decoder"])
+    return {"k": k, "v": v}
+
+
+def decode_step(cfg, params, state, tokens, *, window=None):
+    """One decoder token. tokens: (b, 1)."""
+    kv = state["kv"]
+    idx = kv["index"]
+    b = tokens.shape[0]
+    x = nn.embed(params["embed"], tokens, cfg.dtype)
+    pos = params["dec_pos"][jnp.clip(idx, 0, params["dec_pos"].shape[0] - 1)]
+    x = x + pos.astype(cfg.dtype)[None, None]
+
+    def body(h, xs):
+        lp, k_l, v_l, ck_l, cv_l = xs
+        cache = {"k": k_l, "v": v_l, "index": idx}
+        positions = jnp.broadcast_to(idx[None, None], (b, 1))
+        a, nc = nn.attention(lp["self_attn"],
+                             nn.layer_norm(lp["self_norm"], h), cfg,
+                             positions=positions, causal=True, rope=False,
+                             window=window, kv_cache=cache)
+        h = h + a
+        a, _ = nn.attention(lp["cross_attn"],
+                            nn.layer_norm(lp["cross_norm"], h), cfg,
+                            xkv=h,  # ignored: cache supplies enc K/V
+                            causal=False, rope=False,
+                            kv_cache={"k": ck_l, "v": cv_l, "index": idx})
+        h = h + a
+        return h + nn.gelu_mlp(lp["mlp"], nn.layer_norm(lp["mlp_norm"], h)), \
+            (nc["k"], nc["v"])
+
+    x, (nk, nv) = jax.lax.scan(
+        body, x, (params["decoder"], kv["k"], kv["v"],
+                  state["cross"]["k"], state["cross"]["v"]))
+    x = nn.layer_norm(params["final_norm"], x)
+    logits = nn.unembed(params["embed"], x)
+    new_state = {"kv": {"k": nk, "v": nv, "index": idx + 1},
+                 "cross": state["cross"]}
+    return logits, new_state

@@ -1,0 +1,168 @@
+"""Zamba2-style hybrid: Mamba2 backbone + one *shared* attention block.
+
+The shared transformer block's parameters are reused at every invocation
+(every ``cfg.attn_every`` Mamba2 layers).  For Hydra this is the one
+structural extension over the paper's queue-of-shards model: shared params
+are pinned resident (they are small relative to the backbone) rather than
+spilled — see DESIGN.md §4.
+
+Scan layout: we scan over the Mamba2 stack with a static per-layer boolean
+``use_attn`` flag; the shared block's params are closed over (not scanned),
+so they appear exactly once in the lowered HLO.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as nn
+from repro.sharding.context import constrain_batch
+from repro.models import ssm
+
+
+def init_shared_attn(key, cfg):
+    k1, k2 = jax.random.split(key)
+    return {
+        "attn_norm": nn.init_rmsnorm(cfg.d_model, cfg.param_dtype),
+        "attn": nn.init_attention(k1, cfg),
+        "mlp_norm": nn.init_rmsnorm(cfg.d_model, cfg.param_dtype),
+        "mlp": nn.init_swiglu(k2, cfg),
+    }
+
+
+def init_layer(key, cfg):
+    return {
+        "norm": nn.init_rmsnorm(cfg.d_model, cfg.param_dtype),
+        "mamba": ssm.init_mamba2(key, cfg),
+    }
+
+
+def init_params(cfg, key):
+    ke, ka, kl = jax.random.split(key, 3)
+    keys = jax.random.split(kl, cfg.n_layers)
+    stacked = jax.vmap(lambda k: init_layer(k, cfg))(keys)
+    return {
+        "embed": nn.init_embedding(ke, cfg.vocab_size, cfg.d_model,
+                                   cfg.param_dtype),
+        "layers": stacked,
+        "shared_attn": init_shared_attn(ka, cfg),
+        "final_norm": nn.init_rmsnorm(cfg.d_model, cfg.param_dtype),
+    }
+
+
+import numpy as np
+
+
+def attn_flags(cfg) -> np.ndarray:
+    """use_attn[i] — apply the shared block after mamba layer i (static)."""
+    idx = np.arange(cfg.n_layers)
+    return (idx % cfg.attn_every) == (cfg.attn_every - 1)
+
+
+def apply_shared_attn(cfg, sp, x, *, window=None, kv_cache=None, positions=None):
+    h, nc = nn.attention(sp["attn"], nn.rms_norm(sp["attn_norm"], x), cfg,
+                         positions=positions, causal=True,
+                         window=window, kv_cache=kv_cache,
+                         impl=cfg.attn_impl)
+    x = x + h
+    x = x + nn.swiglu(sp["mlp"], nn.rms_norm(sp["mlp_norm"], x))
+    return x, nc
+
+
+def apply_layer(cfg, lp, x, shared, use_attn, *, window=None):
+    xn = constrain_batch(nn.rms_norm(lp["norm"], x), seq_parallel=False)
+    x = x + ssm.mamba2_forward(lp["mamba"], xn, cfg)
+    x = jax.lax.cond(
+        use_attn,
+        lambda h: apply_shared_attn(cfg, shared, h, window=window)[0],
+        lambda h: h, x)
+    return x
+
+
+def apply_layer_range(cfg, stacked_slice, x, shared, flags_slice, *,
+                      window=None, remat=None):
+    remat = cfg.remat if remat is None else remat
+    fn = partial(apply_layer, cfg, window=window)
+    if remat:
+        fn = jax.checkpoint(fn, static_argnums=())
+
+    def body(h, xs):
+        lp, flag = xs
+        return constrain_batch(fn(lp, h, shared, flag)), None
+
+    out, _ = jax.lax.scan(body, x, (stacked_slice, flags_slice))
+    return out
+
+
+def forward(cfg, params, batch, *, window=None, last_only=False):
+    x = nn.embed(params["embed"], batch["tokens"], cfg.dtype)
+    x = apply_layer_range(cfg, params["layers"], x, params["shared_attn"],
+                          attn_flags(cfg), window=window)
+    if last_only:
+        x = x[:, -1:]
+    x = nn.rms_norm(params["final_norm"], x)
+    return nn.unembed(params["embed"], x)
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+def n_attn_invocations(cfg) -> int:
+    return int(attn_flags(cfg).sum())
+
+
+def init_decode_state(cfg, batch: int, max_seq: int):
+    A = n_attn_invocations(cfg)
+
+    def per_layer(_):
+        return ssm.init_mamba2_state(cfg, batch)
+
+    return {
+        "mamba": jax.vmap(per_layer)(jnp.arange(cfg.n_layers)),
+        "kv": nn.init_kv_cache(cfg, batch, max_seq, n_layers=A),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def decode_step(cfg, params, state, tokens, *, window=None):
+    """tokens: (b, 1). Shared attn keeps one KV cache per invocation site."""
+    b = tokens.shape[0]
+    x = nn.embed(params["embed"], tokens[:, 0], cfg.dtype)
+    flags = attn_flags(cfg)
+    # map layer index -> kv slot (prefix count of flags)
+    slot_for_layer = jnp.cumsum(flags.astype(jnp.int32)) - 1
+    kv = state["kv"]
+    pos = state["pos"]
+
+    def body(carry, xs):
+        h, ck, cv = carry
+        lp, ms, flag, slot = xs
+        y, new_ms = ssm.mamba2_step(lp["mamba"],
+                                    nn.rms_norm(lp["norm"], h), ms, cfg)
+        h = h + y
+
+        def with_attn(h):
+            cache = {"k": ck[slot], "v": cv[slot], "index": pos}
+            positions = jnp.broadcast_to(pos[None, None], (b, 1))
+            h2, nc = apply_shared_attn(cfg, params["shared_attn"], h[:, None],
+                                       window=window, kv_cache=cache,
+                                       positions=positions)
+            return h2[:, 0], ck.at[slot].set(nc["k"]), cv.at[slot].set(nc["v"])
+
+        h, ck, cv = jax.lax.cond(flag, with_attn,
+                                 lambda h: (h, ck, cv), h)
+        return (h, ck, cv), new_ms
+
+    (x, nk, nv), new_mamba = jax.lax.scan(
+        body, (x, kv["k"], kv["v"]),
+        (params["layers"], state["mamba"], flags, slot_for_layer))
+    x = nn.rms_norm(params["final_norm"], x)
+    logits = nn.unembed(params["embed"], x[:, None, :])
+    new_state = {"mamba": new_mamba,
+                 "kv": {"k": nk, "v": nv, "index": kv["index"] + 1},
+                 "pos": pos + 1}
+    return logits, new_state

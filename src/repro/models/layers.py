@@ -1,0 +1,340 @@
+"""Core neural-net layers shared by every architecture in the zoo.
+
+Pure-functional style: every layer is an ``init_*`` returning a param pytree
+(plain dicts of jnp arrays) plus an ``apply``-style function taking
+``(params, inputs, cfg)``.  No framework (flax/haiku) — keeps the param tree
+transparent for Hydra's shard-granular spilling and for pjit sharding rules.
+
+Conventions
+-----------
+* ``cfg`` is a ``repro.configs.base.ArchConfig``.
+* Stacked-layer params: callers stack per-layer trees along axis 0 and drive
+  them with ``jax.lax.scan`` so the lowered HLO is O(1) in depth.
+* Compute dtype is ``cfg.dtype`` (bf16 on TPU); params kept in
+  ``cfg.param_dtype`` (f32 master copies).
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Params = dict  # nested dict[str, jnp.ndarray]
+
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, shape, in_axis_size=None, dtype=jnp.float32):
+    """Scaled-normal init (truncated-normal-free; fine for repro purposes)."""
+    fan_in = in_axis_size if in_axis_size is not None else shape[0]
+    std = 1.0 / math.sqrt(max(fan_in, 1))
+    return (jax.random.normal(key, shape) * std).astype(dtype)
+
+
+def embed_init(key, shape, dtype=jnp.float32):
+    return (jax.random.normal(key, shape) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+def init_rmsnorm(d: int, dtype=jnp.float32) -> Params:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rms_norm(params: Params, x: jnp.ndarray, eps: float = 1e-6,
+             use_kernel: bool = False) -> jnp.ndarray:
+    if use_kernel:
+        from repro.kernels import ops as kops
+        return kops.rms_norm(x, params["scale"], eps=eps)
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(dtype)
+
+
+def init_layernorm(d: int, dtype=jnp.float32) -> Params:
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layer_norm(params: Params, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)
+            + params["bias"].astype(jnp.float32)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float = 10000.0) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               theta: float = 10000.0) -> jnp.ndarray:
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    head_dim = x.shape[-1]
+    freqs = rope_frequencies(head_dim, theta)                     # (hd/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., seq, hd/2)
+    cos = jnp.cos(angles)[..., :, None, :]                        # (..., seq, 1, hd/2)
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA, optional qkv-bias / qk-norm / sliding window / cross-attn)
+# ---------------------------------------------------------------------------
+
+def init_attention(key, cfg) -> Params:
+    d, nh, nkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p: Params = {
+        "wq": dense_init(ks[0], (d, nh * hd), d, cfg.param_dtype),
+        "wk": dense_init(ks[1], (d, nkv * hd), d, cfg.param_dtype),
+        "wv": dense_init(ks[2], (d, nkv * hd), d, cfg.param_dtype),
+        "wo": dense_init(ks[3], (nh * hd, d), nh * hd, cfg.param_dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((nh * hd,), cfg.param_dtype)
+        p["bk"] = jnp.zeros((nkv * hd,), cfg.param_dtype)
+        p["bv"] = jnp.zeros((nkv * hd,), cfg.param_dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = init_rmsnorm(hd, cfg.param_dtype)
+        p["k_norm"] = init_rmsnorm(hd, cfg.param_dtype)
+    return p
+
+
+def _project_qkv(params: Params, x: jnp.ndarray, xkv: jnp.ndarray, cfg):
+    nh, nkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    dt = x.dtype
+    q = x @ params["wq"].astype(dt)
+    k = xkv @ params["wk"].astype(dt)
+    v = xkv @ params["wv"].astype(dt)
+    if cfg.qkv_bias:
+        q = q + params["bq"].astype(dt)
+        k = k + params["bk"].astype(dt)
+        v = v + params["bv"].astype(dt)
+    q = q.reshape(*x.shape[:-1], nh, hd)
+    k = k.reshape(*xkv.shape[:-1], nkv, hd)
+    v = v.reshape(*xkv.shape[:-1], nkv, hd)
+    if cfg.qk_norm:
+        q = rms_norm(params["q_norm"], q)
+        k = rms_norm(params["k_norm"], k)
+    return q, k, v
+
+
+# q-chunking threshold: above this many score elements per (b·h) row-block,
+# the XLA path scans over query chunks so the (sq, skv) score matrix is never
+# materialized whole (flash-style; the Pallas kernel is the TPU fast path).
+_SDPA_CHUNK_ELEMS = 4096 * 4096
+_SDPA_Q_CHUNK = 1024
+
+
+def _sdpa_dense(q, k, v, scale, qpos, kpos, causal, window):
+    """q: (b, sq, nkv, g, hd) grouped; k/v: (b, skv, nkv, hd)."""
+    logits = jnp.einsum("bqkgh,bskh->bkgqs", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    mask = jnp.ones((qpos.shape[0], kpos.shape[0]), bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window is not None:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    logits = jnp.where(mask[None, None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", probs, v.astype(jnp.float32))
+    return out
+
+
+def sdpa(q, k, v, *, causal: bool, window: Optional[int] = None,
+         q_positions: Optional[jnp.ndarray] = None,
+         kv_positions: Optional[jnp.ndarray] = None,
+         impl: str = "xla") -> jnp.ndarray:
+    """Scaled dot-product attention with GQA broadcast.
+
+    q: (b, sq, nh, hd); k/v: (b, skv, nkv, hd).  nh % nkv == 0.
+    ``window``: sliding-window size (None = full).  Positions default to
+    arange; decode passes explicit positions.
+    """
+    if impl in ("pallas", "pallas_interpret") and causal and q.shape[1] > 1:
+        from repro.kernels import ops as kops
+        return kops.flash_attention(
+            q, k, v, causal=True, window=window,
+            interpret=(impl == "pallas_interpret"))
+    b, sq, nh, hd = q.shape
+    skv, nkv = k.shape[1], k.shape[2]
+    groups = nh // nkv
+    qg = q.reshape(b, sq, nkv, groups, hd)
+    scale = 1.0 / math.sqrt(hd)
+    qpos = (q_positions if q_positions is not None
+            else jnp.arange(sq))
+    kpos = (kv_positions if kv_positions is not None
+            else jnp.arange(skv))
+
+    from repro.sharding.context import constrain_q_seq
+    qg = constrain_q_seq(qg.reshape(b, sq, nh, hd)).reshape(
+        b, sq, nkv, groups, hd)
+
+    if sq * skv <= _SDPA_CHUNK_ELEMS or sq % _SDPA_Q_CHUNK != 0:
+        out = _sdpa_dense(qg, k, v, scale, qpos, kpos, causal, window)
+        return out.reshape(b, sq, nh, hd).astype(q.dtype)
+
+    # chunked path: scan over query blocks; score rows live one block at a
+    # time (the XLA analogue of the Pallas flash kernel, fully differentiable)
+    nq = sq // _SDPA_Q_CHUNK
+    qc = qg.reshape(b, nq, _SDPA_Q_CHUNK, nkv, groups, hd).transpose(
+        1, 0, 2, 3, 4, 5)
+    qpc = qpos.reshape(nq, _SDPA_Q_CHUNK)
+
+    def body(_, inp):
+        qb, qp = inp
+        ob = _sdpa_dense(qb, k, v, scale, qp, kpos, causal, window)
+        return None, ob
+
+    _, out = jax.lax.scan(body, None, (qc, qpc))
+    out = out.transpose(1, 0, 2, 3, 4, 5).reshape(b, sq, nkv, groups, hd)
+    return out.reshape(b, sq, nh, hd).astype(q.dtype)
+
+
+def attention(params: Params, x: jnp.ndarray, cfg, *,
+              positions: Optional[jnp.ndarray] = None,
+              causal: bool = True,
+              window: Optional[int] = None,
+              xkv: Optional[jnp.ndarray] = None,
+              rope: bool = True,
+              kv_cache: Optional[dict] = None,
+              impl: str = "xla"):
+    """Full attention layer.  Returns (out, new_kv_cache).
+
+    kv_cache: {"k": (b, max_s, nkv, hd), "v": ..., "index": scalar} — decode
+    appends at ``index`` and attends to the filled prefix.
+    """
+    b, sq, _ = x.shape
+    cross = xkv is not None
+    src = xkv if cross else x
+    q, k, v = _project_qkv(params, x, src, cfg)
+    if positions is None:
+        positions = jnp.arange(sq)[None, :].astype(jnp.int32)
+        positions = jnp.broadcast_to(positions, (b, sq))
+    if rope and not cross:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    elif rope and cross:
+        q = apply_rope(q, positions, cfg.rope_theta)
+
+    new_cache = None
+    if kv_cache is not None and not cross:
+        idx = kv_cache["index"]
+        ck = jax.lax.dynamic_update_slice_in_dim(
+            kv_cache["k"], k.astype(kv_cache["k"].dtype), idx, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(
+            kv_cache["v"], v.astype(kv_cache["v"].dtype), idx, axis=1)
+        new_cache = {"k": ck, "v": cv, "index": idx + sq}
+        skv = ck.shape[1]
+        kvpos = jnp.arange(skv)
+        qpos = idx + jnp.arange(sq)
+        # mask out unwritten slots via the causal predicate (kvpos <= qpos)
+        out = sdpa(q, ck, cv, causal=True, window=window,
+                   q_positions=qpos, kv_positions=kvpos, impl="xla")
+    elif kv_cache is not None and cross:
+        # cross-attn cache holds precomputed encoder k/v
+        out = sdpa(q, kv_cache["k"], kv_cache["v"], causal=False, impl="xla")
+        new_cache = kv_cache
+    else:
+        out = sdpa(q, k, v, causal=causal, window=window, impl=impl)
+
+    dt = x.dtype
+    out = out.reshape(b, sq, cfg.n_heads * cfg.head_dim)
+    return out @ params["wo"].astype(dt), new_cache
+
+
+def init_kv_cache(cfg, batch: int, max_seq: int, n_layers: Optional[int] = None,
+                  dtype=None) -> dict:
+    """Stacked (layers-first) KV cache for decode.
+
+    ``cfg.kv_cache_dtype='float8_e4m3fn'`` halves cache residency (the
+    dominant HBM term for decode_32k on the 30B+ models) at serving-standard
+    precision cost; values are cast on write and upcast on read."""
+    L = n_layers if n_layers is not None else cfg.n_layers
+    dtype = dtype if dtype is not None else jnp.dtype(cfg.kv_cache_dtype)
+    shape = (L, batch, max_seq, cfg.n_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype),
+            "index": jnp.zeros((), jnp.int32)}
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def init_swiglu(key, cfg, d_ff: Optional[int] = None) -> Params:
+    d = cfg.d_model
+    f = d_ff if d_ff is not None else cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(ks[0], (d, f), d, cfg.param_dtype),
+        "w_up": dense_init(ks[1], (d, f), d, cfg.param_dtype),
+        "w_down": dense_init(ks[2], (f, d), f, cfg.param_dtype),
+    }
+
+
+def swiglu(params: Params, x: jnp.ndarray, use_kernel: bool = False) -> jnp.ndarray:
+    dt = x.dtype
+    if use_kernel:
+        from repro.kernels import ops as kops
+        return kops.swiglu(x, params["w_gate"].astype(dt),
+                           params["w_up"].astype(dt),
+                           params["w_down"].astype(dt))
+    g = x @ params["w_gate"].astype(dt)
+    u = x @ params["w_up"].astype(dt)
+    return (jax.nn.silu(g) * u) @ params["w_down"].astype(dt)
+
+
+def init_gelu_mlp(key, cfg, d_ff: Optional[int] = None) -> Params:
+    d = cfg.d_model
+    f = d_ff if d_ff is not None else cfg.d_ff
+    ks = jax.random.split(key, 2)
+    return {
+        "w_in": dense_init(ks[0], (d, f), d, cfg.param_dtype),
+        "b_in": jnp.zeros((f,), cfg.param_dtype),
+        "w_out": dense_init(ks[1], (f, d), f, cfg.param_dtype),
+        "b_out": jnp.zeros((d,), cfg.param_dtype),
+    }
+
+
+def gelu_mlp(params: Params, x: jnp.ndarray) -> jnp.ndarray:
+    dt = x.dtype
+    h = jax.nn.gelu(x @ params["w_in"].astype(dt) + params["b_in"].astype(dt))
+    return h @ params["w_out"].astype(dt) + params["b_out"].astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / LM head
+# ---------------------------------------------------------------------------
+
+def init_embedding(key, vocab: int, d: int, dtype=jnp.float32) -> Params:
+    return {"table": embed_init(key, (vocab, d), dtype)}
+
+
+def embed(params: Params, tokens: jnp.ndarray, dtype) -> jnp.ndarray:
+    return params["table"].astype(dtype)[tokens]
+
+
+def unembed(params: Params, x: jnp.ndarray) -> jnp.ndarray:
+    """Tied LM head: logits in f32 for a stable softmax-xent."""
+    return jnp.einsum("bsd,vd->bsv", x.astype(jnp.float32),
+                      params["table"].astype(jnp.float32))

@@ -1,0 +1,493 @@
+"""State-space / recurrent families: Mamba2 (SSD) and xLSTM (mLSTM + sLSTM).
+
+The workhorse is ``ssd_chunked`` — the Mamba2 "state-space duality" chunked
+algorithm: quadratic attention *within* a chunk, linear recurrence *across*
+chunks.  mLSTM is expressed through the same primitive (its matrix memory
+S_t = f_t·S + i_t·k v^T is an SSD recurrence with per-head scalar decay),
+so one well-tested kernel serves both families.  ``repro.kernels.ssd_scan``
+provides the Pallas TPU kernel for the intra-chunk part; this file is also
+its ``ref`` oracle.
+
+Decode: both families carry O(1) state per layer (Mamba2: (h, p, N) matrix +
+conv tail; mLSTM: (h, p, N) matrix + normalizer; sLSTM: (h, p) vectors), which
+is what makes the ``long_500k`` shape natively tractable.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as nn
+from repro.sharding.context import constrain_batch
+
+SSM_HEAD_DIM = 64  # Mamba2 P (head dim)
+
+
+# ---------------------------------------------------------------------------
+# SSD: chunked selective-state-space computation
+# ---------------------------------------------------------------------------
+
+def ssd_chunked(x, log_a, b_coef, c_coef, chunk: int,
+                initial_state: Optional[jnp.ndarray] = None,
+                use_kernel: bool = False):
+    """Chunked SSD scan.
+
+    x:      (b, s, h, p)   inputs (already scaled by dt where applicable)
+    log_a:  (b, s, h)      per-step log decay (<= 0)
+    b_coef: (b, s, h, n)   input->state coefficients  ("B" / keys)
+    c_coef: (b, s, h, n)   state->output coefficients ("C" / queries)
+    Returns (y, final_state) with y: (b, s, h, p), state: (b, h, p, n).
+    """
+    if use_kernel:
+        from repro.kernels import ops as kops
+        return kops.ssd_scan(x, log_a, b_coef, c_coef, chunk=chunk,
+                             initial_state=initial_state)
+    bsz, s, h, p = x.shape
+    n = b_coef.shape[-1]
+    if s % chunk != 0:
+        # pad to a chunk multiple: zero x/B/C and zero log-decay leave the
+        # recurrent state untouched; padded outputs are sliced away
+        pad = chunk - s % chunk
+        y, st = ssd_chunked(
+            jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0))),
+            jnp.pad(log_a, ((0, 0), (0, pad), (0, 0))),
+            jnp.pad(b_coef, ((0, 0), (0, pad), (0, 0), (0, 0))),
+            jnp.pad(c_coef, ((0, 0), (0, pad), (0, 0), (0, 0))),
+            chunk, initial_state=initial_state, use_kernel=use_kernel)
+        return y[:, :s], st
+    nc = s // chunk
+
+    f32 = jnp.float32
+    xc = x.reshape(bsz, nc, chunk, h, p).astype(f32)
+    ac = log_a.reshape(bsz, nc, chunk, h).astype(f32)
+    bc = b_coef.reshape(bsz, nc, chunk, h, n).astype(f32)
+    cc = c_coef.reshape(bsz, nc, chunk, h, n).astype(f32)
+
+    a_cum = jnp.cumsum(ac, axis=2)                       # (b,nc,Q,h)
+    a_tot = a_cum[:, :, -1]                              # (b,nc,h)
+
+    # --- intra-chunk (quadratic in Q) -----------------------------------
+    # L[i,j] = exp(a_cum[i] - a_cum[j]) for i >= j else 0
+    li = a_cum[:, :, :, None, :] - a_cum[:, :, None, :, :]   # (b,nc,Q,Q,h)
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+    # mask BEFORE exp: the i<j region has li > 0 and exp overflows -> the VJP
+    # of where(mask, exp(li), 0) yields inf*0 = NaN.
+    li = jnp.where(mask[None, None, :, :, None], li, -1e30)
+    decay = jnp.exp(li)
+    scores = jnp.einsum("bcqhn,bckhn->bcqkh", cc, bc) * decay
+    y_diag = jnp.einsum("bcqkh,bckhp->bcqhp", scores, xc)
+
+    # --- chunk-boundary states ------------------------------------------
+    # state contribution of chunk c: sum_j exp(a_tot - a_cum[j]) B_j x_j^T
+    w = jnp.exp(a_tot[:, :, None, :] - a_cum)            # (b,nc,Q,h)
+    chunk_states = jnp.einsum("bcqh,bcqhn,bcqhp->bchpn", w, bc, xc)
+
+    # --- inter-chunk linear recurrence (scan over chunks) ----------------
+    if initial_state is None:
+        initial_state = jnp.zeros((bsz, h, p, n), f32)
+    else:
+        initial_state = initial_state.astype(f32)
+
+    decay_chunk = jnp.exp(a_tot)                          # (b,nc,h)
+
+    def body(prev, inputs):
+        s_c, d_c = inputs                                 # (b,h,p,n), (b,h)
+        new = prev * d_c[:, :, None, None] + s_c
+        return new, prev                                  # emit state *before* chunk
+
+    final_state, prev_states = jax.lax.scan(
+        body, initial_state,
+        (chunk_states.transpose(1, 0, 2, 3, 4), decay_chunk.transpose(1, 0, 2)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)    # (b,nc,h,p,n)
+
+    # --- inter-chunk output contribution ---------------------------------
+    y_off = jnp.einsum("bcqh,bcqhn,bchpn->bcqhp",
+                       jnp.exp(a_cum), cc, prev_states)
+
+    y = (y_diag + y_off).reshape(bsz, s, h, p).astype(x.dtype)
+    return y, final_state.astype(jnp.float32)
+
+
+def ssd_step(state, x_t, log_a_t, b_t, c_t):
+    """Single-token SSD recurrence (decode).
+
+    state: (b,h,p,n); x_t: (b,h,p); log_a_t: (b,h); b_t/c_t: (b,h,n).
+    """
+    f32 = jnp.float32
+    decay = jnp.exp(log_a_t.astype(f32))[:, :, None, None]
+    upd = x_t.astype(f32)[..., None] * b_t.astype(f32)[:, :, None, :]
+    new_state = state.astype(f32) * decay + upd
+    y = jnp.einsum("bhpn,bhn->bhp", new_state, c_t.astype(f32))
+    return y.astype(x_t.dtype), new_state
+
+
+# ---------------------------------------------------------------------------
+# causal depthwise conv (Mamba front conv)
+# ---------------------------------------------------------------------------
+
+def causal_conv1d(x, w, b):
+    """x: (b, s, c); w: (k, c); b: (c,). Depthwise causal conv."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jax.lax.conv_general_dilated(
+        xp.astype(jnp.float32), w[:, None, :].astype(jnp.float32),
+        window_strides=(1,), padding="VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=x.shape[-1])
+    return (out + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def causal_conv1d_step(conv_state, x_t, w, b):
+    """conv_state: (b, k-1, c); x_t: (b, c). Returns (y_t, new_state)."""
+    window = jnp.concatenate([conv_state, x_t[:, None]], axis=1)   # (b,k,c)
+    y = jnp.einsum("bkc,kc->bc", window.astype(jnp.float32),
+                   w.astype(jnp.float32)) + b.astype(jnp.float32)
+    return y.astype(x_t.dtype), window[:, 1:]
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 block
+# ---------------------------------------------------------------------------
+
+def mamba2_dims(cfg):
+    d_in = cfg.ssm_expand * cfg.d_model
+    h = d_in // SSM_HEAD_DIM
+    return d_in, h, SSM_HEAD_DIM, cfg.ssm_state
+
+
+def init_mamba2(key, cfg):
+    d = cfg.d_model
+    d_in, h, p, n = mamba2_dims(cfg)
+    ks = jax.random.split(key, 4)
+    proj_out = 2 * d_in + 2 * n + h      # z, x, B, C, dt
+    dt_bias = jnp.log(jnp.expm1(
+        jnp.exp(jax.random.uniform(ks[2], (h,), minval=math.log(1e-3),
+                                   maxval=math.log(1e-1)))))
+    return {
+        "in_proj": nn.dense_init(ks[0], (d, proj_out), d, cfg.param_dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.conv_kernel, d_in + 2 * n))
+                   * 0.1).astype(cfg.param_dtype),
+        "conv_b": jnp.zeros((d_in + 2 * n,), cfg.param_dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(cfg.param_dtype),
+        "d_skip": jnp.ones((h,), cfg.param_dtype),
+        "dt_bias": dt_bias.astype(cfg.param_dtype),
+        "out_norm": nn.init_rmsnorm(d_in, cfg.param_dtype),
+        "out_proj": nn.dense_init(ks[3], (d_in, d), d_in, cfg.param_dtype),
+    }
+
+
+def _mamba2_split(params, x, cfg):
+    d_in, h, p, n = mamba2_dims(cfg)
+    dt_proj = x @ params["in_proj"].astype(x.dtype)
+    z, xbc, dt = jnp.split(dt_proj, [d_in, 2 * d_in + 2 * n], axis=-1)
+    return z, xbc, dt, (d_in, h, p, n)
+
+
+def mamba2_forward(params, x, cfg, *, use_kernel: bool = False):
+    """x: (b, s, d) -> (b, s, d). Training/prefill path (chunked scan)."""
+    b, s, d = x.shape
+    z, xbc, dt, (d_in, h, p, n) = _mamba2_split(params, x, cfg)
+    xbc = jax.nn.silu(causal_conv1d(xbc, params["conv_w"], params["conv_b"]))
+    xi, bc, cc = jnp.split(xbc, [d_in, d_in + n], axis=-1)
+    xi = xi.reshape(b, s, h, p)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))  # (b,s,h)
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))              # (h,)
+    log_a = dt * a                                                  # (b,s,h)
+    bch = jnp.broadcast_to(bc[:, :, None, :], (b, s, h, n))
+    cch = jnp.broadcast_to(cc[:, :, None, :], (b, s, h, n))
+    xdt = xi * dt[..., None].astype(xi.dtype)
+    y, _ = ssd_chunked(xdt, log_a, bch, cch, cfg.ssm_chunk,
+                       use_kernel=use_kernel)
+    y = y + xi * params["d_skip"].astype(xi.dtype)[None, None, :, None]
+    y = y.reshape(b, s, d_in)
+    y = nn.rms_norm(params["out_norm"], y) * jax.nn.silu(z)
+    return y @ params["out_proj"].astype(x.dtype)
+
+
+def init_mamba2_state(cfg, batch: int):
+    d_in, h, p, n = mamba2_dims(cfg)
+    return {
+        "ssm": jnp.zeros((batch, h, p, n), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_kernel - 1, d_in + 2 * n),
+                          jnp.float32),
+    }
+
+
+def mamba2_step(params, x_t, state, cfg):
+    """x_t: (b, d) one token. Returns (y_t, new_state)."""
+    b, d = x_t.shape
+    z, xbc, dt, (d_in, h, p, n) = _mamba2_split(params, x_t, cfg)
+    xbc, conv_state = causal_conv1d_step(
+        state["conv"].astype(x_t.dtype), xbc,
+        params["conv_w"], params["conv_b"])
+    xbc = jax.nn.silu(xbc)
+    xi, bc, cc = jnp.split(xbc, [d_in, d_in + n], axis=-1)
+    xi = xi.reshape(b, h, p)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))  # (b,h)
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))
+    log_a = dt * a
+    bch = jnp.broadcast_to(bc[:, None, :], (b, h, n))
+    cch = jnp.broadcast_to(cc[:, None, :], (b, h, n))
+    y, new_ssm = ssd_step(state["ssm"], xi * dt[..., None].astype(xi.dtype),
+                          log_a, bch, cch)
+    y = y + xi * params["d_skip"].astype(xi.dtype)[None, :, None]
+    y = y.reshape(b, d_in)
+    y = nn.rms_norm(params["out_norm"], y) * jax.nn.silu(z)
+    y = y @ params["out_proj"].astype(x_t.dtype)
+    return y, {"ssm": new_ssm, "conv": conv_state.astype(jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# xLSTM: mLSTM block (matrix memory — expressed through SSD)
+# ---------------------------------------------------------------------------
+
+def mlstm_dims(cfg):
+    d_in = cfg.ssm_expand * cfg.d_model
+    h = cfg.n_heads
+    p = d_in // h
+    return d_in, h, p
+
+
+def init_mlstm(key, cfg):
+    d = cfg.d_model
+    d_in, h, p = mlstm_dims(cfg)
+    ks = jax.random.split(key, 6)
+    return {
+        "up_proj": nn.dense_init(ks[0], (d, 2 * d_in), d, cfg.param_dtype),
+        "wq": nn.dense_init(ks[1], (d_in, d_in), d_in, cfg.param_dtype),
+        "wk": nn.dense_init(ks[2], (d_in, d_in), d_in, cfg.param_dtype),
+        "wv": nn.dense_init(ks[3], (d_in, d_in), d_in, cfg.param_dtype),
+        "w_gates": nn.dense_init(ks[4], (d_in, 2 * h), d_in, cfg.param_dtype),
+        "out_norm": nn.init_rmsnorm(d_in, cfg.param_dtype),
+        "down_proj": nn.dense_init(ks[5], (d_in, d), d_in, cfg.param_dtype),
+    }
+
+
+def _mlstm_qkv_gates(params, xi, h, p):
+    shp = xi.shape[:-1]
+    dt = xi.dtype
+    q = (xi @ params["wq"].astype(dt)).reshape(*shp, h, p)
+    k = (xi @ params["wk"].astype(dt)).reshape(*shp, h, p) / math.sqrt(p)
+    v = (xi @ params["wv"].astype(dt)).reshape(*shp, h, p)
+    gates = (xi @ params["w_gates"].astype(dt)).astype(jnp.float32)
+    logf, logi_raw = jnp.split(gates, 2, axis=-1)
+    log_f = jax.nn.log_sigmoid(logf)          # (..., h) decay in (0,1)
+    i_gate = jnp.exp(jax.nn.log_sigmoid(logi_raw))
+    return q, k, v, log_f, i_gate
+
+
+def mlstm_forward(params, x, cfg, *, use_kernel: bool = False):
+    """mLSTM block: (b, s, d) -> (b, s, d)."""
+    b, s, d = x.shape
+    d_in, h, p = mlstm_dims(cfg)
+    up = x @ params["up_proj"].astype(x.dtype)
+    xi, z = jnp.split(up, 2, axis=-1)
+    q, k, v, log_f, i_gate = _mlstm_qkv_gates(params, xi, h, p)
+    # matrix memory: S_t = f_t S + i_t k v^T  ==  SSD(x=v*i, a=log f, B=k, C=q)
+    y, _ = ssd_chunked(v * i_gate[..., None].astype(v.dtype), log_f, k, q,
+                       cfg.ssm_chunk, use_kernel=use_kernel)
+    # normalizer: n_t = f n + i k ; divide by max(|n·q|, 1)
+    ones = jnp.ones((b, s, h, 1), v.dtype)
+    nsum, _ = ssd_chunked(ones * i_gate[..., None].astype(v.dtype), log_f,
+                          k, q, cfg.ssm_chunk)
+    denom = jnp.maximum(jnp.abs(nsum[..., 0]), 1.0)[..., None]
+    y = (y / denom).reshape(b, s, d_in)
+    y = nn.rms_norm(params["out_norm"], y) * jax.nn.silu(z)
+    return y @ params["down_proj"].astype(x.dtype)
+
+
+def init_mlstm_state(cfg, batch: int):
+    d_in, h, p = mlstm_dims(cfg)
+    return {"s": jnp.zeros((batch, h, p, p), jnp.float32),
+            "n": jnp.zeros((batch, h, 1, p), jnp.float32)}
+
+
+def mlstm_step(params, x_t, state, cfg):
+    b, d = x_t.shape
+    d_in, h, p = mlstm_dims(cfg)
+    up = x_t @ params["up_proj"].astype(x_t.dtype)
+    xi, z = jnp.split(up, 2, axis=-1)
+    q, k, v, log_f, i_gate = _mlstm_qkv_gates(params, xi, h, p)
+    y, new_s = ssd_step(state["s"], v * i_gate[..., None].astype(v.dtype),
+                        log_f, k, q)
+    nsum, new_n = ssd_step(state["n"],
+                           jnp.ones((b, h, 1), v.dtype)
+                           * i_gate[..., None].astype(v.dtype),
+                           log_f, k, q)
+    denom = jnp.maximum(jnp.abs(nsum[..., 0]), 1.0)[..., None]
+    y = (y / denom).reshape(b, d_in)
+    y = nn.rms_norm(params["out_norm"], y) * jax.nn.silu(z)
+    return y @ params["down_proj"].astype(x_t.dtype), {"s": new_s, "n": new_n}
+
+
+# ---------------------------------------------------------------------------
+# xLSTM: sLSTM block (true recurrence — lax.scan over time)
+# ---------------------------------------------------------------------------
+
+def slstm_dims(cfg):
+    h = cfg.n_heads
+    p = cfg.d_model // h
+    return h, p
+
+
+def init_slstm(key, cfg):
+    d = cfg.d_model
+    h, p = slstm_dims(cfg)
+    ks = jax.random.split(key, 4)
+    return {
+        "w_in": nn.dense_init(ks[0], (d, 4 * d), d, cfg.param_dtype),
+        "r": nn.dense_init(ks[1], (h, p, 4 * p), p, cfg.param_dtype),
+        "b": jnp.zeros((4 * d,), cfg.param_dtype),
+        "out_norm": nn.init_rmsnorm(d, cfg.param_dtype),
+        "out_proj": nn.dense_init(ks[2], (d, d), d, cfg.param_dtype),
+        "ffn": nn.init_swiglu(ks[3], cfg, d_ff=2 * d),
+    }
+
+
+def _slstm_cell(params, x_t, carry, cfg):
+    """x_t: (b, d); carry: dict of (b, h, p)."""
+    h, p = slstm_dims(cfg)
+    b = x_t.shape[0]
+    f32 = jnp.float32
+    pre = (x_t @ params["w_in"].astype(x_t.dtype)).astype(f32)
+    pre = pre + params["b"].astype(f32)
+    rec = jnp.einsum("bhp,hpq->bhq", carry["h"],
+                     params["r"].astype(f32)).reshape(b, 4 * h * p)
+    pre = (pre.reshape(b, 4, h, p)
+           + rec.reshape(b, h, 4, p).transpose(0, 2, 1, 3))
+    ig, fg, zg, og = pre[:, 0], pre[:, 1], pre[:, 2], pre[:, 3]
+    i_t = jnp.exp(jax.nn.log_sigmoid(ig))
+    f_t = jax.nn.sigmoid(fg)
+    z_t = jnp.tanh(zg)
+    o_t = jax.nn.sigmoid(og)
+    c_t = f_t * carry["c"] + i_t * z_t
+    n_t = f_t * carry["n"] + i_t
+    h_t = o_t * c_t / jnp.maximum(n_t, 1.0)
+    return {"c": c_t, "n": n_t, "h": h_t}
+
+
+def init_slstm_state(cfg, batch: int):
+    h, p = slstm_dims(cfg)
+    zero = jnp.zeros((batch, h, p), jnp.float32)
+    return {"c": zero, "n": zero, "h": zero}
+
+
+def slstm_forward(params, x, cfg):
+    """sLSTM block: (b, s, d) -> (b, s, d) via scan over time."""
+    b, s, d = x.shape
+    h, p = slstm_dims(cfg)
+    carry0 = init_slstm_state(cfg, b)
+
+    def body(carry, x_t):
+        new = _slstm_cell(params, x_t, carry, cfg)
+        return new, new["h"]
+
+    _, hs = jax.lax.scan(body, carry0, x.transpose(1, 0, 2))
+    y = hs.transpose(1, 0, 2, 3).reshape(b, s, d).astype(x.dtype)
+    y = nn.rms_norm(params["out_norm"], y)
+    y = y @ params["out_proj"].astype(x.dtype)
+    return y + nn.swiglu(params["ffn"], y)
+
+
+def slstm_step(params, x_t, carry, cfg):
+    new = _slstm_cell(params, x_t, carry, cfg)
+    y = new["h"].reshape(x_t.shape[0], -1).astype(x_t.dtype)
+    y = nn.rms_norm(params["out_norm"], y)
+    y = y @ params["out_proj"].astype(x_t.dtype)
+    return y + nn.swiglu(params["ffn"], y), new
+
+
+# ---------------------------------------------------------------------------
+# xLSTM model (alternating mLSTM / sLSTM pattern groups)
+# ---------------------------------------------------------------------------
+
+def n_groups(cfg) -> int:
+    assert cfg.slstm_ratio == 2, "xLSTM pattern implemented as [mLSTM, sLSTM]"
+    assert cfg.n_layers % 2 == 0
+    return cfg.n_layers // 2
+
+
+def init_group(key, cfg):
+    k1, k2 = jax.random.split(key)
+    return {
+        "m_norm": nn.init_rmsnorm(cfg.d_model, cfg.param_dtype),
+        "mlstm": init_mlstm(k1, cfg),
+        "s_norm": nn.init_rmsnorm(cfg.d_model, cfg.param_dtype),
+        "slstm": init_slstm(k2, cfg),
+    }
+
+
+def init_params(cfg, key):
+    ke, kl = jax.random.split(key)
+    keys = jax.random.split(kl, n_groups(cfg))
+    stacked = jax.vmap(lambda k: init_group(k, cfg))(keys)
+    return {
+        "embed": nn.init_embedding(ke, cfg.vocab_size, cfg.d_model,
+                                   cfg.param_dtype),
+        "layers": stacked,
+        "final_norm": nn.init_rmsnorm(cfg.d_model, cfg.param_dtype),
+    }
+
+
+def apply_layer(cfg, gp, x, **_):
+    x = x + mlstm_forward(gp["mlstm"], nn.rms_norm(gp["m_norm"], x), cfg)
+    x = x + slstm_forward(gp["slstm"], nn.rms_norm(gp["s_norm"], x), cfg)
+    return x
+
+
+def apply_layer_range(cfg, stacked_slice, x, *, remat=None, **_):
+    remat = cfg.remat if remat is None else remat
+    fn = partial(apply_layer, cfg)
+    if remat:
+        fn = jax.checkpoint(fn)
+
+    def body(h, gp):
+        return constrain_batch(fn(gp, h)), None
+
+    out, _ = jax.lax.scan(body, x, stacked_slice)
+    return out
+
+
+def forward(cfg, params, batch, *, last_only=False, **_):
+    x = nn.embed(params["embed"], batch["tokens"], cfg.dtype)
+    x = apply_layer_range(cfg, params["layers"], x)
+    if last_only:
+        x = x[:, -1:]
+    x = nn.rms_norm(params["final_norm"], x)
+    return nn.unembed(params["embed"], x)
+
+
+def init_decode_state(cfg, batch: int, max_seq: int):
+    G = n_groups(cfg)
+
+    def per_group(_):
+        return {"mlstm": init_mlstm_state(cfg, batch),
+                "slstm": init_slstm_state(cfg, batch)}
+
+    return {"groups": jax.vmap(per_group)(jnp.arange(G)), "pos": jnp.zeros((), jnp.int32)}
+
+
+def decode_step(cfg, params, state, tokens, **_):
+    """tokens: (b, 1)."""
+    x = nn.embed(params["embed"], tokens[:, 0], cfg.dtype)
+
+    def body(h, xs):
+        gp, gs = xs
+        y, ms = mlstm_step(gp["mlstm"],
+                           nn.rms_norm(gp["m_norm"], h), gs["mlstm"], cfg)
+        h = h + y
+        y, ss = slstm_step(gp["slstm"],
+                           nn.rms_norm(gp["s_norm"], h), gs["slstm"], cfg)
+        return h + y, {"mlstm": ms, "slstm": ss}
+
+    x, new_groups = jax.lax.scan(body, x, (params["layers"], state["groups"]))
+    x = nn.rms_norm(params["final_norm"], x)
+    logits = nn.unembed(params["embed"], x[:, None, :])
+    return logits, {"groups": new_groups, "pos": state["pos"] + 1}

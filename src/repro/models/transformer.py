@@ -1,0 +1,146 @@
+"""Dense decoder-only transformer (llama/qwen/yi/command-r class) and its
+VLM/encoder variants (LLaVA backbone, BERT*/ViT* from the paper's workloads).
+
+Param tree layout (Hydra shards over the leading ``layers`` axis):
+
+    {"embed": {...}, "layers": stacked-per-layer tree, "final_norm": {...}}
+
+``forward`` drives the stacked layers with ``jax.lax.scan`` so the lowered
+HLO is O(1) in depth; ``apply_layer_range`` applies a contiguous slice of
+layers — this is the primitive Hydra's shard units execute.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as nn
+from repro.sharding.context import constrain_batch
+
+
+def init_layer(key, cfg):
+    k1, k2 = jax.random.split(key)
+    norm_init = nn.init_rmsnorm if cfg.norm == "rms" else nn.init_layernorm
+    mlp_init = nn.init_swiglu if cfg.mlp == "swiglu" else nn.init_gelu_mlp
+    return {
+        "attn_norm": norm_init(cfg.d_model, cfg.param_dtype),
+        "attn": nn.init_attention(k1, cfg),
+        "mlp_norm": norm_init(cfg.d_model, cfg.param_dtype),
+        "mlp": mlp_init(k2, cfg),
+    }
+
+
+def init_params(cfg, key):
+    ke, kl = jax.random.split(key)
+    layer_keys = jax.random.split(kl, cfg.n_layers)
+    stacked = jax.vmap(lambda k: init_layer(k, cfg))(layer_keys)
+    norm_init = nn.init_rmsnorm if cfg.norm == "rms" else nn.init_layernorm
+    return {
+        "embed": nn.init_embedding(ke, cfg.vocab_size, cfg.d_model,
+                                   cfg.param_dtype),
+        "layers": stacked,
+        "final_norm": norm_init(cfg.d_model, cfg.param_dtype),
+    }
+
+
+def _norm(cfg, p, x):
+    return nn.rms_norm(p, x) if cfg.norm == "rms" else nn.layer_norm(p, x)
+
+
+def apply_layer(cfg, lp, x, *, window: Optional[int] = None,
+                positions=None, impl: Optional[str] = None):
+    """One pre-norm transformer block. x: (b, s, d)."""
+    impl = impl or cfg.attn_impl
+    # Megatron-style sequence parallelism: the residual stream between
+    # layers is seq-sharded over 'model'; norms run on it directly, and the
+    # normed input is re-gathered (seq replicated) so tensor parallelism
+    # owns the model axis inside attention/MLP.
+    xn = constrain_batch(_norm(cfg, lp["attn_norm"], x), seq_parallel=False)
+    h, _ = nn.attention(lp["attn"], xn, cfg,
+                        positions=positions, causal=cfg.causal,
+                        window=window if window is not None else cfg.window,
+                        impl=impl)
+    x = x + h
+    hn = constrain_batch(_norm(cfg, lp["mlp_norm"], x), seq_parallel=False)
+    h = (nn.swiglu(lp["mlp"], hn) if cfg.mlp == "swiglu"
+         else nn.gelu_mlp(lp["mlp"], hn))
+    return x + h
+
+
+def apply_layer_decode(cfg, lp, x, cache, *, window=None):
+    """One block in decode mode. cache: per-layer {"k","v","index"}."""
+    positions = cache["index"] + jnp.arange(x.shape[1])[None, :]
+    positions = jnp.broadcast_to(positions, (x.shape[0], x.shape[1]))
+    h, new_cache = nn.attention(
+        lp["attn"], _norm(cfg, lp["attn_norm"], x), cfg,
+        positions=positions, causal=True,
+        window=window if window is not None else cfg.window,
+        kv_cache=cache)
+    x = x + h
+    hn = _norm(cfg, lp["mlp_norm"], x)
+    h = (nn.swiglu(lp["mlp"], hn) if cfg.mlp == "swiglu"
+         else nn.gelu_mlp(lp["mlp"], hn))
+    return x + h, new_cache
+
+
+def embed_inputs(cfg, params, batch):
+    if cfg.takes_embeddings and "embeds" in batch:
+        return batch["embeds"].astype(cfg.dtype)
+    return nn.embed(params["embed"], batch["tokens"], cfg.dtype)
+
+
+def apply_layer_range(cfg, stacked_slice, x, *, window=None, remat=None):
+    """Apply a contiguous slice of stacked layer params (Hydra shard unit)."""
+    remat = cfg.remat if remat is None else remat
+    fn = partial(apply_layer, cfg, window=window)
+    if remat:
+        fn = jax.checkpoint(fn)
+
+    def body(h, lp):
+        return constrain_batch(fn(lp, h)), None
+
+    out, _ = jax.lax.scan(body, constrain_batch(x), stacked_slice)
+    return out
+
+
+def forward(cfg, params, batch, *, window=None, last_only=False):
+    """Full forward to logits. batch: {"tokens": (b,s)} or {"embeds": ...}.
+
+    ``last_only``: unembed only the final position (prefill serving) — the
+    (b, s, V) logits tensor is never materialized."""
+    x = embed_inputs(cfg, params, batch)
+    x = apply_layer_range(cfg, params["layers"], x, window=window)
+    if last_only:
+        x = x[:, -1:]
+    x = _norm(cfg, params["final_norm"], x)
+    return nn.unembed(params["embed"], x)
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+def init_decode_state(cfg, batch: int, max_seq: int):
+    return {"kv": nn.init_kv_cache(cfg, batch, max_seq)}
+
+
+def decode_step(cfg, params, state, tokens, *, window=None):
+    """One decode step: tokens (b, 1) -> logits (b, 1, V), new state."""
+    x = nn.embed(params["embed"], tokens, cfg.dtype)
+    kv = state["kv"]
+
+    def body(h, xs):
+        lp, k_l, v_l = xs
+        cache = {"k": k_l, "v": v_l, "index": kv["index"]}
+        h, nc = apply_layer_decode(cfg, lp, h, cache, window=window)
+        return constrain_batch(h), (nc["k"], nc["v"])
+
+    x, (nk, nv) = jax.lax.scan(body, x, (params["layers"], kv["k"], kv["v"]))
+    x = _norm(cfg, params["final_norm"], x)
+    logits = nn.unembed(params["embed"], x)
+    new_state = {"kv": {"k": nk, "v": nv, "index": kv["index"] + tokens.shape[1]}}
+    return logits, new_state

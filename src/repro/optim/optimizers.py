@@ -1,0 +1,131 @@
+"""Optimizers (AdamW / SGD-momentum / Lion) + LR schedules.
+
+Written optax-free so Hydra can step *per shard*: optimizer state is a pytree
+mirroring the params, and ``update`` is a pure function that works on any
+sub-tree — a shard's params + its optimizer-state slice step independently on
+device while the rest of the model is spilled to host.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class OptimizerConfig:
+    kind: str = "adamw"            # adamw | sgd | lion
+    lr: float = 1e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    momentum: float = 0.9          # sgd
+    grad_clip: float = 1.0         # global-norm clip; 0 disables
+    schedule: str = "constant"     # constant | cosine | linear_warmup_cosine
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+    def replace(self, **kw):
+        return dataclasses.replace(self, **kw)
+
+
+def schedule_lr(cfg: OptimizerConfig, step) -> jnp.ndarray:
+    step = jnp.asarray(step, jnp.float32)
+    lr = jnp.asarray(cfg.lr, jnp.float32)
+    if cfg.schedule == "constant":
+        return lr
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    if cfg.schedule == "linear_warmup_cosine" or cfg.schedule == "cosine":
+        t = jnp.clip((step - cfg.warmup_steps)
+                     / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+                     0.0, 1.0)
+        cos = 0.5 * (1 + jnp.cos(jnp.pi * t))
+        floor = cfg.min_lr_ratio
+        return lr * warm * (floor + (1 - floor) * cos)
+    raise ValueError(cfg.schedule)
+
+
+# ---------------------------------------------------------------------------
+
+
+def init_state(cfg: OptimizerConfig, params) -> dict:
+    zeros = lambda: jax.tree.map(jnp.zeros_like, params)
+    if cfg.kind == "adamw":
+        return {"mu": zeros(), "nu": zeros(), "step": jnp.zeros((), jnp.int32)}
+    if cfg.kind == "sgd":
+        return {"mom": zeros(), "step": jnp.zeros((), jnp.int32)}
+    if cfg.kind == "lion":
+        return {"mu": zeros(), "step": jnp.zeros((), jnp.int32)}
+    raise ValueError(cfg.kind)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm, precomputed_norm=None):
+    norm = precomputed_norm if precomputed_norm is not None \
+        else global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), norm
+
+
+def update(cfg: OptimizerConfig, params, grads, state, *,
+           grad_norm: Optional[jnp.ndarray] = None):
+    """One optimizer step. Works on any (sub-)tree — Hydra steps per shard.
+
+    ``grad_norm``: pass the *global* norm when stepping a shard so clipping
+    matches full-model training exactly.
+    """
+    if cfg.grad_clip > 0:
+        grads, _ = clip_by_global_norm(grads, cfg.grad_clip, grad_norm)
+    step = state["step"] + 1
+    lr = schedule_lr(cfg, step)
+
+    if cfg.kind == "adamw":
+        b1, b2 = cfg.b1, cfg.b2
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g,
+                          state["mu"], grads)
+        nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * jnp.square(g),
+                          state["nu"], grads)
+        t = step.astype(jnp.float32)
+        bc1 = 1 - b1 ** t
+        bc2 = 1 - b2 ** t
+
+        def upd(p, m, v):
+            mhat = m / bc1
+            vhat = v / bc2
+            return (p - lr * (mhat / (jnp.sqrt(vhat) + cfg.eps)
+                              + cfg.weight_decay * p)).astype(p.dtype)
+
+        new_params = jax.tree.map(upd, params, mu, nu)
+        return new_params, {"mu": mu, "nu": nu, "step": step}
+
+    if cfg.kind == "sgd":
+        mom = jax.tree.map(lambda m, g: cfg.momentum * m + g,
+                           state["mom"], grads)
+        new_params = jax.tree.map(
+            lambda p, m: (p - lr * (m + cfg.weight_decay * p)).astype(p.dtype),
+            params, mom)
+        return new_params, {"mom": mom, "step": step}
+
+    if cfg.kind == "lion":
+        b1, b2 = cfg.b1, cfg.b2
+
+        def upd(p, m, g):
+            direction = jnp.sign(b1 * m + (1 - b1) * g)
+            return (p - lr * (direction + cfg.weight_decay * p)).astype(p.dtype)
+
+        new_params = jax.tree.map(upd, params, state["mu"], grads)
+        mu = jax.tree.map(lambda m, g: b2 * m + (1 - b2) * g,
+                          state["mu"], grads)
+        return new_params, {"mu": mu, "step": step}
+
+    raise ValueError(cfg.kind)

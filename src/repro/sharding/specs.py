@@ -1,0 +1,192 @@
+"""Per-family pjit sharding rules (FSDP + tensor parallel).
+
+Mesh axes: ``('data', 'model')`` single-pod (16×16), ``('pod', 'data',
+'model')`` multi-pod (2×16×16).  Batch shards over (pod, data); weights use
+a ZeRO-3/FSDP-style layout — large matrices shard their *input* dim over
+('pod','data') and their *output* dim over 'model' — so per-chip bytes scale
+with total chip count, which is what lets mixtral-8x22b / command-r-104b /
+dbrx-132b fit.  MoE expert banks shard the expert axis over 'model' when the
+expert count divides it, else fall back to (d, f) sharding (Mixtral's 8
+experts on a 16-wide model axis).
+
+Every rule is a *candidate list*; ``param_specs`` picks the first candidate
+whose sharded dims divide evenly on the actual mesh (whisper's 51865 vocab,
+xLSTM's 4 heads, long_500k's batch=1 all need fallbacks).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+def fsdp_axes(mesh) -> Any:
+    """The axis (or axis tuple) used for FSDP weight sharding."""
+    return ("pod", "data") if "pod" in mesh.axis_names else "data"
+
+
+def batch_axes(mesh) -> Any:
+    return ("pod", "data") if "pod" in mesh.axis_names else "data"
+
+
+def _axis_size(mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, (tuple, list)):
+        out = 1
+        for a in axis:
+            out *= mesh.shape[a]
+        return out
+    return mesh.shape[axis]
+
+
+def spec_fits(mesh, spec: P, shape: Sequence[int]) -> bool:
+    for dim, axis in zip(shape, tuple(spec) + (None,) * len(shape)):
+        n = _axis_size(mesh, axis)
+        if n > 1 and dim % n != 0:
+            return False
+    return True
+
+
+def pick_spec(mesh, candidates: Sequence[P], shape: Sequence[int]) -> P:
+    for c in candidates:
+        if spec_fits(mesh, c, shape):
+            return c
+    return P(*([None] * len(shape)))
+
+
+def _path_key(path) -> str:
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                    for p in path)
+
+
+# ---------------------------------------------------------------------------
+# parameter rules
+# ---------------------------------------------------------------------------
+
+def _param_candidates(key: str, ndim: int, mesh) -> list[P]:
+    F = fsdp_axes(mesh)
+    stacked = any(s in key for s in ("layers/", "encoder/", "decoder/"))
+
+    def S(*spec):
+        """Prepend the scanned layer axis (always replicated)."""
+        return P(None, *spec) if stacked else P(*spec)
+
+    # embeddings: vocab over model, features over fsdp
+    if key.endswith("embed/table"):
+        return [P("model", F), P(None, F), P("model", None), P(None, None)]
+    if key.endswith("dec_pos"):
+        return [P(None, F), P(None, None)]
+
+    # MoE expert banks (L, E, d, f): expert-parallel first, FSDP fallback
+    if key.endswith(("/w_gate", "/w_up")) and ndim == (4 if stacked else 3):
+        return [S("model", F, None), S(None, F, "model"), S(None, F, None)]
+    if key.endswith("/w_down") and ndim == (4 if stacked else 3):
+        return [S("model", None, F), S(None, "model", F), S(None, None, F)]
+    if key.endswith("/router"):
+        return [S(F, None), S(None, None)]
+
+    # projections: in-dim over fsdp, out-dim over model (ZeRO-3 + TP)
+    if key.endswith(("/wq", "/wk", "/wv", "/w_gate", "/w_up", "/w_in",
+                     "/in_proj", "/up_proj")):
+        return [S(F, "model"), S(F, None), S(None, "model"), S(None, None)]
+    if key.endswith(("/wo", "/w_down", "/w_out", "/out_proj", "/down_proj")):
+        return [S("model", F), S(None, F), S("model", None), S(None, None)]
+    if key.endswith(("/bq", "/bk", "/bv", "/b_in")):
+        return [S("model"), S(None)]
+
+    # xLSTM internals
+    if key.endswith("/w_gates"):
+        return [S(F, None), S(None, None)]
+    if key.endswith("/r"):          # (h, p, 4p) block-recurrent
+        return [S("model", None, None), S(None, "model", None),
+                S(None, None, None)]
+
+    # conv / gates / norms / scalars: replicate (tiny)
+    return [P(*([None] * ndim))]
+
+
+def param_specs(cfg, params_tree, mesh) -> Any:
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_tree)
+    out = []
+    for path, leaf in flat:
+        key = _path_key(path)
+        cands = _param_candidates(key, len(leaf.shape), mesh)
+        out.append(pick_spec(mesh, cands, leaf.shape))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+# ---------------------------------------------------------------------------
+# batch / optimizer / decode-state rules
+# ---------------------------------------------------------------------------
+
+def batch_specs(cfg, batch_tree, mesh) -> Any:
+    B = batch_axes(mesh)
+
+    def one(leaf):
+        nd = len(leaf.shape)
+        cands = [P(B, *([None] * (nd - 1)))]
+        return pick_spec(mesh, cands, leaf.shape)
+
+    return jax.tree.map(one, batch_tree)
+
+
+def opt_state_specs(cfg, opt_state_tree, mesh) -> Any:
+    flat, treedef = jax.tree_util.tree_flatten_with_path(opt_state_tree)
+    out = []
+    for path, leaf in flat:
+        key = _path_key(path)
+        if key.endswith("step") or len(leaf.shape) == 0:
+            out.append(P())
+            continue
+        stripped = key.split("/", 1)[1] if "/" in key else key
+        cands = _param_candidates(stripped, len(leaf.shape), mesh)
+        out.append(pick_spec(mesh, cands, leaf.shape))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def decode_state_specs(cfg, state_tree, mesh) -> Any:
+    """KV caches: batch→data, kv-heads→model; when batch is unshardable
+    (long_500k's batch=1) shard the *sequence* dim over data instead."""
+    B = batch_axes(mesh)
+
+    def one(path, leaf):
+        key = _path_key(path)
+        nd = len(leaf.shape)
+        if key.endswith("/index") or key.endswith("pos") or nd == 0:
+            return P()
+        if nd == 5:      # stacked kv cache (L, b, s, h, hd)
+            # kv-heads over 'model' when they divide; else shard the cache
+            # *sequence* over 'model' (flash-decode context parallelism: the
+            # score/AV contractions reduce over seq with tiny all-reduces,
+            # where an hd-sharded cache forced a full f32 cache all-gather
+            # per layer per token — 30 GB/token on qwen3 decode_32k).
+            # long_500k (batch=1): seq takes every axis — /512 on multi-pod.
+            Bt = B if isinstance(B, tuple) else (B,)
+            seq_all = Bt + ("model",)
+            cands = [P(None, B, None, "model", None),
+                     P(None, B, "model", None, None),
+                     P(None, None, seq_all, None, None),
+                     P(None, None, B, "model", None),
+                     P(None, None, B, None, None),
+                     P(None, B, None, None, None)]
+            return pick_spec(mesh, cands, leaf.shape)
+        if nd >= 3:      # per-layer recurrent states (L, b, h, ...)
+            cands = [P(None, B, "model", *([None] * (nd - 3))),
+                     P(None, B, *([None] * (nd - 2))),
+                     P(None, None, "model", *([None] * (nd - 3))),
+                     P(*([None] * nd))]
+            return pick_spec(mesh, cands, leaf.shape)
+        return P(*([None] * nd))
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(state_tree)
+    return jax.tree_util.tree_unflatten(
+        treedef, [one(p, l) for p, l in flat])
+
+
+def to_shardings(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,22 @@
+"""Loss functions."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def softmax_xent(logits: jnp.ndarray, labels: jnp.ndarray,
+                 mask=None) -> jnp.ndarray:
+    """Mean next-token cross-entropy. logits: (b, s, V) f32; labels: (b, s)."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)
+
+
+def moe_total_loss(xent: jnp.ndarray, aux: dict, *,
+                   lb_coef: float = 0.01, z_coef: float = 1e-3) -> jnp.ndarray:
+    return xent + lb_coef * aux["lb_loss"] + z_coef * aux["z_loss"]

@@ -1,0 +1,28 @@
+import jax
+import jax.numpy as jnp
+import pytest
+
+# NOTE: no xla_force_host_platform_device_count here — smoke tests and
+# benches must see the real single device; only launch/dryrun.py forces 512.
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)
+
+
+def make_loader(cfg, batch=2, seq=64, seed=0):
+    """Model-family-aware synthetic loader (audio/vlm need embeds)."""
+    from repro.models import api
+
+    class L:
+        def __iter__(self):
+            def gen():
+                i = 0
+                while True:
+                    k = jax.random.fold_in(jax.random.PRNGKey(seed), i)
+                    yield api.make_dummy_batch(cfg, batch, seq, key=k)
+                    i += 1
+            return gen()
+
+    return L()

@@ -1,0 +1,92 @@
+"""Double buffering (paper §4.6): transfer-hiding accounting and the
+configs' structural invariants."""
+
+import jax
+import numpy as np
+import pytest
+
+from conftest import make_loader
+from repro.configs import ASSIGNED_ARCHS, INPUT_SHAPES, get_config
+from repro.core import HydraConfig, ModelOrchestrator, ModelTask
+
+
+def _run(db: bool, link_bw: float):
+    cfg = get_config("qwen3-0.6b", smoke=True)
+    tasks = [ModelTask(cfg, make_loader(cfg, seed=i), lr=1e-3, epochs=1,
+                       steps_per_epoch=2, seed=i, batch=2, seq=64)
+             for i in range(4)]
+    hc = HydraConfig(n_devices=2, device_budget_bytes=18 * 10**6,
+                     enable_double_buffer=db, link_bw=link_bw)
+    return ModelOrchestrator(tasks, hc).train_models()
+
+
+def test_double_buffering_reduces_makespan_on_slow_link():
+    with_db = _run(True, link_bw=5e8)
+    without = _run(False, link_bw=5e8)
+    assert with_db.makespan < without.makespan
+    assert with_db.hidden_transfer_time > 0
+
+
+def test_db_irrelevant_on_infinite_link():
+    # deterministic invariant: with free transfers neither mode exposes any
+    # transfer time (makespans also converge, but unit times are re-measured
+    # per run on a noisy shared CPU, so we don't compare them directly)
+    fast_db = _run(True, link_bw=1e15)
+    fast_no = _run(False, link_bw=1e15)
+    assert fast_db.exposed_transfer_time < 1e-6
+    assert fast_no.exposed_transfer_time < 1e-6
+    assert abs(fast_db.makespan - fast_no.makespan) / fast_no.makespan < 0.25
+
+
+# ---------------------------------------------------------------------------
+# config invariants (assignment sanity)
+# ---------------------------------------------------------------------------
+
+EXPECTED = {
+    "qwen2.5-32b": (64, 5120, 40, 8, 27648, 152064),
+    "llava-next-mistral-7b": (32, 4096, 32, 8, 14336, 32000),
+    "qwen3-0.6b": (28, 1024, 16, 8, 3072, 151936),
+    "mixtral-8x22b": (56, 6144, 48, 8, 16384, 32768),
+    "dbrx-132b": (40, 6144, 48, 8, 10752, 100352),
+    "xlstm-350m": (24, 1024, 4, 4, 0, 50304),
+    "yi-34b": (60, 7168, 56, 8, 20480, 64000),
+    "command-r-plus-104b": (64, 12288, 96, 8, 33792, 256000),
+    "zamba2-1.2b": (38, 2048, 32, 32, 8192, 32000),
+    "whisper-medium": (24, 1024, 16, 16, 4096, 51865),
+}
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_assigned_config_dims(arch):
+    cfg = get_config(arch)
+    L, d, H, kv, ff, V = EXPECTED[arch]
+    assert (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+            cfg.d_ff, cfg.vocab_size) == (L, d, H, kv, ff, V)
+    assert cfg.source, "every config must cite its source"
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_smoke_configs_reduced(arch):
+    cfg = get_config(arch, smoke=True)
+    assert cfg.n_layers <= 4 and cfg.d_model <= 512
+    if cfg.family == "moe":
+        assert cfg.n_experts <= 4
+
+
+def test_input_shapes_assignment():
+    s = INPUT_SHAPES
+    assert (s["train_4k"].seq_len, s["train_4k"].global_batch) == (4096, 256)
+    assert (s["prefill_32k"].seq_len, s["prefill_32k"].global_batch) \
+        == (32768, 32)
+    assert (s["decode_32k"].seq_len, s["decode_32k"].global_batch) \
+        == (32768, 128)
+    assert (s["long_500k"].seq_len, s["long_500k"].global_batch) \
+        == (524288, 1)
+
+
+def test_moe_extra_params():
+    mix = get_config("mixtral-8x22b")
+    dbrx = get_config("dbrx-132b")
+    assert (mix.n_experts, mix.top_k, mix.window) == (8, 2, 4096)
+    assert (dbrx.n_experts, dbrx.top_k) == (16, 4)
+    assert get_config("zamba2-1.2b").ssm_state == 64

@@ -1,0 +1,81 @@
+"""Automated partitioning (paper §4.3, Algorithm 1)."""
+
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.core import partitioner as pt
+from repro.core import shard_graph as sg
+from repro.models import api
+
+
+def _setup(arch="qwen3-0.6b"):
+    cfg = get_config(arch, smoke=True)
+    params = api.init_params(cfg, jax.random.PRNGKey(0))
+    host = sg.prepare_host_params(cfg, jax.tree.map(np.array, params))
+    plan = sg.build_plan(cfg)
+    return cfg, host, plan
+
+
+def test_partition_covers_all_segments_in_order():
+    cfg, host, plan = _setup()
+    res = pt.partition(cfg, host, plan, budget_bytes=20 * 10**6,
+                       batch=2, seq=64)
+    covered = []
+    for sh in res.shards:
+        covered.extend(range(sh.seg_lo, sh.seg_hi))
+    assert covered == list(range(len(plan.segments)))
+
+
+def test_bigger_budget_fewer_shards():
+    cfg, host, plan = _setup()
+    small = pt.partition(cfg, host, plan, budget_bytes=18 * 10**6,
+                         batch=2, seq=64)
+    big = pt.partition(cfg, host, plan, budget_bytes=10**9,
+                       batch=2, seq=64)
+    assert len(big) <= len(small)
+    assert len(big) == 1          # whole smoke model fits 1 GB
+
+
+def test_unpartitionable_raises():
+    cfg, host, plan = _setup()
+    with pytest.raises(MemoryError):
+        pt.partition(cfg, host, plan, budget_bytes=10_000, batch=2, seq=64)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(16, 400))
+def test_partition_coverage_property(budget_mb_tenths):
+    """Any feasible budget yields an exact, ordered, non-overlapping cover."""
+    cfg, host, plan = _setup()
+    budget = budget_mb_tenths * 10**5
+    try:
+        res = pt.partition(cfg, host, plan, budget_bytes=budget,
+                           batch=2, seq=64)
+    except MemoryError:
+        return
+    segs = [i for s in res.shards for i in range(s.seg_lo, s.seg_hi)]
+    assert segs == list(range(len(plan.segments)))
+    assert all(s.seg_hi > s.seg_lo for s in res.shards)
+
+
+def test_probe_oracle_agrees_with_analytic_on_fit():
+    """The AOT pilot-run oracle must also produce a full cover."""
+    cfg, host, plan = _setup()
+    res = pt.partition(cfg, host, plan, budget_bytes=60 * 10**6,
+                       batch=2, seq=64, oracle="probe")
+    segs = [i for s in res.shards for i in range(s.seg_lo, s.seg_hi)]
+    assert segs == list(range(len(plan.segments)))
+
+
+@pytest.mark.parametrize("arch", ["mixtral-8x22b", "whisper-medium",
+                                  "zamba2-1.2b", "xlstm-350m"])
+def test_partition_all_families(arch):
+    cfg, host, plan = _setup(arch)
+    res = pt.partition(cfg, host, plan, budget_bytes=60 * 10**6,
+                       batch=2, seq=64)
+    segs = [i for s in res.shards for i in range(s.seg_lo, s.seg_hi)]
+    assert segs == list(range(len(plan.segments)))
+    assert all(s.param_bytes > 0 for s in res.shards)

@@ -1,0 +1,83 @@
+"""Additional hypothesis property tests on system invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models import layers as nn
+from repro.training.losses import softmax_xent
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 3), st.integers(2, 32), st.integers(2, 16))
+def test_xent_nonnegative_and_bounded(b, s, v):
+    key = jax.random.PRNGKey(b * 1000 + s * 10 + v)
+    logits = jax.random.normal(key, (b, s, v)) * 3
+    labels = jax.random.randint(jax.random.fold_in(key, 1), (b, s), 0, v)
+    loss = float(softmax_xent(logits, labels))
+    assert 0.0 <= loss
+    # xent <= logsumexp spread bound
+    assert loss <= float(2 * 3 * np.sqrt(v) + np.log(v)) + 10
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 100))
+def test_xent_perfect_prediction_goes_to_zero(seed):
+    labels = jax.random.randint(jax.random.PRNGKey(seed), (2, 8), 0, 16)
+    logits = 100.0 * jax.nn.one_hot(labels, 16)
+    assert float(softmax_xent(logits, labels)) < 1e-3
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 2), st.sampled_from([16, 32]), st.sampled_from([4, 8]),
+       st.sampled_from([16, 32]))
+def test_attention_permutation_equivariance_over_batch(b, s, h, hd):
+    """Permuting the batch permutes the output (no cross-batch leakage)."""
+    key = jax.random.PRNGKey(s + h)
+    q = jax.random.normal(key, (2, s, h, hd))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (2, s, h, hd))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (2, s, h, hd))
+    out = nn.sdpa(q, k, v, causal=True)
+    out_swapped = nn.sdpa(q[::-1], k[::-1], v[::-1], causal=True)
+    np.testing.assert_allclose(out[::-1], out_swapped, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(2, 30))
+def test_causal_attention_prefix_stability(prefix):
+    """Outputs at position < prefix don't depend on later tokens."""
+    s = 32
+    key = jax.random.PRNGKey(prefix)
+    q = jax.random.normal(key, (1, s, 2, 16))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (1, s, 2, 16))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (1, s, 2, 16))
+    full = nn.sdpa(q, k, v, causal=True)
+    # perturb the suffix of k/v
+    k2 = k.at[:, prefix:].add(10.0)
+    v2 = v.at[:, prefix:].add(10.0)
+    out2 = nn.sdpa(q, k2, v2, causal=True)
+    np.testing.assert_allclose(full[:, :prefix], out2[:, :prefix],
+                               rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 64))
+def test_rope_norm_preserving(pos):
+    """RoPE is a rotation: it preserves vector norms."""
+    x = jax.random.normal(jax.random.PRNGKey(pos), (1, 1, 1, 64))
+    r = nn.apply_rope(x, jnp.array([[pos]]))
+    np.testing.assert_allclose(float(jnp.linalg.norm(r)),
+                               float(jnp.linalg.norm(x)), rtol=1e-5)
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(1, 4), st.integers(1, 8))
+def test_moe_capacity_never_negative_frac(e_pow, k):
+    from repro.configs import get_config
+    from repro.models.moe import expert_capacity
+    cfg = get_config("mixtral-8x22b", smoke=True).replace(
+        n_experts=2 ** e_pow, top_k=min(k, 2 ** e_pow))
+    c = expert_capacity(cfg, 128)
+    assert c >= 8 and c % 8 == 0

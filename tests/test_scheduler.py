@@ -1,0 +1,87 @@
+"""Sharded-LRTF + the scheduling simulator (paper §4.7, Fig 7)."""
+
+import random
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import scheduler as sched
+
+
+def test_lrtf_picks_longest():
+    ms = [sched.ModelProgress(i, e, 10, 5, 1.0, 0.5)
+          for i, e in enumerate([1, 3, 2])]
+    assert sched.sharded_lrtf(ms) == 1
+
+
+def test_remaining_time_formula():
+    # Algorithm 2: ((e-1)*b + ce - 1) * t + cm
+    m = sched.ModelProgress(0, remaining_epochs=3, minibatches_per_epoch=10,
+                            remaining_in_epoch=4, minibatch_time=2.0,
+                            remaining_in_minibatch=0.5)
+    assert m.remaining_time() == ((3 - 1) * 10 + 4 - 1) * 2.0 + 0.5
+
+
+def test_greedy_sim_single_model_single_device():
+    times = [[1.0, 2.0, 3.0]]
+    assert sched.greedy_list_makespan(times, 1) == pytest.approx(6.0)
+    # extra devices cannot help a single sequential chain
+    assert sched.greedy_list_makespan(times, 4) == pytest.approx(6.0)
+
+
+def test_greedy_sim_perfect_interleave():
+    # 2 identical models, 2 devices: perfect task parallelism
+    times = [[1.0] * 4, [1.0] * 4]
+    assert sched.greedy_list_makespan(times, 2) == pytest.approx(4.0)
+
+
+def test_lrtf_beats_srtf_on_heterogeneous():
+    rng = random.Random(0)
+    wins = 0
+    for trial in range(10):
+        times = [[rng.uniform(0.5, 2.0) for _ in range(rng.randint(2, 12))]
+                 for _ in range(6)]
+        lrtf = sched.greedy_list_makespan(times, 3, sched.sharded_lrtf)
+        srtf = sched.greedy_list_makespan(times, 3, sched.sharded_srtf)
+        if lrtf <= srtf + 1e-9:
+            wins += 1
+    assert wins >= 7   # LRTF should (almost) never lose to anti-LRTF
+
+
+def test_lrtf_near_optimal_small():
+    rng = random.Random(1)
+    for trial in range(5):
+        times = [[rng.uniform(0.5, 2.0) for _ in range(rng.randint(1, 4))]
+                 for _ in range(3)]
+        opt = sched.optimal_makespan(times, 2)
+        lrtf = sched.greedy_list_makespan(times, 2, sched.sharded_lrtf)
+        assert lrtf >= opt - 1e-9          # optimality of B&B incumbent
+        assert lrtf <= opt * 1.6 + 1e-9    # LRTF near-optimal (paper Fig 7)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.lists(st.floats(0.1, 5.0), min_size=1, max_size=6),
+                min_size=1, max_size=5),
+       st.integers(1, 4))
+def test_sim_invariants(times, n_devices):
+    """Makespan >= max-chain and >= total-work/devices lower bounds, and
+    the schedule always terminates covering every unit."""
+    mk = sched.greedy_list_makespan(times, n_devices, sched.sharded_lrtf)
+    chain_lb = max(sum(t) for t in times)
+    work_lb = sum(sum(t) for t in times) / n_devices
+    assert mk >= chain_lb - 1e-6
+    assert mk >= work_lb - 1e-6
+    # and is attainable: never worse than running everything serially
+    assert mk <= sum(sum(t) for t in times) + 1e-6
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 10_000))
+def test_random_scheduler_never_beats_lower_bounds(seed):
+    rng = random.Random(seed)
+    times = [[rng.uniform(0.1, 2.0) for _ in range(rng.randint(1, 5))]
+             for _ in range(4)]
+    r = sched.greedy_list_makespan(
+        times, 2, sched.make_random_scheduler(seed))
+    assert r >= max(sum(t) for t in times) - 1e-6

@@ -1,0 +1,63 @@
+"""Sharding-rule unit tests (pure functions; mesh mocked via .shape dict)."""
+
+from types import SimpleNamespace
+
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.sharding import specs as sh
+
+
+def mesh(shape: dict, axes=None):
+    return SimpleNamespace(shape=shape,
+                           axis_names=tuple(axes or shape.keys()))
+
+
+SINGLE = mesh({"data": 16, "model": 16})
+MULTI = mesh({"pod": 2, "data": 16, "model": 16})
+
+
+def test_spec_fits_divisibility():
+    assert sh.spec_fits(SINGLE, P("data", None), (32, 7))
+    assert not sh.spec_fits(SINGLE, P("data", None), (24, 7))
+    assert sh.spec_fits(SINGLE, P(("data", "model"), None), (512, 3))
+    assert not sh.spec_fits(SINGLE, P(("data", "model"), None), (128, 3))
+
+
+def test_pick_spec_falls_back_in_order():
+    cands = [P("model", None), P(None, "model"), P(None, None)]
+    assert sh.pick_spec(SINGLE, cands, (32, 64)) == P("model", None)
+    assert sh.pick_spec(SINGLE, cands, (7, 64)) == P(None, "model")
+    assert sh.pick_spec(SINGLE, cands, (7, 9)) == P(None, None)
+
+
+def test_param_candidates_projection_rules():
+    c = sh._param_candidates("layers/attn/wq", 3, SINGLE)
+    assert c[0] == P(None, "data", "model")      # stacked FSDP+TP
+    c = sh._param_candidates("attn/wo", 2, SINGLE)
+    assert c[0] == P("model", "data")
+    c = sh._param_candidates("layers/moe/w_gate", 4, SINGLE)
+    assert c[0] == P(None, "model", "data", None)   # expert parallel
+
+
+def test_param_candidates_multipod_uses_pod_axis():
+    c = sh._param_candidates("layers/attn/wq", 3, MULTI)
+    assert c[0] == P(None, ("pod", "data"), "model")
+
+
+def test_embed_table_rules():
+    c = sh._param_candidates("embed/table", 2, SINGLE)
+    assert c[0] == P("model", "data")
+    # whisper vocab 51865 is odd -> must fall through to a fitting candidate
+    got = sh.pick_spec(SINGLE, c, (51865, 1024))
+    assert got in (P(None, "data"), P(None, None))
+
+
+def test_norm_scales_replicate():
+    c = sh._param_candidates("layers/attn_norm/scale", 2, SINGLE)
+    assert c == [P(None, None)]
+
+
+def test_batch_axes():
+    assert sh.batch_axes(SINGLE) == "data"
+    assert sh.batch_axes(MULTI) == ("pod", "data")

@@ -1,0 +1,88 @@
+"""Model spilling (paper §4.2): promote/demote roundtrips, budget
+enforcement, shared-grad accumulation."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import partitioner as pt
+from repro.core import shard_graph as sg
+from repro.core.spilling import DeviceMemory, HostModelStore
+from repro.models import api
+from repro.optim import OptimizerConfig
+
+
+def _store(arch="qwen3-0.6b", budget=20 * 10**6):
+    cfg = get_config(arch, smoke=True)
+    params = api.init_params(cfg, jax.random.PRNGKey(0))
+    plan = sg.build_plan(cfg)
+    host = sg.prepare_host_params(cfg, jax.tree.map(np.array, params))
+    part = pt.partition(cfg, host, plan, budget_bytes=budget, batch=2, seq=64)
+    store = HostModelStore(cfg, plan, params, OptimizerConfig(grad_clip=0.0),
+                           part)
+    return cfg, plan, part, store, params
+
+
+def test_promote_demote_roundtrip_bit_exact():
+    cfg, plan, part, store, params = _store()
+    before = jax.tree.map(np.array, store.params)
+    for shard in part.shards:
+        own, shared, opt_state = store.promote_shard(shard)
+        store.demote_shard(shard, own, opt_state)
+    after = store.params
+    for a, b in zip(jax.tree.leaves(before), jax.tree.leaves(after)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_model_params_roundtrip_matches_original():
+    cfg, plan, part, store, params = _store()
+    rebuilt = store.model_params()
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(rebuilt)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_shared_grad_accumulation():
+    cfg, plan, part, store, params = _store()
+    ref = sg.resolve_ref(store.params, plan.shared_refs["embed"])
+    g1 = jax.tree.map(lambda a: np.ones_like(np.asarray(a)), ref)
+    store.accumulate_shared_grads({"embed": g1})
+    store.accumulate_shared_grads({"embed": g1})
+    acc = store.shared_grad_acc["embed"]
+    assert float(np.asarray(jax.tree.leaves(acc)[0]).max()) == 2.0
+    before = np.array(jax.tree.leaves(ref)[0])
+    store.step_shared()
+    after = np.asarray(jax.tree.leaves(
+        sg.resolve_ref(store.params, plan.shared_refs["embed"]))[0])
+    assert not np.allclose(before, after)     # params moved
+    assert store.shared_grad_acc == {}        # accumulator cleared
+
+
+def test_device_budget_enforced():
+    dev = DeviceMemory(0, budget_bytes=1000, buffer_frac=0.1)
+    dev.charge_promotion(900, into_buffer=False)
+    with pytest.raises(AssertionError):
+        dev.charge_promotion(200, into_buffer=True)
+
+
+def test_double_buffer_regions():
+    dev = DeviceMemory(0, budget_bytes=1000)
+    dev.charge_promotion(300, into_buffer=True)
+    assert dev.buffered_bytes == 300 and dev.resident_bytes == 0
+    dev.activate_buffer()
+    assert dev.buffered_bytes == 0 and dev.resident_bytes == 300
+    dev.charge_demotion(300)
+    assert dev.resident_bytes == 0
+    assert dev.stats.n_promotions == 1 and dev.stats.n_demotions == 1
+
+
+def test_transfer_bytes_accounting():
+    cfg, plan, part, store, params = _store()
+    for shard in part.shards:
+        tb = store.shard_transfer_bytes(shard)
+        assert tb > 0
+        # train transfer includes optimizer state (params x >= 2)
+        own_only = sum(pt.tree_bytes(p) for p in store._own_params(shard)
+                       if p is not None)
+        assert tb >= 2 * own_only
