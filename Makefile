@@ -1,0 +1,23 @@
+# Tier-1 verify and friends in one command each.
+#
+#   make test        - full tier-1 suite (the driver's acceptance gate)
+#   make test-fast   - quick signal: skips the slow subprocess/system suites
+#   make bench-smoke - serving + kernel benchmark smoke (prints CSV + JSON)
+
+PY ?= python
+PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+export PYTHONPATH
+
+.PHONY: test test-fast bench-smoke
+
+test:
+	$(PY) -m pytest -x -q
+
+test-fast:
+	$(PY) -m pytest -x -q --ignore=tests/test_system.py \
+	    --ignore=tests/test_moe_shardmap.py \
+	    --ignore=tests/test_orchestrator.py
+
+bench-smoke:
+	$(PY) -m benchmarks.bench_serving --smoke
+	$(PY) -m benchmarks.run kernels

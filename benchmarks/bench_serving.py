@@ -1,0 +1,156 @@
+"""Serving benchmarks: batched prefill vs the seed per-token loop, and
+continuous-batching vs run-to-completion decode.
+
+  PYTHONPATH=src python -m benchmarks.bench_serving --smoke
+  PYTHONPATH=src python -m benchmarks.run serving
+
+Rows print as ``name,us_per_call,derived`` CSV (bench harness); ``--smoke``
+additionally prints a JSON summary with the prefill speedup.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.configs import get_config
+from repro.models import api
+from repro.serving import InferenceEngine
+from repro.training.train_loop import make_decode_step, make_prefill_into_cache
+
+
+def _seed_prefill_loop(step, params, tokens, state):
+    """The pre-engine serving path: one jitted decode_step per prompt token.
+    ``step`` is passed in pre-jitted so every rep reuses the compiled
+    program — the timed comparison is warm-vs-warm."""
+    logits = None
+    for i in range(tokens.shape[1]):
+        logits, state = step(params, state, tokens[:, i:i + 1])
+    return logits, state
+
+
+def bench_prefill(arch="qwen3-0.6b", batch=4, plen=64, max_seq=96,
+                  reps=3) -> dict:
+    """Batched prefill-into-cache vs per-token loop: prompt tokens/sec."""
+    cfg = get_config(arch, smoke=True)
+    params = api.init_params(cfg, jax.random.PRNGKey(0))
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (batch, plen), 0,
+                                cfg.vocab_size, jnp.int32)
+    prefill = jax.jit(make_prefill_into_cache(cfg))
+    step = jax.jit(lambda p, s, t: api.decode_step(cfg, p, s, t))
+
+    def run_batched():
+        state = api.init_decode_state(cfg, batch, max_seq)
+        logits, _ = prefill(params, state, tokens)
+        return jax.block_until_ready(logits)
+
+    def run_loop():
+        state = api.init_decode_state(cfg, batch, max_seq)
+        logits, _ = _seed_prefill_loop(step, params, tokens, state)
+        return jax.block_until_ready(logits)
+
+    run_batched(); run_loop()                       # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        run_batched()
+    batched_s = (time.perf_counter() - t0) / reps
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        run_loop()
+    loop_s = (time.perf_counter() - t0) / reps
+
+    n_tok = batch * plen
+    batched_tps = n_tok / batched_s
+    loop_tps = n_tok / loop_s
+    speedup = batched_tps / loop_tps
+    emit(f"serve_prefill_batched_{arch}", batched_s * 1e6,
+         f"{batched_tps:.0f}tok/s")
+    emit(f"serve_prefill_loop_{arch}", loop_s * 1e6, f"{loop_tps:.0f}tok/s")
+    emit(f"serve_prefill_speedup_{arch}", 0.0, f"{speedup:.1f}x")
+    return {"arch": arch, "batch": batch, "prompt_len": plen,
+            "batched_tok_per_s": round(batched_tps, 1),
+            "per_token_loop_tok_per_s": round(loop_tps, 1),
+            "prefill_speedup": round(speedup, 2)}
+
+
+def bench_continuous(arch="qwen3-0.6b", n_requests=8, capacity=4,
+                     plen=32, gen=16, max_seq=64) -> dict:
+    """Continuous batching (slot pool, staggered mix of lengths) vs decoding
+    each request alone to completion: generated tokens/sec."""
+    cfg = get_config(arch, smoke=True)
+    params = api.init_params(cfg, jax.random.PRNGKey(0))
+    prompts = [np.asarray(jax.random.randint(
+        jax.random.PRNGKey(10 + i), (plen,), 0, cfg.vocab_size, jnp.int32))
+        for i in range(n_requests)]
+    gens = [gen - (i % 4) for i in range(n_requests)]
+
+    eng = InferenceEngine(cfg, params, capacity=capacity, max_seq=max_seq,
+                          model_name=arch)
+    for p, g in zip(prompts, gens):
+        eng.submit(p, g)
+    eng.run()                                       # compile everything
+    eng2 = InferenceEngine(cfg, params, capacity=capacity, max_seq=max_seq,
+                           model_name=arch)
+    t0 = time.perf_counter()
+    for p, g in zip(prompts, gens):
+        eng2.submit(p, g)
+    done = eng2.run()
+    engine_s = time.perf_counter() - t0
+    n_gen = sum(len(r.generated) for r in done)
+
+    prefill = jax.jit(make_prefill_into_cache(cfg))
+    decode = jax.jit(make_decode_step(cfg))
+
+    def run_sequential():
+        for p, g in zip(prompts, gens):
+            state = api.init_decode_state(cfg, 1, max_seq)
+            logits, state = prefill(params, state, jnp.asarray(p)[None, :])
+            tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+            for _ in range(g - 1):
+                tok, state = decode(params, state, tok)
+            jax.block_until_ready(tok)
+
+    run_sequential()                                # compile (warm-vs-warm)
+    t0 = time.perf_counter()
+    run_sequential()
+    seq_s = time.perf_counter() - t0
+
+    engine_tps = n_gen / engine_s
+    seq_tps = n_gen / seq_s
+    emit(f"serve_continuous_{arch}", engine_s * 1e6, f"{engine_tps:.0f}tok/s")
+    emit(f"serve_sequential_{arch}", seq_s * 1e6, f"{seq_tps:.0f}tok/s")
+    return {"arch": arch, "n_requests": n_requests, "capacity": capacity,
+            "engine_tok_per_s": round(engine_tps, 1),
+            "sequential_tok_per_s": round(seq_tps, 1),
+            "decode_speedup": round(engine_tps / seq_tps, 2)}
+
+
+def run() -> None:
+    """Bench-harness entry (benchmarks.run suite 'serving')."""
+    bench_prefill()
+    bench_continuous()
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small shapes + JSON summary")
+    ap.add_argument("--arch", default="qwen3-0.6b")
+    args = ap.parse_args()
+    if args.smoke:
+        out = {"prefill": bench_prefill(arch=args.arch),
+               "continuous": bench_continuous(arch=args.arch)}
+        print(json.dumps(out))
+    else:
+        bench_prefill(arch=args.arch, batch=8, plen=128, max_seq=160)
+        bench_continuous(arch=args.arch, n_requests=16, capacity=8)
+
+
+if __name__ == "__main__":
+    main()

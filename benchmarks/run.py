@@ -19,6 +19,8 @@ SUITES = {
     "fig10": ("benchmarks.bench_model_scale", "Fig 10 model scale"),
     "table3": ("benchmarks.bench_ablation", "Table 3 ablation"),
     "kernels": ("benchmarks.bench_kernels", "kernel micro-benchmarks"),
+    "serving": ("benchmarks.bench_serving", "serving engine (prefill + "
+                "continuous batching)"),
 }
 
 

@@ -1,6 +1,12 @@
-"""Batched serving example: prefill a batch of prompts, then decode with the
-KV cache / recurrent state — across three architecture families (dense GQA,
-MoE, and a recurrent xLSTM whose state is O(1) in context length).
+"""Batched serving example: batched prefill into the decode cache, then a
+greedy decode loop — across three architecture families (dense GQA, MoE,
+and a recurrent xLSTM whose state is O(1) in context length).
+
+``make_prefill_into_cache`` consumes the whole prompt in one jitted call on
+attention families and falls back to a scanned per-token loop on recurrent
+ones; the callers look identical.  For the full continuous-batching engine
+(request queue, KV-budget admission, multi-model LRTF routing) see
+``repro.serving`` / docs/serving.md.
 
     PYTHONPATH=src python examples/serve_batched.py
 """
@@ -12,7 +18,7 @@ import jax.numpy as jnp
 
 from repro.configs import get_config
 from repro.models import api
-from repro.training import make_decode_step
+from repro.training import make_decode_step, make_prefill_into_cache
 
 
 def serve_one(arch: str, batch=2, prompt_len=16, gen=8):
@@ -22,15 +28,14 @@ def serve_one(arch: str, batch=2, prompt_len=16, gen=8):
     prompt = jax.random.randint(jax.random.PRNGKey(1), (batch, prompt_len),
                                 0, cfg.vocab_size, jnp.int32)
 
-    step = jax.jit(lambda p, s, t: api.decode_step(cfg, p, s, t))
-    logits = None
+    prefill = jax.jit(make_prefill_into_cache(cfg))
     t0 = time.perf_counter()
-    for i in range(prompt_len):                       # prefill via decode
-        logits, state = step(params, state, prompt[:, i:i + 1])
+    last_logits, state = prefill(params, state, prompt)
+    last_logits = jax.block_until_ready(last_logits)
     prefill_s = time.perf_counter() - t0
 
     decode = jax.jit(make_decode_step(cfg))
-    tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+    tok = jnp.argmax(last_logits, axis=-1)[:, None].astype(jnp.int32)
     out = [tok]
     t0 = time.perf_counter()
     for _ in range(gen - 1):
@@ -39,7 +44,8 @@ def serve_one(arch: str, batch=2, prompt_len=16, gen=8):
     jax.block_until_ready(tok)
     decode_s = time.perf_counter() - t0
     gen_toks = jnp.concatenate(out, axis=1)
-    print(f"{arch:18s} prefill {prefill_s * 1e3:7.1f} ms   "
+    mode = "batched" if api.is_attention_family(cfg) else "scanned"
+    print(f"{arch:18s} prefill[{mode:7s}] {prefill_s * 1e3:7.1f} ms   "
           f"decode {batch * (gen - 1) / max(decode_s, 1e-9):8.1f} tok/s   "
           f"sample {gen_toks[0, :6].tolist()}")
 

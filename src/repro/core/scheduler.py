@@ -37,6 +37,17 @@ class ModelProgress:
         return ((e - 1) * b + ce - 1) * self.minibatch_time \
             + self.remaining_in_minibatch
 
+    @classmethod
+    def from_remaining(cls, model_id: int,
+                       remaining_seconds: float) -> "ModelProgress":
+        """Degenerate single-minibatch struct whose ``remaining_time()`` is
+        exactly ``remaining_seconds`` — how serving maps a model's remaining
+        decode work onto the training-centric LRTF struct
+        (see repro.serving.multi)."""
+        return cls(model_id, remaining_epochs=1, minibatches_per_epoch=1,
+                   remaining_in_epoch=1, minibatch_time=remaining_seconds,
+                   remaining_in_minibatch=remaining_seconds)
+
 
 SchedulerFn = Callable[[Sequence[ModelProgress]], int]
 """Given the *eligible* models, return the chosen index into the sequence."""

@@ -48,6 +48,12 @@ class HydraConfig:
     seed: int = 0
     partition_oracle: str = "analytic"
     pilot: bool = True                         # measured pilot pass
+    # deterministic simulation: pin every unit's fwd/bwd runtime to this
+    # value after the pilot (compiled programs still warm up and real
+    # compute still runs).  Makespan comparisons then depend only on the
+    # scheduling/transfer model, not on pilot-measurement noise — the
+    # double-buffer regression test needs this on shared CPU runners.
+    fixed_unit_runtime: Optional[float] = None
     # elasticity (paper §4.7: devices may disappear due to faults or get
     # added due to elasticity): device_id -> (available_from, available_until)
     # in virtual seconds; None = always available
@@ -320,6 +326,14 @@ class SharpExecutor:
             for m in self.models:
                 m.pilot_batch = m.current_batch
             self.pilot_pass()
+        if self.hc.fixed_unit_runtime is not None:
+            # applied independently of the pilot so the pin also holds with
+            # pilot=False (analytic runtime estimates)
+            rt = self.hc.fixed_unit_runtime
+            for m in self.models:
+                for shard in m.partition.shards:
+                    shard.fwd_runtime = shard.bwd_runtime = rt
+                    shard.est_runtime = 2 * rt
 
         windows = self.hc.device_windows or {}
         dev_heap = [(max(0.0, windows.get(d, (0.0, None))[0]), d)

@@ -1,79 +1,98 @@
-"""Batched serving driver: prefill + decode loop with KV cache.
+"""Serving CLI: a thin shell over ``repro.serving.InferenceEngine``.
 
-Demonstrates the inference side the decode shapes lower: a batch of
-requests is prefllled once, then decoded token-by-token with the cached
-state.  Greedy sampling (argmax) keeps it deterministic for tests.
+Synthetic requests are prefilled in one jitted call (batched prefill) and
+decoded with continuous batching over a fixed slot pool; greedy sampling
+(argmax) keeps outputs deterministic for tests.  ``--stagger`` drips
+requests in between decode steps so late arrivals join mid-flight, and a
+comma-separated ``--arch`` list serves several models at once with the
+LRTF policy from ``repro.core.scheduler`` picking which model steps next.
+Prints per-request latency/throughput metrics plus engine summaries as
+JSON.
 
   python -m repro.launch.serve --arch qwen3-0.6b --smoke \
       --batch 4 --prompt-len 32 --gen 16
+  python -m repro.launch.serve --arch qwen3-0.6b,xlstm-350m --smoke \
+      --batch 3 --stagger 2
 """
 
 from __future__ import annotations
 
 import argparse
 import json
-import time
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs import get_config
 from repro.models import api
-from repro.models import layers as nn
-from repro.training import make_decode_step
+from repro.serving import InferenceEngine, MultiModelServer
 
 
-def prefill_into_cache(cfg, params, tokens, state):
-    """Feed prompt tokens through decode_step one at a time (correct for all
-    families incl. recurrent); batched prefill-into-cache is a later perf
-    optimization recorded in EXPERIMENTS.md §Perf."""
-    step = jax.jit(lambda p, s, t: api.decode_step(cfg, p, s, t))
-    logits = None
-    for i in range(tokens.shape[1]):
-        logits, state = step(params, state, tokens[:, i:i + 1])
-    return logits, state
+def build_engine(arch: str, args) -> InferenceEngine:
+    cfg = get_config(arch, smoke=args.smoke)
+    params = api.init_params(cfg, jax.random.PRNGKey(args.seed))
+    max_seq = args.max_seq or (args.prompt_len + args.gen + 8)
+    budget = (args.kv_budget_mb * 2**20) if args.kv_budget_mb else None
+    return InferenceEngine(cfg, params, capacity=args.capacity,
+                           max_seq=max_seq, kv_budget_bytes=budget,
+                           model_name=arch)
+
+
+def synth_prompts(cfg, n: int, prompt_len: int, seed: int):
+    key = jax.random.PRNGKey(seed + 1)
+    return jax.random.randint(key, (n, prompt_len), 0, cfg.vocab_size,
+                              jnp.int32)
 
 
 def serve(args) -> dict:
-    cfg = get_config(args.arch, smoke=args.smoke)
-    params = api.init_params(cfg, jax.random.PRNGKey(args.seed))
-    max_seq = args.prompt_len + args.gen + 8
-    state = api.init_decode_state(cfg, args.batch, max_seq)
-    prompt = jax.random.randint(jax.random.PRNGKey(1),
-                                (args.batch, args.prompt_len), 0,
-                                cfg.vocab_size, jnp.int32)
+    archs = [a.strip() for a in args.arch.split(",") if a.strip()]
+    engines = {a: build_engine(a, args) for a in archs}
+    server = MultiModelServer(engines, scheduler=args.scheduler)
 
-    t0 = time.perf_counter()
-    logits, state = prefill_into_cache(cfg, params, prompt, state)
-    prefill_s = time.perf_counter() - t0
+    pending = []            # (model, prompt row) not yet submitted
+    for arch, eng in engines.items():
+        prompts = synth_prompts(eng.cfg, args.batch, args.prompt_len,
+                                args.seed)
+        pending.extend((arch, prompts[i]) for i in range(args.batch))
 
-    decode = jax.jit(make_decode_step(cfg))
-    tok = jnp.argmax(logits[:, -1, :], axis=-1)[:, None].astype(jnp.int32)
-    out_tokens = [tok]
-    t0 = time.perf_counter()
-    for _ in range(args.gen - 1):
-        tok, state = decode(params, state, tok)
-        out_tokens.append(tok)
-    jax.block_until_ready(tok)
-    decode_s = time.perf_counter() - t0
-    gen = jnp.concatenate(out_tokens, axis=1)
-    return {
-        "generated_shape": list(gen.shape),
-        "prefill_s": round(prefill_s, 3),
-        "decode_tok_per_s": round(args.batch * (args.gen - 1)
-                                  / max(decode_s, 1e-9), 1),
-        "sample": gen[0, :8].tolist(),
-    }
+    # submit everything up front, or drip --stagger at a time between ticks
+    drip = args.stagger if args.stagger > 0 else len(pending)
+    while server.has_work() or pending:
+        for model, prompt in pending[:drip]:
+            server.submit(model, prompt, args.gen)
+        pending = pending[drip:]
+        server.step()
+
+    out = {"engines": server.summary(),
+           "schedule": server.schedule_trace if len(archs) > 1 else None,
+           "requests": [r.metrics() for eng in engines.values()
+                        for r in eng.completed]}
+    if len(archs) == 1:
+        eng = engines[archs[0]]
+        out["sample"] = eng.completed[0].generated[:8] if eng.completed else []
+    return out
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
+    ap.add_argument("--arch", required=True,
+                    help="model id, or comma-separated list for multi-model")
     ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=4,
+                    help="requests per model")
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--capacity", type=int, default=4,
+                    help="decode slot-pool size per model")
+    ap.add_argument("--max-seq", type=int, default=0,
+                    help="per-slot cache length (default prompt+gen+8)")
+    ap.add_argument("--kv-budget-mb", type=float, default=0,
+                    help="KV admission budget per model (0 = uncapped)")
+    ap.add_argument("--stagger", type=int, default=0,
+                    help="submit N requests per tick instead of all upfront")
+    ap.add_argument("--scheduler", default="lrtf",
+                    choices=["lrtf", "srtf", "fifo", "random"])
     args = ap.parse_args()
     print(json.dumps(serve(args)))
 

@@ -32,16 +32,14 @@ from repro.training import make_train_step
 
 
 def make_mesh_for_args(args):
+    from repro.launch.mesh import make_mesh, make_production_mesh
     n = len(jax.devices())
     if args.mesh == "production":
-        from repro.launch.mesh import make_production_mesh
         return make_production_mesh(multi_pod=args.multi_pod)
     if n == 1:
-        return jax.make_mesh((1, 1), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        return make_mesh((1, 1), ("data", "model"))
     nd = max(1, n // 2)
-    return jax.make_mesh((nd, n // nd), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh((nd, n // nd), ("data", "model"))
 
 
 def train(args) -> dict:

@@ -13,6 +13,7 @@ correct, shardable, zero allocation.
 
 from __future__ import annotations
 
+import math
 from typing import Any, Optional
 
 import jax
@@ -53,6 +54,32 @@ def decode_step(cfg, params, state, tokens, *, window: Optional[int] = None):
 
 def param_count(params) -> int:
     return sum(x.size for x in jax.tree.leaves(params))
+
+
+# ---------------------------------------------------------------------------
+# serving helpers
+# ---------------------------------------------------------------------------
+
+ATTENTION_FAMILIES = ("dense", "vlm", "moe")
+
+
+def is_attention_family(cfg) -> bool:
+    """True when decode state is a pure KV cache that an entire prompt chunk
+    can be written into in one ``decode_step`` call (batched prefill).
+    Recurrent/hybrid/enc-dec states advance strictly token-by-token."""
+    return cfg.family in ATTENTION_FAMILIES
+
+
+def decode_state_spec(cfg, batch: int, max_seq: int):
+    """ShapeDtypeStruct tree of the decode state — zero allocation."""
+    return jax.eval_shape(lambda: init_decode_state(cfg, batch, max_seq))
+
+
+def decode_state_bytes(cfg, batch: int, max_seq: int) -> int:
+    """Residency cost of one decode state (KV-budget admission control)."""
+    spec = decode_state_spec(cfg, batch, max_seq)
+    return sum(math.prod(x.shape) * x.dtype.itemsize
+               for x in jax.tree.leaves(spec))
 
 
 # ---------------------------------------------------------------------------

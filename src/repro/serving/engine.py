@@ -1,0 +1,223 @@
+"""Continuous-batching inference engine over a fixed slot pool.
+
+One engine serves one loaded model.  Per tick (``step()``):
+
+  1. retire finished requests (free slot, release KV budget),
+  2. admit queued requests into free slots while the KV budget allows —
+     each admission group is prefilled in ONE jitted call
+     (``make_prefill_into_cache`` vmapped over same-length prompts) and
+     scattered into the pool,
+  3. run ONE pooled decode step: the greedy decode step vmapped over the
+     slot axis, so every active request advances one token.
+
+Requests therefore join and leave between decode steps without ever
+retracing or perturbing in-flight slots; outputs are token-identical to
+running each request alone (tests/test_serving.py).
+"""
+
+from __future__ import annotations
+
+import time
+from functools import lru_cache
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import api
+from repro.serving.queue import KVBudget, RequestQueue
+from repro.serving.request import Request, Status
+from repro.serving.slots import SlotPool, write_slots
+from repro.training.train_loop import make_decode_step, make_prefill_into_cache
+
+
+@lru_cache(maxsize=None)
+def _compiled_steps(cfg, window):
+    """Per-(cfg, window) jitted programs, shared across engine instances so
+    a fresh engine for an already-loaded model never recompiles.  The state
+    argument is donated: the pre-step pool state is dead after each call,
+    and donation lets XLA update the KV cache in place instead of copying
+    the whole pool every tick."""
+    decode = jax.jit(jax.vmap(make_decode_step(cfg, window=window),
+                              in_axes=(None, 0, 0)), donate_argnums=(1,))
+    prefill = jax.jit(jax.vmap(make_prefill_into_cache(cfg, window=window),
+                               in_axes=(None, 0, 0)), donate_argnums=(1,))
+    return decode, prefill
+
+
+class InferenceEngine:
+    def __init__(self, cfg, params, *, capacity: int = 8,
+                 max_seq: int = 256, kv_budget_bytes: Optional[int] = None,
+                 window: Optional[int] = None,
+                 model_name: Optional[str] = None,
+                 clock=time.perf_counter):
+        if cfg.is_encoder_decoder:
+            # encdec decode states need real encoder output; init_decode_state
+            # with enc_out=None zero-fills the cross-attn cache and every
+            # generated token would silently condition on nothing
+            raise ValueError(
+                f"{cfg.name}: encoder-decoder families are not servable "
+                "through InferenceEngine (no encoder-output path yet)")
+        self.cfg = cfg
+        self.params = params
+        self.model_name = model_name or cfg.name
+        self.clock = clock
+        self.pool = SlotPool(cfg, capacity, max_seq)
+        self.queue = RequestQueue(clock=clock)
+        self.slot_bytes = api.decode_state_bytes(cfg, 1, max_seq)
+        self.budget = KVBudget(kv_budget_bytes, self.slot_bytes)
+        self._decode, self._prefill = _compiled_steps(cfg, window)
+        self._active: dict[int, Request] = {}       # slot -> request
+        self._tokens = np.zeros((capacity, 1, 1), np.int32)
+        self.completed: list[Request] = []
+        # engine-level counters (JSON summary)
+        self.decode_steps = 0
+        self.decode_tokens = 0       # tokens from decode steps (not prefill)
+        self.prefill_calls = 0
+        self.prefill_tokens = 0
+        self.decode_s = 0.0
+        self.prefill_s = 0.0
+        self._tok_s_ema: Optional[float] = None     # per-token decode seconds
+
+    # -- submission ---------------------------------------------------------
+    def submit(self, prompt, max_new_tokens: int, *,
+               request_id: str = "", eos_id: Optional[int] = None,
+               arrival_time: Optional[float] = None) -> Request:
+        req = Request(prompt=prompt, max_new_tokens=max_new_tokens,
+                      request_id=request_id, eos_id=eos_id,
+                      model=self.model_name, arrival_time=arrival_time)
+        # rows actually written: plen at prefill + one per decode step; the
+        # final generated token is sampled but never fed back into the cache
+        if req.prompt_len + req.max_new_tokens - 1 > self.pool.max_seq:
+            raise ValueError(
+                f"prompt+generation exceeds engine max_seq={self.pool.max_seq}")
+        return self.queue.push(req)
+
+    # -- introspection ------------------------------------------------------
+    def active_requests(self) -> Sequence[Request]:
+        return list(self._active.values())
+
+    def queued_requests(self) -> Sequence[Request]:
+        return list(self.queue)
+
+    def has_work(self) -> bool:
+        return bool(self._active or self.queue)
+
+    def tok_seconds_estimate(self) -> float:
+        """Measured per-token decode seconds (EMA); cost-model prior until
+        the first step so multi-model LRTF can rank engines immediately."""
+        if self._tok_s_ema is not None:
+            return self._tok_s_ema
+        return 2e-10 * max(self.cfg.n_active_params, 1)
+
+    def remaining_seconds(self) -> float:
+        """LRTF input: remaining decode work (active + queued), seconds."""
+        rem = sum(r.remaining_tokens() for r in self._active.values())
+        # queued requests also owe their prefill; charge it as tokens
+        rem += sum(r.max_new_tokens + r.prompt_len for r in self.queue)
+        return rem * self.tok_seconds_estimate()
+
+    # -- engine tick --------------------------------------------------------
+    def _retire_finished(self) -> None:
+        for slot, req in list(self._active.items()):
+            if req.done:
+                req.status = Status.FINISHED
+                req.finish_time = self.clock()
+                req.slot = None
+                self.pool.free(slot)
+                self.budget.release()
+                del self._active[slot]
+                self.completed.append(req)
+
+    def _admit(self) -> list[Request]:
+        admitted: list[Request] = []
+        while self.queue and self.pool.n_free and self.budget.reserve():
+            req = self.queue.pop()
+            req.slot = self.pool.alloc(req.request_id)
+            req.admit_time = self.clock()
+            req.status = Status.RUNNING
+            admitted.append(req)
+        if not admitted:
+            return admitted
+        # one jitted prefill per same-length group: (n, 1, plen) tokens over
+        # n stacked fresh batch=1 states
+        by_len: dict[int, list[Request]] = {}
+        for req in admitted:
+            by_len.setdefault(req.prompt_len, []).append(req)
+        for plen, group in sorted(by_len.items()):
+            slots = [r.slot for r in group]
+            tokens = jnp.asarray(
+                np.stack([r.prompt for r in group])[:, None, :])
+            states = self.pool.fresh_states(len(group))
+            t0 = self.clock()
+            logits, states = self._prefill(self.params, states, tokens)
+            logits = jax.block_until_ready(logits)
+            self.prefill_s += self.clock() - t0
+            self.prefill_calls += 1
+            self.prefill_tokens += plen * len(group)
+            self.pool.state = write_slots(self.pool.state, states, slots)
+            first = np.asarray(jnp.argmax(logits, axis=-1), np.int32)  # (n, 1)
+            now = self.clock()
+            for i, req in enumerate(group):
+                tok = int(first[i, 0])
+                req.generated.append(tok)
+                req.first_token_time = now
+                self._tokens[req.slot, 0, 0] = tok
+                self._active[req.slot] = req
+        return admitted
+
+    def step(self) -> bool:
+        """One engine tick; returns True while there is work left."""
+        self._retire_finished()
+        self._admit()
+        self._retire_finished()      # single-token requests finish at prefill
+        if self._active:
+            toks = jnp.asarray(self._tokens)
+            t0 = self.clock()
+            ntoks, self.pool.state = self._decode(self.params,
+                                                  self.pool.state, toks)
+            # np.array (copy): asarray of a jax array is a read-only view,
+            # and admission writes freshly prefilled tokens into this buffer
+            ntoks = np.array(jax.block_until_ready(ntoks), np.int32)
+            dt = self.clock() - t0
+            self.decode_s += dt
+            self.decode_steps += 1
+            self.decode_tokens += len(self._active)
+            per_tok = dt / max(len(self._active), 1)
+            self._tok_s_ema = (per_tok if self._tok_s_ema is None
+                               else 0.8 * self._tok_s_ema + 0.2 * per_tok)
+            self._tokens = ntoks
+            for slot, req in self._active.items():
+                req.generated.append(int(ntoks[slot, 0, 0]))
+        return self.has_work()
+
+    def run(self, max_steps: Optional[int] = None) -> list[Request]:
+        """Drive to completion; returns requests completed during the call."""
+        done_before = len(self.completed)
+        steps = 0
+        while self.step():
+            steps += 1
+            if max_steps is not None and steps >= max_steps:
+                break
+        self._retire_finished()
+        return self.completed[done_before:]
+
+    # -- metrics ------------------------------------------------------------
+    def summary(self) -> dict:
+        return {
+            "model": self.model_name,
+            "capacity": self.pool.capacity,
+            "max_seq": self.pool.max_seq,
+            "slot_bytes": self.slot_bytes,
+            "kv_budget_bytes": self.budget.budget_bytes,
+            "kv_peak_bytes": self.budget.peak_bytes,
+            "n_completed": len(self.completed),
+            "decode_steps": self.decode_steps,
+            "prefill_calls": self.prefill_calls,
+            "prefill_tok_per_s": round(
+                self.prefill_tokens / self.prefill_s, 1)
+                if self.prefill_s else None,
+            "decode_tok_per_s": round(self.decode_tokens / self.decode_s, 1)
+                if self.decode_s else None,
+        }

@@ -1,0 +1,65 @@
+"""Multi-model serving: several loaded engines, one device timeline.
+
+Hydra's thesis — interleave many independent jobs to hide per-job stalls —
+applied to inference: each loaded model owns an ``InferenceEngine``, and
+between ticks the server asks the SHARP scheduling policy (Sharded-LRTF
+from ``repro.core.scheduler``) which model's decode step runs next.  A
+model's "remaining train time" maps onto its remaining decode work in
+seconds (``ModelProgress.from_remaining``): LRTF therefore keeps the model
+with the most outstanding tokens moving, the same longest-first rule the
+paper proves out for training makespan.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Union
+
+from repro.core.scheduler import ModelProgress, SchedulerFn, get_scheduler
+from repro.serving.engine import InferenceEngine
+from repro.serving.request import Request
+
+
+class MultiModelServer:
+    def __init__(self, engines: dict[str, InferenceEngine],
+                 scheduler: Union[str, SchedulerFn] = "lrtf"):
+        if not engines:
+            raise ValueError("need at least one engine")
+        self.engines = dict(engines)
+        self._names = list(self.engines)
+        self.scheduler: SchedulerFn = (get_scheduler(scheduler)
+                                       if isinstance(scheduler, str)
+                                       else scheduler)
+        self.schedule_trace: list[str] = []   # model picked at each tick
+
+    def submit(self, model: str, prompt, max_new_tokens: int,
+               **kw) -> Request:
+        return self.engines[model].submit(prompt, max_new_tokens, **kw)
+
+    def has_work(self) -> bool:
+        return any(e.has_work() for e in self.engines.values())
+
+    def step(self) -> Optional[str]:
+        """One server tick: pick a model via the policy, run its engine
+        tick.  Returns the model name stepped, or None when idle."""
+        eligible = [(i, name) for i, name in enumerate(self._names)
+                    if self.engines[name].has_work()]
+        if not eligible:
+            return None
+        progress = [ModelProgress.from_remaining(
+            i, self.engines[name].remaining_seconds())
+            for i, name in eligible]
+        _, name = eligible[self.scheduler(progress)]
+        self.engines[name].step()
+        self.schedule_trace.append(name)
+        return name
+
+    def run(self, max_steps: Optional[int] = None) -> dict[str, list[Request]]:
+        steps = 0
+        while self.step() is not None:
+            steps += 1
+            if max_steps is not None and steps >= max_steps:
+                break
+        return {name: eng.completed for name, eng in self.engines.items()}
+
+    def summary(self) -> dict:
+        return {name: eng.summary() for name, eng in self.engines.items()}

@@ -1,0 +1,84 @@
+"""FIFO request queue (arrival-stamped) + KV-budget admission control.
+
+Admission is slot-granular: every running request owns one slot of the
+fixed-capacity pool, and a slot's decode-state residency is a constant
+``slot_bytes`` (computed via ``api.decode_state_bytes`` — no allocation).
+``KVBudget`` enforces ``reserved <= budget_bytes`` as an invariant: a
+request is admitted only if reserving one more slot stays under budget,
+so concurrency degrades gracefully when the budget is tighter than the
+pool (tests/test_serving.py asserts the peak never exceeds it).
+"""
+
+from __future__ import annotations
+
+import time
+from collections import deque
+from typing import Optional
+
+from repro.serving.request import Request
+
+
+class RequestQueue:
+    """Arrival-ordered queue; stamps ``arrival_time`` on push."""
+
+    def __init__(self, clock=time.perf_counter):
+        self.clock = clock
+        self._q: deque[Request] = deque()
+
+    def push(self, req: Request) -> Request:
+        if req.arrival_time is None:
+            req.arrival_time = self.clock()
+        self._q.append(req)
+        return req
+
+    def pop(self) -> Request:
+        return self._q.popleft()
+
+    def __len__(self) -> int:
+        return len(self._q)
+
+    def __bool__(self) -> bool:
+        return bool(self._q)
+
+    def __iter__(self):
+        return iter(self._q)
+
+
+class KVBudget:
+    """Byte accounting for decode-state residency (admission control).
+
+    ``budget_bytes=None`` disables the cap but keeps the accounting so
+    metrics can report residency either way.
+    """
+
+    def __init__(self, budget_bytes: Optional[int], slot_bytes: int):
+        if slot_bytes <= 0:
+            raise ValueError("slot_bytes must be positive")
+        if budget_bytes is not None and budget_bytes < slot_bytes:
+            raise ValueError(
+                f"KV budget {budget_bytes} B below one slot "
+                f"({slot_bytes} B): nothing could ever be admitted")
+        self.budget_bytes = budget_bytes
+        self.slot_bytes = slot_bytes
+        self.reserved_bytes = 0
+        self.peak_bytes = 0
+
+    def can_reserve(self) -> bool:
+        return (self.budget_bytes is None
+                or self.reserved_bytes + self.slot_bytes <= self.budget_bytes)
+
+    def reserve(self) -> bool:
+        if not self.can_reserve():
+            return False
+        self.reserved_bytes += self.slot_bytes
+        self.peak_bytes = max(self.peak_bytes, self.reserved_bytes)
+        return True
+
+    def release(self) -> None:
+        assert self.reserved_bytes >= self.slot_bytes, "release without reserve"
+        self.reserved_bytes -= self.slot_bytes
+
+    def max_concurrent(self) -> Optional[int]:
+        if self.budget_bytes is None:
+            return None
+        return self.budget_bytes // self.slot_bytes

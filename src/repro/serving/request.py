@@ -1,0 +1,91 @@
+"""Request objects + per-request latency/throughput metrics.
+
+Lifecycle (see docs/serving.md):
+
+    QUEUED --admit--> RUNNING --last token--> FINISHED
+      |                  |
+      arrival_time       admit_time / first_token_time ... finish_time
+
+All timestamps come from the engine's injectable clock so tests can freeze
+time; durations are derived lazily in ``metrics()``.
+"""
+
+from __future__ import annotations
+
+import enum
+import itertools
+from dataclasses import dataclass, field
+from typing import Optional
+
+import numpy as np
+
+_ids = itertools.count()
+
+
+class Status(enum.Enum):
+    QUEUED = "queued"
+    RUNNING = "running"
+    FINISHED = "finished"
+
+
+@dataclass
+class Request:
+    """One generation request: prompt tokens + a decode budget."""
+    prompt: np.ndarray                       # (plen,) int32
+    max_new_tokens: int
+    request_id: str = ""
+    model: Optional[str] = None              # routing key (multi-model)
+    eos_id: Optional[int] = None             # optional early stop
+    arrival_time: Optional[float] = None     # stamped by the queue
+    admit_time: Optional[float] = None
+    first_token_time: Optional[float] = None
+    finish_time: Optional[float] = None
+    status: Status = Status.QUEUED
+    slot: Optional[int] = None               # pool slot while RUNNING
+    generated: list[int] = field(default_factory=list)
+
+    def __post_init__(self):
+        self.prompt = np.asarray(self.prompt, np.int32).reshape(-1)
+        if self.max_new_tokens < 1:
+            raise ValueError("max_new_tokens must be >= 1")
+        if not self.request_id:
+            self.request_id = f"req-{next(_ids)}"
+
+    @property
+    def prompt_len(self) -> int:
+        return int(self.prompt.shape[0])
+
+    @property
+    def done(self) -> bool:
+        if len(self.generated) >= self.max_new_tokens:
+            return True
+        return bool(self.generated and self.eos_id is not None
+                    and self.generated[-1] == self.eos_id)
+
+    def remaining_tokens(self) -> int:
+        return max(0, self.max_new_tokens - len(self.generated))
+
+    def metrics(self) -> dict:
+        """JSON-ready per-request latency/throughput record."""
+        out = {
+            "request_id": self.request_id,
+            "model": self.model,
+            "status": self.status.value,
+            "prompt_len": self.prompt_len,
+            "n_generated": len(self.generated),
+        }
+
+        def dur(a, b):
+            return round(b - a, 6) if a is not None and b is not None else None
+
+        out["queue_wait_s"] = dur(self.arrival_time, self.admit_time)
+        out["ttft_s"] = dur(self.arrival_time, self.first_token_time)
+        out["e2e_s"] = dur(self.arrival_time, self.finish_time)
+        decode_s = dur(self.first_token_time, self.finish_time)
+        out["decode_s"] = decode_s
+        if decode_s and len(self.generated) > 1:
+            out["decode_tok_per_s"] = round(
+                (len(self.generated) - 1) / decode_s, 1)
+        else:
+            out["decode_tok_per_s"] = None
+        return out

@@ -1,0 +1,79 @@
+"""Fixed-capacity slot pool over stacked per-request decode states.
+
+The pool pytree holds every leaf of a batch=1 ``api.init_decode_state`` tree
+with an extra leading slot axis ``(S, ...)``; slot ``s`` is bit-for-bit the
+state of a lone batch=1 request.  The engine vmaps the decode step over the
+slot axis, so continuous batching is numerically identical to running each
+request alone (tests/test_serving.py checks exact token equality), while
+still compiling to ONE fixed-shape program — joins and evictions never
+retrace the decode step.
+
+Slot writes go through ``.at[slots].set`` scatters; a freed slot keeps its
+stale state until the next admission overwrites the whole slice with a
+freshly prefilled one, so nothing ever leaks between occupants.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import api
+
+
+def stack_trees(trees):
+    """[tree, ...] -> one tree with a new leading axis on every leaf."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+@partial(jax.jit, donate_argnums=(0,))
+def _scatter_slots(pool, sub, idx):
+    return jax.tree.map(lambda p, s: p.at[idx].set(s.astype(p.dtype)),
+                        pool, sub)
+
+
+def write_slots(pool, sub, slot_ids):
+    """Scatter ``sub`` (leading axis n) into ``pool`` rows ``slot_ids``.
+
+    Jitted with the pool donated so XLA updates the slot rows in place —
+    un-jitted, every ``.at[].set`` would copy the whole stacked KV cache
+    once per admission group."""
+    return _scatter_slots(pool, sub, jnp.asarray(slot_ids, jnp.int32))
+
+
+class SlotPool:
+    """Free-list of decode-state slots + the stacked state itself."""
+
+    def __init__(self, cfg, capacity: int, max_seq: int):
+        if capacity < 1:
+            raise ValueError("capacity must be >= 1")
+        self.capacity = capacity
+        self.max_seq = max_seq
+        self._fresh = api.init_decode_state(cfg, 1, max_seq)
+        self.state = stack_trees([self._fresh] * capacity)
+        # pop() hands out low slot ids first (stable layouts in tests)
+        self._free = list(range(capacity - 1, -1, -1))
+        self.occupant: dict[int, str] = {}          # slot -> request_id
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def n_active(self) -> int:
+        return self.capacity - len(self._free)
+
+    def alloc(self, request_id: str) -> int:
+        slot = self._free.pop()
+        self.occupant[slot] = request_id
+        return slot
+
+    def free(self, slot: int) -> None:
+        del self.occupant[slot]
+        self._free.append(slot)
+
+    def fresh_states(self, n: int):
+        """Stacked zero states for ``n`` requests about to be prefilled."""
+        return stack_trees([self._fresh] * n)

@@ -155,6 +155,40 @@ def make_prefill_step(cfg, *, window: Optional[int] = None):
     return prefill_step
 
 
+def make_prefill_into_cache(cfg, *, window: Optional[int] = None):
+    """Fill the decode cache/state with a whole prompt, returning the logits
+    the first generated token is sampled from.
+
+    Attention families (dense/vlm/moe) consume the full ``(b, plen)`` prompt
+    in ONE ``decode_step`` call: the KV write is a single dynamic-update of
+    ``plen`` rows and the causal chunk mask keeps intra-prompt attention
+    correct, so prefill costs one jitted dispatch instead of ``plen``.
+    Recurrent/hybrid/enc-dec states advance strictly token-by-token, so they
+    fall back to a ``lax.scan`` over prompt positions — same signature,
+    still one jitted program.
+
+    Returns ``prefill(params, state, tokens) -> (last_logits (b, V), state)``.
+    """
+    if api.is_attention_family(cfg):
+        def prefill(params, state, tokens):
+            logits, state = api.decode_step(cfg, params, state, tokens,
+                                            window=window)
+            return logits[:, -1, :], state
+
+        return prefill
+
+    def prefill_scan(params, state, tokens):
+        def body(st, tok):
+            logits, st = api.decode_step(cfg, params, st, tok[:, None],
+                                         window=window)
+            return st, logits[:, -1, :]
+
+        state, logits = jax.lax.scan(body, state, tokens.T)
+        return logits[-1], state
+
+    return prefill_scan
+
+
 def make_decode_step(cfg, *, window: Optional[int] = None):
     """One-token decode against a KV cache / recurrent state."""
 

@@ -1,0 +1,83 @@
+"""Optional-``hypothesis`` shim (see requirements-dev.txt).
+
+When hypothesis is installed the real ``given``/``settings``/``st`` are
+re-exported unchanged.  When it is absent, minimal stand-ins degrade each
+``@given`` property test to a seeded fixed-examples loop: the same strategy
+surface the suite uses (integers / floats / sampled_from / lists), drawn
+from ``random.Random`` with a deterministic per-example seed, so tier-1
+stays green — with reduced (but reproducible) case coverage — on bare
+containers.
+"""
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+    import random
+
+    _DEFAULT_EXAMPLES = 10
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def example(self, rng):
+            return self._draw(rng)
+
+    class st:  # noqa: N801 — mirrors `strategies as st`
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda r: r.randint(min_value, max_value))
+
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Strategy(lambda r: r.uniform(min_value, max_value))
+
+        @staticmethod
+        def sampled_from(elements):
+            elements = list(elements)
+            return _Strategy(lambda r: r.choice(elements))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda r: bool(r.getrandbits(1)))
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=10):
+            def draw(r):
+                n = r.randint(min_size, max_size)
+                return [elements.example(r) for _ in range(n)]
+
+            return _Strategy(draw)
+
+    def settings(max_examples=_DEFAULT_EXAMPLES, **_ignored):
+        """Accepts (and ignores) hypothesis-only knobs like ``deadline``."""
+
+        def deco(fn):
+            fn._shim_max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(*strategies, **kw_strategies):
+        def deco(fn):
+            # NOTE: wrapper takes *args only — pytest must not see fn's
+            # positional params and try to resolve them as fixtures
+            def wrapper(*args, **kwargs):
+                n = getattr(wrapper, "_shim_max_examples",
+                            getattr(fn, "_shim_max_examples",
+                                    _DEFAULT_EXAMPLES))
+                for i in range(n):
+                    rng = random.Random(0xC0FFEE + i)
+                    vals = [s.example(rng) for s in strategies]
+                    kvals = {k: s.example(rng)
+                             for k, s in sorted(kw_strategies.items())}
+                    fn(*args, *vals, **kvals, **kwargs)
+
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__dict__.update(fn.__dict__)
+            return wrapper
+
+        return deco

@@ -1,0 +1,126 @@
+"""Deterministic (non-hypothesis) regressions for LRTF ordering and
+spilling budget accounting, so scheduler/memory behavior stays covered even
+when ``hypothesis`` is absent (the property suites degrade to fewer
+examples via tests/_hypothesis_compat.py)."""
+
+import itertools
+
+import pytest
+
+from repro.core import scheduler as sched
+from repro.core.spilling import DeviceMemory, TransferStats
+
+
+def _mp(i, remaining):
+    return sched.ModelProgress.from_remaining(i, remaining)
+
+
+# ---------------------------------------------------------------------------
+# LRTF ordering
+# ---------------------------------------------------------------------------
+
+def test_from_remaining_roundtrips_seconds():
+    assert _mp(0, 12.5).remaining_time() == pytest.approx(12.5)
+    assert _mp(3, 0.0).remaining_time() == 0.0
+
+
+def test_lrtf_orders_by_remaining_time_under_permutation():
+    times = [3.0, 11.0, 7.0, 0.5]
+    for perm in itertools.permutations(range(4)):
+        ms = [_mp(i, times[i]) for i in perm]
+        pick = sched.sharded_lrtf(ms)
+        assert ms[pick].remaining_time() == max(times)
+
+
+def test_lrtf_tie_breaks_to_first_eligible():
+    ms = [_mp(7, 5.0), _mp(1, 5.0), _mp(2, 5.0)]
+    assert sched.sharded_lrtf(ms) == 0
+
+
+def test_lrtf_and_srtf_are_opposites():
+    ms = [_mp(0, 1.0), _mp(1, 9.0), _mp(2, 4.0)]
+    assert sched.sharded_lrtf(ms) == 1
+    assert sched.sharded_srtf(ms) == 0
+
+
+def test_lrtf_full_struct_ordering():
+    # Algorithm 2 struct: remaining time dominates regardless of which of
+    # e/b/ce/t/cm contributes it
+    long_epochs = sched.ModelProgress(0, remaining_epochs=5,
+                                      minibatches_per_epoch=4,
+                                      remaining_in_epoch=4,
+                                      minibatch_time=1.0,
+                                      remaining_in_minibatch=1.0)   # 20.0
+    long_minibatch = sched.ModelProgress(1, remaining_epochs=1,
+                                         minibatches_per_epoch=1,
+                                         remaining_in_epoch=1,
+                                         minibatch_time=19.0,
+                                         remaining_in_minibatch=19.0)
+    assert sched.sharded_lrtf([long_epochs, long_minibatch]) == 0
+    assert sched.sharded_lrtf([long_minibatch, long_epochs]) == 1
+
+
+def test_lrtf_simulated_makespan_no_worse_than_srtf():
+    # the paper's Fig-7 ordering at a fixed small instance
+    times = [[4.0, 4.0, 4.0], [1.0], [2.0, 2.0], [1.0, 1.0]]
+    lrtf = sched.greedy_list_makespan(times, 2, scheduler=sched.sharded_lrtf)
+    srtf = sched.greedy_list_makespan(times, 2, scheduler=sched.sharded_srtf)
+    opt = sched.optimal_makespan(times, 2)
+    assert lrtf <= srtf
+    assert lrtf == pytest.approx(opt)
+
+
+# ---------------------------------------------------------------------------
+# spilling budget accounting
+# ---------------------------------------------------------------------------
+
+def test_device_memory_promotion_accounting():
+    dm = DeviceMemory(device_id=0, budget_bytes=1000, buffer_frac=0.1)
+    dm.charge_promotion(400, into_buffer=False)
+    dm.charge_promotion(80, into_buffer=True)
+    assert dm.resident_bytes == 400
+    assert dm.buffered_bytes == 80
+    assert dm.stats.promoted_bytes == 480
+    assert dm.stats.n_promotions == 2
+
+
+def test_device_memory_activate_buffer_moves_bytes():
+    dm = DeviceMemory(0, 1000)
+    dm.charge_promotion(100, into_buffer=True)
+    dm.activate_buffer()
+    assert dm.resident_bytes == 100
+    assert dm.buffered_bytes == 0
+
+
+def test_device_memory_over_budget_asserts():
+    dm = DeviceMemory(0, 500)
+    dm.charge_promotion(400, into_buffer=False)
+    with pytest.raises(AssertionError):
+        dm.charge_promotion(200, into_buffer=False)
+
+
+def test_device_memory_demotion_floors_at_zero():
+    dm = DeviceMemory(0, 1000)
+    dm.charge_promotion(300, into_buffer=False)
+    dm.charge_demotion(200)
+    assert dm.resident_bytes == 100
+    dm.charge_demotion(500)           # over-demotion clamps, never negative
+    assert dm.resident_bytes == 0
+    assert dm.stats.n_demotions == 2
+    assert dm.stats.demoted_bytes == 700
+
+
+def test_transfer_stats_totals():
+    st = TransferStats(promoted_bytes=10, demoted_bytes=20, act_bytes_moved=5)
+    assert st.total_bytes() == 35
+
+
+def test_budget_cycle_promote_demote_repromote():
+    # a full spilling cycle stays within budget and books traffic both ways
+    dm = DeviceMemory(0, 1000)
+    for _ in range(3):
+        dm.charge_promotion(900, into_buffer=False)
+        assert dm.resident_bytes + dm.buffered_bytes <= 1000
+        dm.charge_demotion(900)
+    assert dm.resident_bytes == 0
+    assert dm.stats.promoted_bytes == dm.stats.demoted_bytes == 2700

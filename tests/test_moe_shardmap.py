@@ -17,8 +17,9 @@ from repro.configs import get_config
 from repro.models import api, moe
 from repro.sharding.context import activation_axes
 
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+from repro.launch.mesh import make_mesh
+
+mesh = make_mesh((2, 4), ("data", "model"))
 cfg = get_config("mixtral-8x22b", smoke=True)   # 4 experts on model=4
 params = api.init_params(cfg, jax.random.PRNGKey(0))
 

@@ -1,0 +1,261 @@
+"""Continuous-batching serving engine (repro.serving).
+
+The load-bearing property: because the engine vmaps the greedy decode step
+over a slot pool of stacked batch=1 states, every request's token stream is
+numerically identical to decoding it alone — joins, evictions, and slot
+reuse must never perturb in-flight requests.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.scheduler import sharded_lrtf
+from repro.models import api
+from repro.serving import (InferenceEngine, KVBudget, MultiModelServer,
+                           Request, Status)
+from repro.training.train_loop import make_decode_step, make_prefill_into_cache
+
+MAX_SEQ = 64
+
+
+@pytest.fixture(scope="module")
+def dense():
+    cfg = get_config("qwen3-0.6b", smoke=True)
+    return cfg, api.init_params(cfg, jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def ssm():
+    cfg = get_config("xlstm-350m", smoke=True)
+    return cfg, api.init_params(cfg, jax.random.PRNGKey(1))
+
+
+def _prompt(cfg, seed, plen):
+    return np.asarray(jax.random.randint(
+        jax.random.PRNGKey(seed), (plen,), 0, cfg.vocab_size, jnp.int32))
+
+
+@functools.lru_cache(maxsize=None)
+def _ref_steps(cfg):
+    # shared per-cfg so ~15 reference decodes don't each recompile
+    return (jax.jit(make_prefill_into_cache(cfg)),
+            jax.jit(make_decode_step(cfg)))
+
+
+def _reference(cfg, params, prompt, gen, max_seq=MAX_SEQ):
+    """Sequential per-request greedy decode: batch=1 prefill + decode loop."""
+    prefill, decode = _ref_steps(cfg)
+    state = api.init_decode_state(cfg, 1, max_seq)
+    logits, state = prefill(params, state, jnp.asarray(prompt)[None, :])
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+    out = [int(tok[0, 0])]
+    for _ in range(gen - 1):
+        tok, state = decode(params, state, tok)
+        out.append(int(tok[0, 0]))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# prefill-into-cache
+# ---------------------------------------------------------------------------
+
+def test_batched_prefill_matches_per_token_loop(dense):
+    cfg, params = dense
+    tokens = jax.random.randint(jax.random.PRNGKey(5), (2, 12), 0,
+                                cfg.vocab_size, jnp.int32)
+    state = api.init_decode_state(cfg, 2, MAX_SEQ)
+    logits_b, state_b = make_prefill_into_cache(cfg)(params, state, tokens)
+
+    state = api.init_decode_state(cfg, 2, MAX_SEQ)
+    logits_l = None
+    for i in range(tokens.shape[1]):
+        logits_l, state = api.decode_step(cfg, params, state,
+                                          tokens[:, i:i + 1])
+    assert int(state_b["kv"]["index"]) == int(state["kv"]["index"]) == 12
+    np.testing.assert_allclose(np.asarray(logits_b, np.float32),
+                               np.asarray(logits_l[:, -1], np.float32),
+                               atol=2e-3, rtol=2e-3)
+    assert (jnp.argmax(logits_b, -1) == jnp.argmax(logits_l[:, -1], -1)).all()
+
+
+def test_prefill_scan_fallback_matches_loop(ssm):
+    cfg, params = ssm
+    assert not api.is_attention_family(cfg)
+    tokens = jax.random.randint(jax.random.PRNGKey(6), (2, 10), 0,
+                                cfg.vocab_size, jnp.int32)
+    state = api.init_decode_state(cfg, 2, MAX_SEQ)
+    logits_s, _ = make_prefill_into_cache(cfg)(params, state, tokens)
+
+    state = api.init_decode_state(cfg, 2, MAX_SEQ)
+    logits_l = None
+    for i in range(tokens.shape[1]):
+        logits_l, state = api.decode_step(cfg, params, state,
+                                          tokens[:, i:i + 1])
+    assert (jnp.argmax(logits_s, -1) == jnp.argmax(logits_l[:, -1], -1)).all()
+
+
+# ---------------------------------------------------------------------------
+# (a) continuous batching == sequential greedy decode, exactly
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("family_fixture", ["dense", "ssm"])
+def test_engine_token_identical_to_sequential(family_fixture, request):
+    cfg, params = request.getfixturevalue(family_fixture)
+    eng = InferenceEngine(cfg, params, capacity=3, max_seq=MAX_SEQ)
+    # more requests than slots, mixed prompt lengths and decode budgets so
+    # slots get reused and admission groups prefill different shapes
+    specs = [(8, 5), (12, 7), (8, 4), (10, 6), (12, 3), (8, 8)]
+    reqs = []
+    for i, (plen, gen) in enumerate(specs):
+        prompt = _prompt(cfg, 50 + i, plen)
+        reqs.append((prompt, gen, eng.submit(prompt, gen)))
+    done = eng.run()
+    assert len(done) == len(specs)
+    for prompt, gen, req in reqs:
+        assert req.status == Status.FINISHED
+        assert len(req.generated) == gen
+        ref = _reference(cfg, params, prompt, gen)
+        assert req.generated == ref, \
+            f"{req.request_id}: {req.generated} != {ref}"
+
+
+# ---------------------------------------------------------------------------
+# (b) staggered arrivals join mid-flight without perturbing in-flight work
+# ---------------------------------------------------------------------------
+
+def test_staggered_arrivals_do_not_perturb_in_flight(dense):
+    cfg, params = dense
+    eng = InferenceEngine(cfg, params, capacity=4, max_seq=MAX_SEQ)
+    first = [eng.submit(_prompt(cfg, 80 + i, 8), 10) for i in range(2)]
+    eng.step()
+    eng.step()                       # first wave is mid-decode
+    assert all(len(r.generated) >= 2 for r in first)
+    partial = {r.request_id: list(r.generated) for r in first}
+
+    late = [eng.submit(_prompt(cfg, 90 + i, 10), 6) for i in range(2)]
+    eng.step()                       # late wave joins here
+    assert all(r.status == Status.RUNNING for r in late)
+    # in-flight prefixes were not rewritten by the join
+    for r in first:
+        assert r.generated[:len(partial[r.request_id])] \
+            == partial[r.request_id]
+    eng.run()
+    for i, r in enumerate(first):
+        assert r.generated == _reference(cfg, params, _prompt(cfg, 80 + i, 8),
+                                         10)
+    for i, r in enumerate(late):
+        assert r.generated == _reference(cfg, params,
+                                         _prompt(cfg, 90 + i, 10), 6)
+
+
+# ---------------------------------------------------------------------------
+# (c) admission control never exceeds the KV budget
+# ---------------------------------------------------------------------------
+
+def test_admission_respects_kv_budget(dense):
+    cfg, params = dense
+    slot_bytes = api.decode_state_bytes(cfg, 1, MAX_SEQ)
+    budget = 2 * slot_bytes + slot_bytes // 2      # room for exactly 2 slots
+    eng = InferenceEngine(cfg, params, capacity=4, max_seq=MAX_SEQ,
+                          kv_budget_bytes=budget)
+    assert eng.budget.max_concurrent() == 2
+    for i in range(5):
+        eng.submit(_prompt(cfg, 120 + i, 8), 5)
+    while eng.step():
+        assert eng.budget.reserved_bytes <= budget
+        assert len(eng.active_requests()) <= 2
+    assert eng.budget.peak_bytes <= budget
+    assert len(eng.completed) == 5                  # everyone still served
+    assert eng.budget.peak_bytes == 2 * slot_bytes  # and it did batch 2-wide
+
+
+def test_kv_budget_rejects_impossible_budget(dense):
+    cfg, params = dense
+    with pytest.raises(ValueError):
+        KVBudget(budget_bytes=10, slot_bytes=1000)
+    with pytest.raises(ValueError):
+        InferenceEngine(cfg, params, capacity=2, max_seq=MAX_SEQ,
+                        kv_budget_bytes=10)
+
+
+# ---------------------------------------------------------------------------
+# request bookkeeping / metrics
+# ---------------------------------------------------------------------------
+
+def test_request_metrics_populated(dense):
+    cfg, params = dense
+    eng = InferenceEngine(cfg, params, capacity=2, max_seq=MAX_SEQ)
+    req = eng.submit(_prompt(cfg, 7, 8), 4)
+    assert req.arrival_time is not None and req.status == Status.QUEUED
+    eng.run()
+    m = req.metrics()
+    assert m["status"] == "finished"
+    assert m["n_generated"] == 4 and m["prompt_len"] == 8
+    assert m["queue_wait_s"] >= 0 and m["ttft_s"] > 0 and m["e2e_s"] > 0
+    assert m["ttft_s"] <= m["e2e_s"]
+    s = eng.summary()
+    assert s["n_completed"] >= 1 and s["kv_peak_bytes"] == eng.slot_bytes
+
+
+def test_request_validation():
+    with pytest.raises(ValueError):
+        Request(prompt=np.zeros(4, np.int32), max_new_tokens=0)
+
+
+def test_submit_rejects_overlong_prompt(dense):
+    cfg, params = dense
+    eng = InferenceEngine(cfg, params, capacity=1, max_seq=16)
+    with pytest.raises(ValueError):
+        eng.submit(_prompt(cfg, 1, 14), 8)
+    # boundary fits: plen + gen - 1 rows (last token is never written back)
+    eng.submit(_prompt(cfg, 1, 12), 5)
+
+
+def test_engine_rejects_encoder_decoder_family():
+    cfg = get_config("whisper-medium", smoke=True)
+    with pytest.raises(ValueError, match="encoder-decoder"):
+        InferenceEngine(cfg, params=None, capacity=1, max_seq=16)
+
+
+# ---------------------------------------------------------------------------
+# multi-model serving (LRTF routing)
+# ---------------------------------------------------------------------------
+
+def test_multi_model_lrtf_serves_all_and_stays_identical(dense, ssm):
+    cfg_a, params_a = dense
+    cfg_b, params_b = ssm
+    server = MultiModelServer({
+        "qwen": InferenceEngine(cfg_a, params_a, capacity=2, max_seq=MAX_SEQ,
+                                model_name="qwen"),
+        "xlstm": InferenceEngine(cfg_b, params_b, capacity=2, max_seq=MAX_SEQ,
+                                 model_name="xlstm"),
+    }, scheduler=sharded_lrtf)
+    subs = []
+    for i in range(3):
+        pa, pb = _prompt(cfg_a, 200 + i, 8), _prompt(cfg_b, 300 + i, 8)
+        subs.append((cfg_a, params_a, pa, 6, server.submit("qwen", pa, 6)))
+        subs.append((cfg_b, params_b, pb, 4, server.submit("xlstm", pb, 4)))
+    out = server.run()
+    assert len(out["qwen"]) == 3 and len(out["xlstm"]) == 3
+    assert set(server.schedule_trace) == {"qwen", "xlstm"}
+    for cfg, params, prompt, gen, req in subs:
+        assert req.generated == _reference(cfg, params, prompt, gen)
+
+
+def test_multi_model_lrtf_prefers_more_remaining_work(dense):
+    cfg, params = dense
+    heavy = InferenceEngine(cfg, params, capacity=2, max_seq=MAX_SEQ,
+                            model_name="heavy")
+    light = InferenceEngine(cfg, params, capacity=2, max_seq=MAX_SEQ,
+                            model_name="light")
+    server = MultiModelServer({"heavy": heavy, "light": light})
+    server.submit("heavy", _prompt(cfg, 1, 8), 12)
+    server.submit("light", _prompt(cfg, 2, 8), 2)
+    # same measured per-token cost, 6x the outstanding tokens: LRTF must
+    # pick the heavy engine first
+    assert server.step() == "heavy"

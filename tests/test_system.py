@@ -57,8 +57,9 @@ from repro.optim import OptimizerConfig, init_state
 from repro.sharding import specs as sh
 from repro.training import make_train_step, make_decode_step
 
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.launch.mesh import make_mesh
+
+mesh = make_mesh((2, 4), ("data", "model"))
 for arch in ["qwen3-0.6b", "mixtral-8x22b", "xlstm-350m", "zamba2-1.2b",
              "whisper-medium"]:
     cfg = get_config(arch, smoke=True)
@@ -110,6 +111,12 @@ def test_serve_launcher_end_to_end():
     class A:
         arch = "qwen3-0.6b"; smoke = True; batch = 2
         prompt_len = 8; gen = 4; seed = 0
+        capacity = 2; max_seq = 0; kv_budget_mb = 0
+        stagger = 0; scheduler = "lrtf"
 
     out = serve(A())
-    assert out["generated_shape"] == [2, 4]
+    assert len(out["requests"]) == 2
+    assert all(r["n_generated"] == 4 and r["status"] == "finished"
+               for r in out["requests"])
+    assert out["engines"]["qwen3-0.6b"]["n_completed"] == 2
+    assert len(out["sample"]) == 4
