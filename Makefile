@@ -3,12 +3,13 @@
 #   make test        - full tier-1 suite (the driver's acceptance gate)
 #   make test-fast   - quick signal: skips the slow subprocess/system suites
 #   make bench-smoke - serving + kernel benchmark smoke (prints CSV + JSON)
+#   make plan-smoke  - session plan dry-run: emit + round-trip a Plan JSON
 
 PY ?= python
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export PYTHONPATH
 
-.PHONY: test test-fast bench-smoke
+.PHONY: test test-fast bench-smoke plan-smoke
 
 test:
 	$(PY) -m pytest -x -q
@@ -21,3 +22,7 @@ test-fast:
 bench-smoke:
 	$(PY) -m benchmarks.bench_serving --smoke
 	$(PY) -m benchmarks.run kernels
+
+plan-smoke:
+	$(PY) -m repro.launch.dryrun --plan --arch qwen3-0.6b,bert-large-1b \
+	    --smoke --budget-mb 18 --out results/plan_smoke.json

@@ -1,20 +1,27 @@
 """The paper's scalability claim (§4.2): "even a trillion-parameter model can
 now be trained on a single GPU out of the box, given sufficient DRAM."
 
-We demonstrate at container scale: a model whose parameters + optimizer
-state are ~8x the device budget trains on ONE virtual device purely through
-model spilling — the partitioner cuts it into shards that fit, the memory
-manager stages them through the device, and training proceeds normally.
+We demonstrate at container scale through one ``hydra.Session``: a model
+whose parameters + optimizer state are ~8x the device budget trains on ONE
+virtual device purely through model spilling — the planner cuts it into
+shards that fit, the memory manager stages them through the device, and
+training proceeds normally.  The same session machinery then evaluates the
+trained model forward-only under an even tighter budget (paper §6: spilled
+large-model inference) via an ``EvalJob``.
 
     PYTHONPATH=src python examples/large_model_single_device.py
 """
 
-import jax
+import hydra
 
 from repro.configs import get_config
-from repro.core import HydraConfig, ModelOrchestrator, ModelTask
 from repro.core.partitioner import tree_bytes
 from repro.data import DataConfig, SyntheticTokens
+
+
+def loader(cfg, seed):
+    return SyntheticTokens(DataConfig(batch_size=2, seq_len=64,
+                                      vocab_size=cfg.vocab_size, seed=seed))
 
 
 def main():
@@ -22,14 +29,13 @@ def main():
     cfg = get_config("qwen3-0.6b", smoke=True).replace(n_layers=8)
     budget = 14 * 10**6
 
-    data = SyntheticTokens(DataConfig(batch_size=2, seq_len=64,
-                                      vocab_size=cfg.vocab_size, seed=0))
-    task = ModelTask(cfg, data, lr=1e-3, epochs=1, steps_per_epoch=4,
-                     batch=2, seq=64)
-    orch = ModelOrchestrator([task], HydraConfig(
+    session = hydra.Session(hydra.HydraConfig(
         n_devices=1, device_budget_bytes=budget))
+    session.submit(hydra.TrainJob(cfg, loader(cfg, 0), lr=1e-3, epochs=1,
+                                  steps_per_epoch=4, batch=2, seq=64))
+    plan = session.plan()
 
-    m = orch.models[0]
+    m = session.train_execs[0]
     model_bytes = tree_bytes(m.store.params) * 4   # params+grads+adam
     print(f"model + optimizer state : {model_bytes / 1e6:7.1f} MB")
     print(f"device budget           : {budget / 1e6:7.1f} MB")
@@ -39,25 +45,27 @@ def main():
         print(f"  shard {s.index}: segments [{segs[0].name} .. "
               f"{segs[-1].name}]  {s.param_bytes / 1e6:6.1f} MB")
 
-    report = orch.train_models()
-    print(f"\nlosses: {[round(l, 4) for l in report.losses[0]]}")
-    dev = report.transfer[0]
+    report = session.run(plan)
+    train = report.train
+    print(f"\nlosses: {[round(l, 4) for l in train.losses[0]]}")
+    dev = train.transfer[0]
     print(f"promoted {dev.promoted_bytes / 1e6:.0f} MB / "
           f"demoted {dev.demoted_bytes / 1e6:.0f} MB through the device")
     assert model_bytes > budget, "model really is larger than the device"
     print("OK: larger-than-device model trained on one device via spilling")
 
-    # paper §6: the same machinery serves larger-than-device INFERENCE
-    from repro.core.orchestrator import SpilledInference
-    infer = SpilledInference(cfg, orch.model_params(0),
-                             device_budget_bytes=budget // 3,
-                             batch=2, seq=64)
-    batch = next(iter(SyntheticTokens(DataConfig(
-        batch_size=2, seq_len=64, vocab_size=cfg.vocab_size, seed=7))))
-    logits = infer(batch)
-    print(f"spilled inference: {infer.n_shards} shards, "
-          f"logits {tuple(logits.shape)}, "
-          f"loss {float(infer.loss(batch)):.4f}")
+    # paper §6: the same machinery serves larger-than-device INFERENCE —
+    # an EvalJob under a 3x tighter budget, forward-only through the
+    # shard queue, on the weights the session just trained
+    evaler = hydra.Session(hydra.HydraConfig(
+        n_devices=1, device_budget_bytes=budget // 3))
+    jid = evaler.submit(hydra.EvalJob(cfg, loader(cfg, 7), n_batches=1,
+                                      params=m.store.model_params(),
+                                      batch=2, seq=64))
+    rec = evaler.run().evals[jid]
+    print(f"spilled eval: {rec['n_shards']} shards, "
+          f"{rec['bytes_moved'] / 1e6:.0f} MB moved, "
+          f"loss {rec['mean_loss']:.4f}, ppl {rec['perplexity']:.1f}")
 
 
 if __name__ == "__main__":

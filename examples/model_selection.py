@@ -1,15 +1,14 @@
 """End-to-end model-selection driver (the paper's core workload):
-a 12-model hyper-parameter grid trained concurrently under SHARP, with the
-schedule compared against model/pipeline/task parallelism — a miniature of
-paper Fig 8.
+a hyper-parameter grid trained concurrently under SHARP through one
+``hydra.Session``, with the schedule compared against model/pipeline/task
+parallelism — a miniature of paper Fig 8.
 
     PYTHONPATH=src python examples/model_selection.py
 """
 
-import jax
+import hydra
 
 from repro.configs import get_config
-from repro.core import HydraConfig, ModelOrchestrator, ModelTask
 from repro.core import baselines as bl
 from repro.data import DataConfig, SyntheticTokens
 
@@ -20,39 +19,44 @@ BUDGET = 4500 * 10**3
 def main():
     cfg = get_config("bert-large-1b", smoke=True)
     grid = [(lr, bs) for lr in (1e-3, 1e-4, 1e-5) for bs in (2, 4)]
-    tasks = []
+
+    session = hydra.Session(hydra.HydraConfig(
+        n_devices=N_DEVICES, device_budget_bytes=BUDGET))
     for i, (lr, bs) in enumerate(grid):
         data = SyntheticTokens(DataConfig(batch_size=bs, seq_len=64,
                                           vocab_size=cfg.vocab_size, seed=i))
-        tasks.append(ModelTask(cfg, data, lr=lr, epochs=1, steps_per_epoch=2,
-                               seed=i, batch=bs, seq=64))
+        session.submit(hydra.TrainJob(cfg, data, lr=lr, epochs=1,
+                                      steps_per_epoch=2, seed=i,
+                                      batch=bs, seq=64))
 
-    orch = ModelOrchestrator(tasks, HydraConfig(
-        n_devices=N_DEVICES, device_budget_bytes=BUDGET))
-    report = orch.train_models()
+    report = session.run(session.plan())
+    train = report.train
 
-    steps = [t.epochs * t.steps_per_epoch for t in tasks]
-    mp = bl.model_parallel(orch.models, N_DEVICES, steps)
-    pipe = bl.pipeline(orch.models, N_DEVICES, steps)
+    steps = [j.epochs * j.steps_per_epoch
+             for j in session.jobs().values()
+             if isinstance(j, hydra.TrainJob)]
+    models = session.train_execs
+    mp = bl.model_parallel(models, N_DEVICES, steps)
+    pipe = bl.pipeline(models, N_DEVICES, steps)
 
     print(f"{'paradigm':18s} {'makespan':>12s} {'util':>6s}")
-    print(f"{'hydra (SHARP)':18s} {report.makespan:12.4f} "
-          f"{report.avg_utilization:6.0%}")
+    print(f"{'hydra (SHARP)':18s} {train.makespan:12.4f} "
+          f"{train.avg_utilization:6.0%}")
     print(f"{'model parallel':18s} {mp.makespan:12.4f} "
           f"{mp.avg_utilization:6.0%}")
     print(f"{'pipeline':18s} {pipe.makespan:12.4f} "
           f"{pipe.avg_utilization:6.0%}")
     try:
-        tp = bl.task_parallel(orch.models, N_DEVICES, steps, BUDGET)
+        tp = bl.task_parallel(models, N_DEVICES, steps, BUDGET)
         print(f"{'task parallel':18s} {tp.makespan:12.4f} "
               f"{tp.avg_utilization:6.0%}")
     except MemoryError as e:
         print(f"{'task parallel':18s} {'CRASH (OOM)':>12s}   — {e}")
 
-    best = min(report.losses, key=lambda m: report.losses[m][-1])
+    best = min(train.losses, key=lambda m: train.losses[m][-1])
     lr, bs = grid[best]
     print(f"\nbest config: model {best} (lr={lr}, batch={bs}) "
-          f"final loss {report.losses[best][-1]:.4f}")
+          f"final loss {train.losses[best][-1]:.4f}")
 
 
 if __name__ == "__main__":

@@ -1,16 +1,17 @@
-"""Quickstart — the paper's Fig-4 API in 20 lines.
+"""Quickstart — the paper's Fig-4 API through the unified session, in
+20 lines.
 
     PYTHONPATH=src python examples/quickstart.py
 
-Trains two BERT*-class models concurrently with SHARP on 2 virtual devices,
-then verifies the losses match plain sequential training.
+Trains two BERT*-class models concurrently with SHARP on 2 virtual devices
+(plan first, then execute the same Plan), then verifies the losses match
+plain sequential training.
 """
 
-import jax
+import hydra
 
 from repro.configs import get_config
-from repro.core import (HydraConfig, ModelOrchestrator, ModelTask,
-                        train_sequential_reference)
+from repro.core import ModelTask, train_sequential_reference
 from repro.data import DataConfig, SyntheticTokens
 
 
@@ -22,18 +23,22 @@ def loader(cfg, seed):
 def main():
     cfg = get_config("bert-large-1b", smoke=True)
 
-    task_0 = ModelTask(cfg, loader(cfg, 0), lr=1e-3, epochs=1,
-                       steps_per_epoch=3, batch=2, seq=64)
-    task_1 = ModelTask(cfg, loader(cfg, 1), lr=1e-4, epochs=1,
-                       steps_per_epoch=3, batch=2, seq=64)
-    orchestra = ModelOrchestrator(
-        [task_0, task_1],
-        HydraConfig(n_devices=2, device_budget_bytes=6 * 10**6))
-    report = orchestra.train_models()
+    session = hydra.Session(hydra.HydraConfig(
+        n_devices=2, device_budget_bytes=6 * 10**6))
+    session.submit(hydra.TrainJob(cfg, loader(cfg, 0), lr=1e-3, epochs=1,
+                                  steps_per_epoch=3, batch=2, seq=64))
+    session.submit(hydra.TrainJob(cfg, loader(cfg, 1), lr=1e-4, epochs=1,
+                                  steps_per_epoch=3, batch=2, seq=64))
 
-    print(f"makespan          {report.makespan * 1e3:.1f} ms (virtual)")
-    print(f"avg utilization   {report.avg_utilization:.0%}")
-    for mid, losses in report.losses.items():
+    plan = session.plan()        # partitions + spill placement + estimate
+    for jid, rec in plan.summary()["jobs"].items():
+        print(f"{jid}: {rec['n_shards']} shards, host {rec['host_mb']} MB")
+
+    report = session.run(plan)   # the dry-run's Plan IS the executed one
+    train = report.train
+    print(f"makespan          {train.makespan * 1e3:.1f} ms (virtual)")
+    print(f"avg utilization   {train.avg_utilization:.0%}")
+    for mid, losses in train.losses.items():
         print(f"model {mid} losses    {[round(l, 4) for l in losses]}")
 
     # Hydra's desideratum: no effect on accuracy

@@ -1,58 +1,62 @@
-"""Batched serving example: batched prefill into the decode cache, then a
-greedy decode loop — across three architecture families (dense GQA, MoE,
-and a recurrent xLSTM whose state is O(1) in context length).
+"""Batched serving example through one ``hydra.Session``: three
+architecture families (dense GQA, MoE, and a recurrent xLSTM whose state is
+O(1) in context length) served side by side, the session's LRTF policy
+picking which model's engine ticks next.
 
-``make_prefill_into_cache`` consumes the whole prompt in one jitted call on
-attention families and falls back to a scanned per-token loop on recurrent
-ones; the callers look identical.  For the full continuous-batching engine
-(request queue, KV-budget admission, multi-model LRTF routing) see
-``repro.serving`` / docs/serving.md.
+The dense model admits with power-of-two length buckets (mixed prompt
+lengths share one padded prefill trace); the recurrent model keeps
+exact-length groups — its state cannot be rewound past a pad tail — and so
+does the MoE model, whose capacity-bounded routing would let pad tokens
+displace real tokens' expert routes.  One model starts ``cold``: its
+params live spilled in the session's host store until the first request
+promotes them (SHARP-for-inference).
 
     PYTHONPATH=src python examples/serve_batched.py
 """
 
-import time
-
 import jax
 import jax.numpy as jnp
 
+import hydra
+
 from repro.configs import get_config
-from repro.models import api
-from repro.training import make_decode_step, make_prefill_into_cache
+
+ARCHS = ("qwen3-0.6b", "mixtral-8x22b", "xlstm-350m")
+GEN = 8
 
 
-def serve_one(arch: str, batch=2, prompt_len=16, gen=8):
-    cfg = get_config(arch, smoke=True)
-    params = api.init_params(cfg, jax.random.PRNGKey(0))
-    state = api.init_decode_state(cfg, batch, prompt_len + gen + 4)
-    prompt = jax.random.randint(jax.random.PRNGKey(1), (batch, prompt_len),
-                                0, cfg.vocab_size, jnp.int32)
-
-    prefill = jax.jit(make_prefill_into_cache(cfg))
-    t0 = time.perf_counter()
-    last_logits, state = prefill(params, state, prompt)
-    last_logits = jax.block_until_ready(last_logits)
-    prefill_s = time.perf_counter() - t0
-
-    decode = jax.jit(make_decode_step(cfg))
-    tok = jnp.argmax(last_logits, axis=-1)[:, None].astype(jnp.int32)
-    out = [tok]
-    t0 = time.perf_counter()
-    for _ in range(gen - 1):
-        tok, state = decode(params, state, tok)
-        out.append(tok)
-    jax.block_until_ready(tok)
-    decode_s = time.perf_counter() - t0
-    gen_toks = jnp.concatenate(out, axis=1)
-    mode = "batched" if api.is_attention_family(cfg) else "scanned"
-    print(f"{arch:18s} prefill[{mode:7s}] {prefill_s * 1e3:7.1f} ms   "
-          f"decode {batch * (gen - 1) / max(decode_s, 1e-9):8.1f} tok/s   "
-          f"sample {gen_toks[0, :6].tolist()}")
+def prompts_for(cfg, n, seed):
+    # deliberately mixed lengths: bucketing groups them into one prefill
+    lens = [11 + 2 * i for i in range(n)]
+    return [jax.random.randint(jax.random.PRNGKey(seed + i), (L,), 0,
+                               cfg.vocab_size, jnp.int32) for i, L in
+            enumerate(lens)]
 
 
 def main():
-    for arch in ("qwen3-0.6b", "mixtral-8x22b", "xlstm-350m"):
-        serve_one(arch)
+    session = hydra.Session(hydra.HydraConfig(scheduler="lrtf"))
+    for i, arch in enumerate(ARCHS):
+        cfg = get_config(arch, smoke=True)
+        session.submit(hydra.ServeJob(
+            cfg, seed=i, name=arch, capacity=4, max_seq=64,
+            bucket_sizes="pow2",            # no-op on moe/recurrent families
+            cold=(arch == "mixtral-8x22b")))
+
+    for i, arch in enumerate(ARCHS):
+        cfg = get_config(arch, smoke=True)
+        for p in prompts_for(cfg, 3, seed=10 * i):
+            session.submit_request(arch, p, GEN)
+
+    report = session.run()
+    for jid, rec in sorted(report.serve.items()):
+        cold = (f"  (cold: promoted {rec['promote_bytes'] / 1e6:.0f} MB "
+                f"in {rec['promote_s'] * 1e3:.0f} ms)"
+                if rec.get("cold") else "")
+        print(f"{rec['model']:18s} {rec['n_completed']} done   "
+              f"prefill_calls={rec['prefill_calls']} "
+              f"buckets={rec['bucket_sizes']}   "
+              f"decode {rec['decode_tok_per_s'] or 0:8.1f} tok/s{cold}")
+    print(f"schedule: {report.serve_trace[:12]} ...")
 
 
 if __name__ == "__main__":

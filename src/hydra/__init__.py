@@ -1,0 +1,22 @@
+"""``import hydra`` — the paper-named alias for ``repro.api``.
+
+The paper presents Hydra's user surface as a handful of names
+(Fig. 4: tasks in, orchestration out); this package re-exports the unified
+session API under that name so examples read like the paper:
+
+    import hydra
+
+    session = hydra.Session(hydra.HydraConfig(n_devices=2))
+    session.submit(hydra.TrainJob(cfg, loader))
+    report = session.run(session.plan())
+
+Everything here is a re-export; the implementation lives in ``repro.api``.
+"""
+
+from repro.api import (EvalJob, HydraConfig, JobPlan, JobSpec, JobState,
+                       Plan, ServeJob, Session, SessionReport, SpmdTrainJob,
+                       TrainJob)
+
+__all__ = ["Session", "SessionReport", "JobState",
+           "JobSpec", "TrainJob", "ServeJob", "EvalJob", "SpmdTrainJob",
+           "Plan", "JobPlan", "HydraConfig"]

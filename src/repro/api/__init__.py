@@ -1,0 +1,26 @@
+"""Unified Hydra session API: one resource-managed plan/execute entrypoint
+for training, serving, and eval.
+
+    from repro.api import Session, TrainJob, ServeJob, EvalJob
+    # (or: import hydra — the paper-named alias package)
+
+    session = Session(HydraConfig(n_devices=2, device_budget_bytes=6 * 10**6))
+    session.submit(TrainJob(cfg, loader, lr=1e-3, epochs=1))
+    session.submit(ServeJob(cfg, params=weights, cold=True))
+    plan = session.plan()        # JSON-serializable; == the dry-run's view
+    report = session.run(plan)
+
+The legacy surfaces (``repro.core.ModelOrchestrator``, ``launch/train.py``,
+``launch/serve.py``) are thin wrappers over this module; see docs/api.md
+for the migration table.
+"""
+
+from repro.api.jobs import (EvalJob, JobSpec, ServeJob, SpmdTrainJob,
+                            TrainJob)
+from repro.api.plan import JobPlan, Plan
+from repro.api.session import JobState, Session, SessionReport
+from repro.core.sharp import HydraConfig
+
+__all__ = ["Session", "SessionReport", "JobState",
+           "JobSpec", "TrainJob", "ServeJob", "EvalJob", "SpmdTrainJob",
+           "Plan", "JobPlan", "HydraConfig"]

@@ -1,0 +1,146 @@
+"""Typed job specs accepted by ``repro.api.Session``.
+
+One resource manager, many workloads (the unification ZeRO-Infinity and
+Nagrecha & Kumar's model-selection systems both argue for):
+
+* ``TrainJob``  — one model-selection candidate trained under SHARP
+  (wraps the fields of ``repro.core.ModelTask``).
+* ``ServeJob``  — one loaded model behind the continuous-batching slot-pool
+  engine; ``cold=True`` keeps the params spilled in the session's shared
+  host store until the first request promotes them (SHARP-for-inference).
+* ``EvalJob``   — fixed-batch loss/perplexity over a dataloader, executed
+  forward-only through the same shard queue as training.
+* ``SpmdTrainJob`` — single-model pjit training over a mesh (the substrate
+  Hydra schedules over); kept here so ``launch/train.py`` is a thin shell.
+
+A job is inert data; ``Session.plan`` turns submitted jobs into a ``Plan``
+and ``Session.run`` executes one.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional, Sequence
+
+
+@dataclass
+class JobSpec:
+    """Base spec: subclasses add workload fields; the session assigns ids."""
+    cfg: Any                                    # ArchConfig
+
+    kind: str = ""                              # set by subclasses
+
+    def job_id_prefix(self) -> str:
+        return self.kind or "job"
+
+
+@dataclass
+class TrainJob(JobSpec):
+    """One SHARP training candidate (paper Fig. 4's ModelTask, spec form)."""
+    dataloader: Optional[Any] = None            # iterable of batches
+    lr: float = 1e-3
+    epochs: int = 1
+    steps_per_epoch: int = 4
+    optimizer: str = "adamw"
+    params: Optional[Any] = None                # init'd from seed if None
+    seed: int = 0
+    batch: int = 2                              # partitioning pilot shape
+    seq: int = 128
+    early_stop: Optional[Callable[[list], bool]] = None
+    kind: str = field(default="train", init=False)
+
+    @classmethod
+    def from_task(cls, task) -> "TrainJob":
+        """Adapter from the legacy ``repro.core.ModelTask``."""
+        return cls(cfg=task.cfg, dataloader=task.dataloader, lr=task.lr,
+                   epochs=task.epochs, steps_per_epoch=task.steps_per_epoch,
+                   optimizer=task.optimizer, params=task.params,
+                   seed=task.seed, batch=task.batch, seq=task.seq,
+                   early_stop=task.early_stop)
+
+    def opt_config(self):
+        from repro.optim import optimizers as opt
+        # per-shard stepping composes with sequential training only when
+        # gradient clipping is off (clipping needs the global norm, which no
+        # single shard sees) — Hydra therefore disables it
+        return opt.OptimizerConfig(kind=self.optimizer, lr=self.lr,
+                                   grad_clip=0.0)
+
+
+@dataclass
+class ServeJob(JobSpec):
+    """One served model over the slot-pool continuous-batching engine.
+
+    ``bucket_sizes``: length buckets for prefill admission — a sequence of
+    ints, the string ``"pow2"`` for power-of-two buckets up to ``max_seq``,
+    or None for exact-length groups.  ``cold=True`` defers promotion: the
+    params live spilled in the session's host store and move to the device
+    only when the first request arrives (shards promoted through
+    ``core/spilling.py``, bytes accounted in the serve report).
+    """
+    params: Optional[Any] = None                # init'd from seed if None
+    seed: int = 0
+    name: Optional[str] = None                  # routing key; cfg.name default
+    capacity: int = 4
+    max_seq: int = 256
+    kv_budget_bytes: Optional[int] = None
+    window: Optional[int] = None
+    bucket_sizes: Optional[Any] = None          # Sequence[int] | "pow2" | None
+    cold: bool = False
+    kind: str = field(default="serve", init=False)
+
+    def resolved_buckets(self) -> Optional[Sequence[int]]:
+        if self.bucket_sizes is None:
+            return None
+        if isinstance(self.bucket_sizes, str):
+            if self.bucket_sizes != "pow2":
+                raise ValueError(
+                    f"bucket_sizes={self.bucket_sizes!r}: the only named "
+                    "scheme is 'pow2'; otherwise pass explicit ints")
+            from repro.serving.engine import pow2_buckets
+            return pow2_buckets(self.max_seq)
+        buckets = [int(b) for b in self.bucket_sizes]
+        if any(b < 1 for b in buckets):
+            raise ValueError(f"bucket_sizes={self.bucket_sizes!r}: "
+                             "buckets must be positive lengths")
+        if any(b > self.max_seq for b in buckets):
+            # the engine would silently drop these, making the plan's
+            # bucket list diverge from the live engine's
+            raise ValueError(f"bucket_sizes={self.bucket_sizes!r}: buckets "
+                             f"cannot exceed max_seq={self.max_seq}")
+        return buckets
+
+
+@dataclass
+class EvalJob(JobSpec):
+    """Fixed-batch loss/perplexity over a dataloader, forward-only through
+    the shard queue — a model bounded only by host DRAM evaluates on one
+    device, sharing the partition/spill machinery with training."""
+    dataloader: Optional[Any] = None
+    n_batches: int = 1
+    params: Optional[Any] = None                # init'd from seed if None
+    seed: int = 0
+    batch: int = 2                              # partitioning pilot shape
+    seq: int = 128
+    kind: str = field(default="eval", init=False)
+
+
+@dataclass
+class SpmdTrainJob(JobSpec):
+    """Single-model pjit training over a device mesh (no spilling — the
+    model fits; Hydra's multi-model layer schedules over sub-meshes of this
+    substrate).  Mirrors the ``launch/train.py`` CLI surface."""
+    steps: int = 100
+    batch: int = 8
+    seq: int = 256
+    accum: int = 1
+    lr: float = 3e-4
+    optimizer: str = "adamw"
+    seed: int = 0
+    data: Optional[str] = None                  # token .bin (else synthetic)
+    mesh: Any = "auto"                          # "auto" | "production" | Mesh
+    multi_pod: bool = False
+    log_every: int = 10
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 100
+    kind: str = field(default="spmd", init=False)

@@ -1,0 +1,717 @@
+"""``Session`` — one resource-managed plan/execute entrypoint for training,
+serving, and eval (the API the paper's Fig. 4 implies).
+
+A session owns the device memory model (``HydraConfig`` budgets), the
+host-side model stores, and the scheduling policy; typed ``JobSpec``s are
+submitted against it and planning is split from execution:
+
+    session = Session(HydraConfig(n_devices=2, device_budget_bytes=6e6))
+    t0 = session.submit(TrainJob(cfg, loader_0, lr=1e-3))
+    s0 = session.submit(ServeJob(cfg, params=weights, cold=True))
+    plan = session.plan()            # partitions + spill placement +
+    plan.save("plan.json")           #   schedule estimate, JSON round-trips
+    report = session.run(plan)       # same Plan object the dry-run inspected
+
+``session.run`` drives SHARP training with real JAX compute, ticking serve
+engines between train shard-units (one device fleet, train + serve
+interleaved), then drains serving and runs eval jobs forward-only through
+the shard queue.  Cold serve jobs keep their params spilled in the host
+store until the first request promotes them — the SHARP-for-inference
+entry point (ROADMAP).
+"""
+
+from __future__ import annotations
+
+import enum
+import itertools
+import time
+from dataclasses import dataclass, field
+from typing import Any, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api.jobs import (EvalJob, JobSpec, ServeJob, SpmdTrainJob,
+                            TrainJob)
+from repro.api.plan import (JobPlan, Plan, cfg_to_dict, partition_to_dict)
+from repro.core import partitioner as pt
+from repro.core import scheduler as sched
+from repro.core import shard_graph as sg
+from repro.core.sharp import (HydraConfig, ModelExec, RunReport,
+                              ShardFunctions, SharpExecutor, UnitEvent)
+from repro.core.spilling import HostModelStore, to_device
+
+
+class JobState(enum.Enum):
+    PENDING = "pending"
+    RUNNING = "running"
+    DONE = "done"
+    CANCELLED = "cancelled"
+
+
+@dataclass
+class SessionReport:
+    """What ``Session.run`` hands back: one record per workload kind."""
+    train: Optional[RunReport] = None
+    serve: dict[str, dict] = field(default_factory=dict)
+    evals: dict[str, dict] = field(default_factory=dict)
+    spmd: dict[str, dict] = field(default_factory=dict)
+    unit_trace: list[tuple] = field(default_factory=list)
+    serve_trace: list[str] = field(default_factory=list)
+    wall_time: float = 0.0
+
+
+@dataclass
+class _EvalExec:
+    """Forward-only execution state for one EvalJob."""
+    cfg: Any
+    plan: sg.ShardPlan
+    partition: pt.PartitionResult
+    store: HostModelStore
+    fns: ShardFunctions
+    losses: list = field(default_factory=list)
+    batches_done: int = 0
+    bytes_moved: int = 0
+    exhausted: bool = False      # dataloader ran dry before n_batches
+
+
+class Session:
+    """One resource manager, many workloads (train / serve / eval / spmd)."""
+
+    def __init__(self, hydra_cfg: Optional[HydraConfig] = None):
+        self.hc = (hydra_cfg or HydraConfig()).validate()
+        self._jobs: dict[str, JobSpec] = {}
+        self._state: dict[str, JobState] = {}
+        self._counters: dict[str, Any] = {}
+        self._model_ids = itertools.count()     # SHARP model ids, never reused
+        self._pick = sched.get_scheduler(self.hc.scheduler, seed=self.hc.seed)
+        # execution state, built by _materialize
+        self._train_execs: dict[str, ModelExec] = {}
+        self._engines: dict[str, Any] = {}          # job_id -> InferenceEngine
+        self._eval_execs: dict[str, _EvalExec] = {}
+        self._cold: dict[str, dict] = {}            # job_id -> spilled state
+        self._serve_names: dict[str, str] = {}      # routing name -> job_id
+        self._materialized: set[str] = set()
+        self._results: dict[str, dict] = {}         # finished spmd/eval jobs
+        self.serve_trace: list[str] = []
+        self.unit_trace: list[tuple] = []
+
+    def __enter__(self) -> "Session":
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        return False
+
+    # -- submit / poll / cancel lifecycle -----------------------------------
+    def submit(self, job: JobSpec) -> str:
+        """Register a job; returns its id (``train-0``, ``serve-1``, ...)."""
+        if not isinstance(job, (TrainJob, ServeJob, EvalJob, SpmdTrainJob)):
+            raise TypeError(f"not a JobSpec: {type(job).__name__}")
+        name = None
+        if isinstance(job, ServeJob):       # validate before registering
+            job.resolved_buckets()          # fail fast on a bad bucket spec
+            name = job.name or job.cfg.name
+            if name in self._serve_names:
+                raise ValueError(
+                    f"serve routing name {name!r} already taken by "
+                    f"{self._serve_names[name]}; give replicas distinct "
+                    "ServeJob.name values")
+        kind = job.kind
+        n = self._counters.setdefault(kind, itertools.count())
+        job_id = f"{kind}-{next(n)}"
+        self._jobs[job_id] = job
+        self._state[job_id] = JobState.PENDING
+        if name is not None:
+            self._serve_names[name] = job_id
+        return job_id
+
+    def jobs(self) -> dict[str, JobSpec]:
+        return dict(self._jobs)
+
+    def poll(self, job_id: str) -> dict:
+        """Status + per-kind progress for one job."""
+        job = self._require(job_id)
+        out: dict[str, Any] = {"job_id": job_id, "kind": job.kind,
+                               "status": self._state[job_id].value}
+        if job_id in self._train_execs:
+            m = self._train_execs[job_id]
+            out.update(losses_seen=len(m.losses), epoch=m.epoch,
+                       minibatch=m.minibatch, done=m.done,
+                       stopped_early=m.stopped_early)
+        if job_id in self._engines:
+            eng = self._engines[job_id]
+            out.update(n_completed=len(eng.completed),
+                       n_active=len(eng.active_requests()),
+                       n_queued=len(eng.queued_requests()))
+        if job_id in self._cold:
+            out.update(cold=True, promoted="engine" in self._cold[job_id])
+        if job_id in self._eval_execs:
+            out.update(batches_done=self._eval_execs[job_id].batches_done)
+        return out
+
+    def cancel(self, job_id: str) -> None:
+        """Withdraw a job: pending jobs never run; a running train job stops
+        at its next shard-unit boundary; a serve job drops its queue (active
+        requests finish their in-flight tokens); eval stops between batches."""
+        self._require(job_id)
+        if self._state[job_id] in (JobState.DONE, JobState.CANCELLED):
+            return
+        self._state[job_id] = JobState.CANCELLED
+        # free the routing name so a replacement ServeJob can claim it
+        self._serve_names = {n: j for n, j in self._serve_names.items()
+                             if j != job_id}
+        if job_id in self._train_execs:
+            self._train_execs[job_id].done = True
+        if job_id in self._engines:
+            from repro.serving import Status
+            eng = self._engines[job_id]
+            while eng.queue:
+                req = eng.queue.pop()
+                req.status = Status.CANCELLED    # terminal; req.done is True
+                req.finish_time = eng.clock()
+
+    def _settle(self, job_id: str, *, done: bool) -> None:
+        """Post-run state transition that never overwrites a cancel: done
+        jobs finish, truncated ones return to pending (run() resumes them)."""
+        if self._state[job_id] is JobState.CANCELLED:
+            return
+        self._state[job_id] = JobState.DONE if done else JobState.PENDING
+
+    def _require(self, job_id: str) -> JobSpec:
+        if job_id not in self._jobs:
+            raise KeyError(f"no job {job_id!r} (have {sorted(self._jobs)})")
+        return self._jobs[job_id]
+
+    def _active(self, cls) -> list[str]:
+        return [jid for jid, j in self._jobs.items()
+                if isinstance(j, cls)
+                and self._state[jid] is not JobState.CANCELLED]
+
+    # -- planning ------------------------------------------------------------
+    def plan(self, jobs: Optional[Sequence[JobSpec]] = None) -> Plan:
+        """Partition + place every submitted job; returns the serializable
+        Plan that ``run`` executes.  ``jobs`` is a convenience to submit and
+        plan in one call."""
+        for job in jobs or ():
+            self.submit(job)
+        self._materialize()
+        plan = Plan(hydra=self._hydra_dict())
+        for jid, job in self._jobs.items():
+            if self._state[jid] is JobState.CANCELLED:
+                continue
+            plan.jobs.append(self._plan_job(jid, job))
+        plan.schedule = self._schedule_estimate()
+        return plan
+
+    def _hydra_dict(self) -> dict:
+        import dataclasses
+        return dataclasses.asdict(self.hc)
+
+    def _plan_job(self, jid: str, job: JobSpec) -> JobPlan:
+        jp = JobPlan(job_id=jid, kind=job.kind, arch=cfg_to_dict(job.cfg))
+        partition = None
+        if jid in self._train_execs:
+            m = self._train_execs[jid]
+            partition = m.partition
+            jp.host_bytes = pt.tree_bytes(m.store.params)
+            jp.meta = {"epochs": m.epochs,
+                       "steps_per_epoch": m.steps_per_epoch,
+                       "minibatch_time_est": m.minibatch_time()}
+        elif jid in self._eval_execs:
+            ev = self._eval_execs[jid]
+            partition = ev.partition
+            jp.host_bytes = pt.tree_bytes(ev.store.params)
+            jp.meta = {"n_batches": self._jobs[jid].n_batches}
+        elif jid in self._cold:
+            partition = self._cold[jid]["partition"]
+            jp.host_bytes = pt.tree_bytes(self._cold[jid]["store"].params)
+            jp.meta = self._serve_meta(job, cold=True)
+        elif isinstance(job, ServeJob):
+            # warm: meta derives from the spec alone — no engine needed
+            jp.meta = self._serve_meta(job, cold=False)
+        elif isinstance(job, SpmdTrainJob):
+            jp.meta = {"steps": job.steps, "batch": job.batch,
+                       "seq": job.seq, "accum": job.accum,
+                       "mesh": str(job.mesh), "optimizer": job.optimizer}
+        if partition is not None:
+            jp.partition = partition_to_dict(partition)
+            jp.max_shard_bytes = max(
+                (s.param_bytes for s in partition.shards), default=0)
+        return jp
+
+    def _serve_meta(self, job: ServeJob, *, cold: bool) -> dict:
+        from repro.models import api as mapi
+        # mirror the engine: families without token-identical padded prefill
+        # (recurrent, moe) silently run exact-length admission, so the plan
+        # must not promise buckets they won't get
+        buckets = (job.resolved_buckets()
+                   if mapi.supports_padded_prefill(job.cfg) else None)
+        return {"capacity": job.capacity, "max_seq": job.max_seq,
+                "kv_budget_bytes": job.kv_budget_bytes,
+                "slot_bytes": mapi.decode_state_bytes(job.cfg, 1, job.max_seq),
+                "bucket_sizes": list(buckets) if buckets else None,
+                "cold": cold}
+
+    def _schedule_estimate(self) -> dict:
+        """Compute-only makespan estimate from the same greedy list scheduler
+        the executor uses (transfers excluded — the dry-run's lower bound)."""
+        unit_times = []
+        for jid in self._active(TrainJob):
+            if jid not in self._train_execs:
+                continue
+            m = self._train_execs[jid]
+            chain = [s.fwd_runtime for s in m.partition.shards] + \
+                [s.bwd_runtime for s in reversed(m.partition.shards)]
+            unit_times.append(chain * (m.epochs * m.steps_per_epoch))
+        est = None
+        if unit_times:
+            est = sched.greedy_list_makespan(
+                unit_times, self.hc.n_devices,
+                scheduler=sched.get_scheduler(self.hc.scheduler,
+                                              seed=self.hc.seed))
+        return {"scheduler": self.hc.scheduler,
+                "n_devices": self.hc.n_devices,
+                "est_makespan_s": est,
+                "n_train_units": sum(len(u) for u in unit_times)}
+
+    # -- materialization ------------------------------------------------------
+    def _materialize(self, plan: Optional[Plan] = None,
+                     only: Optional[str] = None) -> None:
+        """Build execution state (params, partitions, stores, engines) for
+        every submitted job — or just ``only``.  With ``plan`` given,
+        partitions come from the plan instead of being recomputed — the
+        dry-run and the real run consume the same object."""
+        for jid, job in self._jobs.items():
+            if only is not None and jid != only:
+                continue
+            if jid in self._materialized or \
+                    self._state[jid] is JobState.CANCELLED:
+                continue
+            planned = self._planned_partition(plan, jid)
+            if isinstance(job, TrainJob):
+                self._train_execs[jid] = self._build_train(jid, job, planned)
+            elif isinstance(job, EvalJob):
+                self._eval_execs[jid] = self._build_eval(job, planned)
+            elif isinstance(job, ServeJob):
+                if not job.cold and only is None:
+                    # a warm engine (param init + device-resident slot pool)
+                    # is execution state a plan does not need — engine()
+                    # builds it lazily at the first request or at run()
+                    continue
+                self._build_serve(jid, job, planned)
+            # SpmdTrainJob materializes nothing up front (pjit owns placement)
+            self._materialized.add(jid)
+
+    def _verify_plan_config(self, plan: Plan) -> None:
+        """Cheap checks that must run BEFORE materializing from the plan —
+        rejecting a foreign plan must not leave its partitions behind as
+        session state."""
+        import json as _json
+        # normalize both sides through JSON so a disk-reloaded plan (str
+        # dict keys, lists for tuples) compares equal to a live one
+        mine = _json.loads(_json.dumps(self._hydra_dict()))
+        theirs = _json.loads(_json.dumps(plan.hydra))
+        if theirs != mine:
+            diff = sorted(k for k in set(mine) | set(theirs)
+                          if mine.get(k) != theirs.get(k))
+            raise ValueError(
+                f"plan/session divergence: HydraConfig differs on {diff} — "
+                "the plan's schedule estimate would not describe this "
+                "session's execution; replan under the session's config")
+        planned_ids = {jp.job_id for jp in plan.jobs}
+        missing = [jid for jid, st in self._state.items()
+                   if st is not JobState.CANCELLED
+                   and jid not in planned_ids]
+        if missing:
+            raise ValueError(
+                f"plan/session divergence: session jobs {missing} are not "
+                "in the plan — replan so every job's placement is planned, "
+                "not silently recomputed")
+
+    def _verify_plan_partitions(self, plan: Plan) -> None:
+        """Post-materialization check: every planned partition must match
+        the materialized one shard-for-shard."""
+        for jp in plan.jobs:
+            if jp.partition is None or jp.job_id not in self._jobs:
+                continue
+            live = None
+            if jp.job_id in self._train_execs:
+                live = self._train_execs[jp.job_id].partition
+            elif jp.job_id in self._eval_execs:
+                live = self._eval_execs[jp.job_id].partition
+            elif jp.job_id in self._cold:
+                live = self._cold[jp.job_id]["partition"]
+            # structural identity only — a pilot pass overwrites measured
+            # runtimes in place, and re-measurement is legitimate
+            def skeleton(p):
+                return [(s.index, s.seg_lo, s.seg_hi) for s in p.shards]
+            if live is not None and skeleton(jp.shards()) != skeleton(live):
+                raise ValueError(
+                    f"plan/session divergence for {jp.job_id}: the plan's "
+                    "partition does not match the materialized one — replan "
+                    "or rebuild the session from this plan")
+
+    def _planned_partition(self, plan: Optional[Plan],
+                           jid: str) -> Optional[pt.PartitionResult]:
+        if plan is None:
+            return None
+        try:
+            jp = plan.job(jid)
+        except KeyError:
+            return None
+        if jp.arch["name"] != self._jobs[jid].cfg.name:
+            raise ValueError(
+                f"plan/job mismatch for {jid}: plan is for "
+                f"{jp.arch['name']!r}, session has "
+                f"{self._jobs[jid].cfg.name!r}")
+        return jp.shards() if jp.partition is not None else None
+
+    def _init_params(self, job) -> Any:
+        from repro.models import api as mapi
+        if job.params is not None:
+            return job.params
+        return mapi.init_params(job.cfg, jax.random.PRNGKey(job.seed))
+
+    def _spill_setup(self, cfg, params, *, batch: int, seq: int,
+                     train: bool, planned=None):
+        """Shared partition + store + shard-fns construction."""
+        shard_plan = sg.build_plan(cfg)
+        host = sg.prepare_host_params(cfg, jax.tree.map(np.asarray, params))
+        partition = planned if planned is not None else pt.partition(
+            cfg, host, shard_plan,
+            budget_bytes=self.hc.device_budget_bytes,
+            batch=batch, seq=seq, oracle=self.hc.partition_oracle,
+            buffer_frac=self.hc.buffer_frac, train=train)
+        return shard_plan, partition
+
+    def _build_train(self, jid: str, job: TrainJob, planned) -> ModelExec:
+        cfg = job.cfg
+        params = self._init_params(job)
+        shard_plan, partition = self._spill_setup(
+            cfg, params, batch=job.batch, seq=job.seq, train=True,
+            planned=planned)
+        ocfg = job.opt_config()
+        store = HostModelStore(cfg, shard_plan, params, ocfg, partition)
+        fns = ShardFunctions(cfg, shard_plan, partition, ocfg)
+        # monotonic, never reused: a cancel between materializations must
+        # not make a later job collide with an existing exec's id (RunReport
+        # keys losses by model_id)
+        model_id = next(self._model_ids)
+        return ModelExec(
+            model_id=model_id, cfg=cfg, plan=shard_plan,
+            partition=partition, store=store, fns=fns,
+            data_iter=iter(job.dataloader), epochs=job.epochs,
+            steps_per_epoch=job.steps_per_epoch, early_stop=job.early_stop)
+
+    def _build_eval(self, job: EvalJob, planned) -> _EvalExec:
+        from repro.optim import optimizers as opt
+        cfg = job.cfg
+        params = self._init_params(job)
+        shard_plan, partition = self._spill_setup(
+            cfg, params, batch=job.batch, seq=job.seq, train=False,
+            planned=planned)
+        ocfg = opt.OptimizerConfig(grad_clip=0.0)
+        store = HostModelStore(cfg, shard_plan, params, ocfg, partition)
+        fns = ShardFunctions(cfg, shard_plan, partition, ocfg)
+        return _EvalExec(cfg=cfg, plan=shard_plan, partition=partition,
+                         store=store, fns=fns)
+
+    def _build_serve(self, jid: str, job: ServeJob, planned) -> None:
+        from repro.optim import optimizers as opt
+        params = self._init_params(job)
+        if not job.cold:
+            self._engines[jid] = self._make_engine(job, params)
+            return
+        # cold: params stay spilled in the shared host store; the partition
+        # records the promotion plan, the first request executes it
+        shard_plan, partition = self._spill_setup(
+            job.cfg, params, batch=1, seq=job.max_seq, train=False,
+            planned=planned)
+        store = HostModelStore(job.cfg, shard_plan, params,
+                               opt.OptimizerConfig(grad_clip=0.0), partition)
+        self._cold[jid] = {"store": store, "partition": partition,
+                           "promote_bytes": 0, "promote_s": 0.0}
+
+    def _make_engine(self, job: ServeJob, params):
+        from repro.serving import InferenceEngine
+        return InferenceEngine(
+            job.cfg, params, capacity=job.capacity, max_seq=job.max_seq,
+            kv_budget_bytes=job.kv_budget_bytes, window=job.window,
+            model_name=job.name or job.cfg.name,
+            bucket_sizes=job.resolved_buckets())
+
+    def _promote_cold(self, jid: str) -> None:
+        """First request for a cold model: promote its shards out of the
+        host store (core/spilling byte accounting) and build the engine."""
+        cold = self._cold[jid]
+        job: ServeJob = self._jobs[jid]          # type: ignore[assignment]
+        store, partition = cold["store"], cold["partition"]
+        t0 = time.perf_counter()
+        # the transfer itself is the single to_device below; the spilling
+        # store's per-shard accounting prices it shard-by-shard
+        moved = sum(store.shard_transfer_bytes(s, train=False)
+                    for s in partition.shards)
+        params = to_device(store.model_params())
+        jax.block_until_ready(jax.tree.leaves(params)[0])
+        cold["promote_bytes"] = moved
+        cold["promote_s"] = time.perf_counter() - t0
+        cold["engine"] = self._engines[jid] = self._make_engine(job, params)
+
+    # -- serving surface ------------------------------------------------------
+    def engine(self, target: str):
+        """The live engine for a serve job id or routing name (promotes a
+        cold model if needed)."""
+        jid = self._serve_names.get(target, target)
+        job = self._require(jid)
+        if not isinstance(job, ServeJob):
+            raise TypeError(f"{jid} is a {job.kind} job, not serve")
+        if jid not in self._materialized:
+            # just this job: answering a serve request must not force param
+            # init/partitioning for every pending train job in the session
+            self._materialize(only=jid)
+        if jid not in self._engines:
+            self._promote_cold(jid)
+        return self._engines[jid]
+
+    def submit_request(self, target: str, prompt, max_new_tokens: int, **kw):
+        """Enqueue one generation request on a serve job (by id or name)."""
+        jid = self._serve_names.get(target, target)
+        self._require(jid)
+        if self._state[jid] is JobState.CANCELLED:
+            raise ValueError(f"{jid} is cancelled")
+        return self.engine(jid).submit(prompt, max_new_tokens, **kw)
+
+    def serve_has_work(self) -> bool:
+        return any(e.has_work() for e in self._engines.values())
+
+    def serve_tick(self) -> Optional[str]:
+        """One serving tick: the session's scheduling policy picks which
+        model's engine steps (LRTF keeps the model with the most outstanding
+        tokens moving).  Returns the model name stepped, or None if idle.
+
+        Deliberately not delegated to ``MultiModelServer``: that wrapper
+        snapshots its engine dict at construction, while a session's engine
+        set grows mid-run as cold models promote."""
+        eligible = [(jid, eng) for jid, eng in self._engines.items()
+                    if eng.has_work()]
+        if not eligible:
+            return None
+        progress = [sched.ModelProgress.from_remaining(
+            i, eng.remaining_seconds())
+            for i, (_, eng) in enumerate(eligible)]
+        _, eng = eligible[self._pick(progress)]
+        eng.step()
+        self.serve_trace.append(eng.model_name)
+        return eng.model_name
+
+    def drain_serving(self, max_ticks: Optional[int] = None) -> int:
+        ticks = 0
+        while self.serve_tick() is not None:
+            ticks += 1
+            if max_ticks is not None and ticks >= max_ticks:
+                break
+        return ticks
+
+    # -- execution ------------------------------------------------------------
+    def run(self, plan: Optional[Plan] = None, *,
+            max_units: Optional[int] = None) -> SessionReport:
+        """Execute a Plan: SHARP training with serve ticks between shard
+        units, then serving drain, then spmd and eval jobs."""
+        wall0 = time.perf_counter()
+        if plan is None:
+            # no external plan to honor: materialize directly instead of
+            # paying for plan serialization + schedule simulation
+            self._materialize()
+        else:
+            self._verify_plan_config(plan)   # before any state is built
+            self._materialize(plan)
+            self._verify_plan_partitions(plan)
+        report = SessionReport()
+
+        train_ids = [jid for jid in self._active(TrainJob)
+                     if jid in self._train_execs]
+        execs = sorted((self._train_execs[j] for j in train_ids),
+                       key=lambda m: m.model_id)
+        for jid in train_ids:
+            self._state[jid] = JobState.RUNNING
+
+        def on_unit(ev: UnitEvent):
+            self.unit_trace.append(ev.key())
+            self.serve_tick()        # serve jobs tick between shard units
+
+        if execs:
+            executor = SharpExecutor(self.hc, execs)
+            report.train = executor.run(max_units=max_units, on_unit=on_unit)
+        for jid in train_ids:
+            # don't stomp a mid-run cancel, and a max_units-truncated job
+            # goes back to pending (its exec state persists; run() resumes)
+            self._settle(jid, done=self._train_execs[jid].done)
+
+        for jid in self._active(SpmdTrainJob):
+            if self._state[jid] is JobState.DONE:    # resumed run(): done
+                report.spmd[jid] = self._results[jid]   # jobs don't re-run
+                continue
+            self._state[jid] = JobState.RUNNING
+            report.spmd[jid] = self._results[jid] = _run_spmd(self._jobs[jid])
+            self._settle(jid, done=True)
+
+        for jid in self._active(EvalJob):
+            if jid not in self._eval_execs:
+                continue
+            if self._state[jid] is JobState.DONE:
+                report.evals[jid] = self._results[jid]
+                continue
+            self._state[jid] = JobState.RUNNING
+            report.evals[jid] = self._results[jid] = self._run_eval(jid)
+            ev = self._eval_execs[jid]
+            self._settle(jid, done=ev.exhausted or ev.batches_done
+                         >= self._jobs[jid].n_batches)
+
+        self.drain_serving()
+        for jid in self._active(ServeJob):
+            if jid not in self._engines and jid not in self._cold:
+                self.engine(jid)     # run() brings warm engines live
+            eng = self._engines.get(jid)
+            rec: dict[str, Any] = {}
+            if eng is not None:
+                rec = dict(eng.summary())
+                rec["requests"] = [r.metrics() for r in eng.completed]
+            if jid in self._cold:
+                rec.update(cold=True,
+                           promote_bytes=self._cold[jid]["promote_bytes"],
+                           promote_s=round(self._cold[jid]["promote_s"], 4))
+                if eng is None:
+                    rec.update(promoted=False)   # never received a request
+            report.serve[jid] = rec
+            self._settle(jid, done=True)
+
+        report.unit_trace = list(self.unit_trace)
+        report.serve_trace = list(self.serve_trace)
+        report.wall_time = time.perf_counter() - wall0
+        return report
+
+    def _run_eval(self, jid: str) -> dict:
+        """Forward-only shard-queue loop: promote, apply, demote — loss per
+        batch, serve ticks between shard units."""
+        from repro.training.losses import softmax_xent
+        job: EvalJob = self._jobs[jid]           # type: ignore[assignment]
+        ev = self._eval_execs[jid]
+        it = iter(job.dataloader)
+        for _ in range(job.n_batches):
+            if self._state[jid] is JobState.CANCELLED:
+                break
+            try:
+                raw = next(it)
+            except StopIteration:
+                # a short dataloader ends the job with partial results; it
+                # must not crash run() and discard every other job's report
+                ev.exhausted = True
+                break
+            batch = jax.tree.map(jnp.asarray, raw)
+            from repro.core.orchestrator import spilled_forward
+            logits, moved = spilled_forward(
+                ev.store, ev.fns, ev.partition, batch,
+                on_shard=lambda _s: self.serve_tick())
+            ev.bytes_moved += moved
+            loss = float(softmax_xent(logits, batch["labels"]))
+            ev.losses.append(loss)
+            ev.batches_done += 1
+        mean = float(np.mean(ev.losses)) if ev.losses else None
+        return {"losses": ev.losses,
+                "mean_loss": mean,
+                "perplexity": float(np.exp(mean)) if mean is not None
+                else None,
+                "n_shards": len(ev.partition.shards),
+                "bytes_moved": ev.bytes_moved}
+
+    # -- introspection for thin wrappers -------------------------------------
+    @property
+    def train_execs(self) -> list[ModelExec]:
+        """ModelExecs ordered by model_id (ModelOrchestrator compat)."""
+        self._materialize()
+        return sorted(self._train_execs.values(), key=lambda m: m.model_id)
+
+
+# ---------------------------------------------------------------------------
+# SPMD execution (the pjit substrate; launch/train.py is a shell over this)
+# ---------------------------------------------------------------------------
+
+def _make_mesh(job: SpmdTrainJob):
+    from repro.launch.mesh import make_mesh, make_production_mesh
+    if not isinstance(job.mesh, str):
+        return job.mesh
+    if job.mesh == "production":
+        return make_production_mesh(multi_pod=job.multi_pod)
+    n = len(jax.devices())
+    if n == 1:
+        return make_mesh((1, 1), ("data", "model"))
+    nd = max(1, n // 2)
+    return make_mesh((nd, n // nd), ("data", "model"))
+
+
+def _run_spmd(job: SpmdTrainJob) -> dict:
+    """Single-model pjit training loop (moved from launch/train.py)."""
+    from repro import checkpoint as ckpt
+    from repro.data import DataConfig, Prefetcher, make_dataset
+    from repro.models import api
+    from repro.optim import OptimizerConfig, init_state
+    from repro.sharding import specs as sh
+    from repro.training import make_train_step
+
+    cfg = job.cfg
+    mesh = _make_mesh(job)
+    ocfg = OptimizerConfig(kind=job.optimizer, lr=job.lr,
+                           schedule="linear_warmup_cosine",
+                           warmup_steps=max(job.steps // 20, 1),
+                           total_steps=job.steps)
+
+    params = api.init_params(cfg, jax.random.PRNGKey(job.seed))
+    opt_state = init_state(ocfg, params)
+
+    pshard = sh.to_shardings(mesh, sh.param_specs(cfg, params, mesh))
+    oshard = sh.to_shardings(mesh, sh.opt_state_specs(cfg, opt_state, mesh))
+    params = jax.device_put(params, pshard)
+    opt_state = jax.device_put(opt_state, oshard)
+
+    data_cfg = DataConfig(batch_size=job.batch, seq_len=job.seq,
+                          vocab_size=cfg.vocab_size, seed=job.seed,
+                          path=job.data)
+    if cfg.family in ("audio", "vlm"):
+        def synth():
+            i = 0
+            while True:
+                yield api.make_dummy_batch(cfg, job.batch, job.seq,
+                                           key=jax.random.PRNGKey(i))
+                i += 1
+        it = synth()
+    else:
+        it = iter(Prefetcher(iter(make_dataset(data_cfg)), depth=2))
+
+    step_fn = jax.jit(
+        make_train_step(cfg, ocfg, accum_steps=job.accum),
+        in_shardings=(pshard, oshard, None),
+        out_shardings=(pshard, oshard, None),
+        donate_argnums=(0, 1))
+
+    history = []
+    t0 = time.perf_counter()
+    for step in range(job.steps):
+        batch = next(it)
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        if step % job.log_every == 0 or step == job.steps - 1:
+            loss = float(metrics["loss"])
+            dt = time.perf_counter() - t0
+            tok_s = job.batch * job.seq * (step + 1) / dt
+            print(f"step {step:5d}  loss {loss:8.4f}  "
+                  f"gnorm {float(metrics['grad_norm']):7.3f}  "
+                  f"{tok_s:9.0f} tok/s")
+            history.append({"step": step, "loss": loss})
+        if job.ckpt_dir and step and step % job.ckpt_every == 0:
+            ckpt.save(f"{job.ckpt_dir}/step_{step}", params, step=step)
+    if job.ckpt_dir:
+        ckpt.save(f"{job.ckpt_dir}/step_{job.steps}", params,
+                  step=job.steps)
+    return {"history": history,
+            "final_loss": history[-1]["loss"] if history else None,
+            "params": api.param_count(params)}

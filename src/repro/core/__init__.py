@@ -11,10 +11,11 @@ from repro.core.scheduler import (ModelProgress, get_scheduler,
                                   greedy_list_makespan, optimal_makespan,
                                   sharded_lrtf)
 from repro.core.shard_graph import Segment, ShardPlan, build_plan
-from repro.core.sharp import HydraConfig, RunReport, SharpExecutor
+from repro.core.sharp import (HydraConfig, RunReport, SharpExecutor,
+                              UnitEvent)
 
 __all__ = ["ModelTask", "ModelOrchestrator", "train_sequential_reference",
-           "HydraConfig", "SharpExecutor", "RunReport",
+           "HydraConfig", "SharpExecutor", "RunReport", "UnitEvent",
            "partition", "PartitionResult", "Shard",
            "build_plan", "ShardPlan", "Segment",
            "sharded_lrtf", "get_scheduler", "optimal_makespan",

@@ -1,18 +1,22 @@
-"""Hydra's user-facing API (paper Fig. 4):
+"""Hydra's legacy user-facing API (paper Fig. 4):
 
     task_0 = ModelTask(cfg_0, dataloader_0, lr_0, epochs_0)
     task_1 = ModelTask(cfg_1, dataloader_1, lr_1, epochs_1)
     orchestra = ModelOrchestrator([task_0, task_1], hydra_cfg)
     report = orchestra.train_models()
 
-Everything below the API line is automated: partitioning (Algorithm 1),
-spilling, SHARP scheduling (Sharded-LRTF), double buffering.
+Since the unified session API landed (``repro.api`` / docs/api.md), both
+classes here are thin wrappers: ``ModelOrchestrator`` delegates to a
+``Session`` holding one ``TrainJob`` per task, and ``SpilledInference``
+mirrors what an ``EvalJob`` runs per batch.  The call signatures and
+semantics are unchanged — partitioning (Algorithm 1), spilling, SHARP
+scheduling (Sharded-LRTF), and double buffering all happen below the line.
 """
 
 from __future__ import annotations
 
-import dataclasses
-from dataclasses import dataclass, field
+import warnings
+from dataclasses import dataclass
 from typing import Any, Callable, Iterator, Optional
 
 import jax
@@ -21,10 +25,21 @@ import numpy as np
 
 from repro.core import partitioner as pt
 from repro.core import shard_graph as sg
-from repro.core.sharp import (HydraConfig, ModelExec, RunReport,
-                              ShardFunctions, SharpExecutor)
+from repro.core.sharp import HydraConfig, RunReport, ShardFunctions
 from repro.core.spilling import HostModelStore
 from repro.optim import optimizers as opt
+
+_warned = False
+
+
+def _deprecate_once(old: str, new: str) -> None:
+    global _warned
+    if _warned:
+        return
+    _warned = True
+    warnings.warn(f"{old} is a compatibility shim over {new}; "
+                  f"prefer {new} for new code (see docs/api.md)",
+                  DeprecationWarning, stacklevel=3)
 
 
 @dataclass
@@ -54,42 +69,25 @@ class ModelTask:
 
 
 class ModelOrchestrator:
-    """Automated multi-model trainer (API + Partitioner + MemMgr + Scheduler)."""
+    """Automated multi-model trainer — now a thin wrapper holding a
+    ``repro.api.Session`` with one ``TrainJob`` per task.  ``models`` and
+    the report shape are unchanged, so existing callers keep working."""
 
     def __init__(self, tasks: list[ModelTask],
                  hydra_cfg: Optional[HydraConfig] = None):
+        from repro.api import Session, TrainJob
+        _deprecate_once("ModelOrchestrator", "repro.api.Session")
         self.tasks = tasks
-        self.hc = hydra_cfg or HydraConfig()
-        self.models: list[ModelExec] = []
-        self._prepare()
-
-    def _prepare(self):
-        from repro.models import api
-        for mid, task in enumerate(self.tasks):
-            cfg = task.cfg
-            params = task.params if task.params is not None else \
-                api.init_params(cfg, jax.random.PRNGKey(task.seed))
-            plan = sg.build_plan(cfg)
-            host = sg.prepare_host_params(cfg, jax.tree.map(np.asarray,
-                                                            params))
-            partition = pt.partition(
-                cfg, host, plan,
-                budget_bytes=self.hc.device_budget_bytes,
-                batch=task.batch, seq=task.seq,
-                oracle=self.hc.partition_oracle,
-                buffer_frac=self.hc.buffer_frac)
-            ocfg = task.opt_config()
-            store = HostModelStore(cfg, plan, params, ocfg, partition)
-            fns = ShardFunctions(cfg, plan, partition, ocfg)
-            self.models.append(ModelExec(
-                model_id=mid, cfg=cfg, plan=plan, partition=partition,
-                store=store, fns=fns, data_iter=iter(task.dataloader),
-                epochs=task.epochs, steps_per_epoch=task.steps_per_epoch,
-                early_stop=task.early_stop))
+        self.session = Session(hydra_cfg)
+        self.hc = self.session.hc
+        for task in tasks:
+            self.session.submit(TrainJob.from_task(task))
+        # materialize eagerly: callers inspect .models before training
+        self.models = self.session.train_execs
 
     def train_models(self, *, max_units: Optional[int] = None) -> RunReport:
-        executor = SharpExecutor(self.hc, self.models)
-        return executor.run(max_units=max_units)
+        report = self.session.run(max_units=max_units)
+        return report.train
 
     def model_params(self, model_id: int):
         return self.models[model_id].store.model_params()
@@ -100,6 +98,24 @@ class ModelOrchestrator:
 # "model spilling, automated partitioning, and automated shard orchestration
 # all suffice already for out-of-the-box large model inference")
 # ---------------------------------------------------------------------------
+
+
+def spilled_forward(store, fns, partition, batch, *, on_shard=None):
+    """Forward-only shard queue: promote each shard, apply it, thread the
+    boundary activation — shared by ``SpilledInference`` and the session
+    API's ``EvalJob``.  Returns ``(logits, bytes_moved)``; ``on_shard``
+    fires after each shard unit (the session ticks serve engines there)."""
+    batch = jax.tree.map(jnp.asarray, batch)
+    act: dict = {}
+    moved = 0
+    for shard in partition.shards:
+        own, shared, _ = store.promote_shard(shard)
+        moved += store.shard_transfer_bytes(shard, train=False)
+        out, _ = fns.fwd(shard)(own, shared, act, batch)
+        act = out
+        if on_shard is not None:
+            on_shard(shard)
+    return act["logits"], moved
 
 
 class SpilledInference:
@@ -135,16 +151,10 @@ class SpilledInference:
 
     def __call__(self, batch):
         """batch -> logits, running the shard queue forward-only."""
-        import jax.numpy as jnp
-        batch = jax.tree.map(jnp.asarray, batch)
-        act = {}
-        for shard in self.partition.shards:
-            own, shared, _ = self.store.promote_shard(shard)
-            self.bytes_moved += self.store.shard_transfer_bytes(
-                shard, train=False)
-            out, _ = self.fns.fwd(shard)(own, shared, act, batch)
-            act = out
-        return act["logits"]
+        logits, moved = spilled_forward(self.store, self.fns,
+                                        self.partition, batch)
+        self.bytes_moved += moved
+        return logits
 
     def loss(self, batch):
         logits = self(batch)

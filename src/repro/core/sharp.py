@@ -59,6 +59,35 @@ class HydraConfig:
     # in virtual seconds; None = always available
     device_windows: Optional[dict] = None
 
+    def validate(self) -> "HydraConfig":
+        """Fail fast on configs that would otherwise die deep inside the
+        partitioner or event loop.  repro.api.Session calls this on entry."""
+        if self.n_devices < 1:
+            raise ValueError(
+                f"n_devices={self.n_devices}: need at least one device")
+        if self.device_budget_bytes <= 0:
+            raise ValueError(
+                f"device_budget_bytes={self.device_budget_bytes}: must be a "
+                "positive byte count (e.g. 11*10**9 for an RTX 2080 Ti)")
+        if not 0.0 < self.buffer_frac <= 0.5:
+            raise ValueError(
+                f"buffer_frac={self.buffer_frac}: the double-buffer loading "
+                "zone must be in (0, 0.5] — the paper finds ~0.05 suffices; "
+                "above 0.5 the buffer would outsize the active region")
+        if self.link_bw <= 0:
+            raise ValueError(
+                f"link_bw={self.link_bw}: host<->device bandwidth must be "
+                "positive B/s (e.g. 16e9 for PCIe3 x16)")
+        if self.scheduler not in sched.SCHEDULERS:
+            raise ValueError(
+                f"unknown scheduler {self.scheduler!r}: choose one of "
+                f"{sorted(sched.SCHEDULERS)}")
+        if self.partition_oracle not in ("analytic", "probe"):
+            raise ValueError(
+                f"unknown partition_oracle {self.partition_oracle!r}: "
+                "choose 'analytic' or 'probe'")
+        return self
+
 
 @dataclass
 class Unit:
@@ -207,6 +236,27 @@ class ModelExec:
             remaining_in_minibatch=rem_t)
 
 
+@dataclass(frozen=True)
+class UnitEvent:
+    """One executed shard unit, reported through ``SharpExecutor.run``'s
+    ``on_unit`` hook — the seam where a Session ticks serve engines between
+    train shard-units and where plan/execute equivalence is audited."""
+    model_id: int
+    shard_index: int
+    direction: str
+    minibatch: int
+    epoch: int
+    device: int
+    start: float
+    end: float
+
+    def key(self) -> tuple:
+        """Schedule identity (virtual timestamps excluded: they shift with
+        measured runtimes, the discrete assignment is the schedule)."""
+        return (self.model_id, self.shard_index, self.direction,
+                self.minibatch, self.epoch, self.device)
+
+
 @dataclass
 class RunReport:
     makespan: float
@@ -318,7 +368,9 @@ class SharpExecutor:
             m.saved_acts.pop(("exit", shard.index), None)
 
     # -- event loop -----------------------------------------------------------
-    def run(self, *, max_units: Optional[int] = None) -> RunReport:
+    def run(self, *, max_units: Optional[int] = None,
+            on_unit: Optional[Callable[[UnitEvent], None]] = None
+            ) -> RunReport:
         wall0 = time.perf_counter()
         for m in self.models:
             m.build_minibatch_queue()
@@ -402,6 +454,11 @@ class SharpExecutor:
             self._execute_unit(m, unit)
             self.units_executed += 1
             dev.charge_demotion(shard_bytes)
+            if on_unit is not None:
+                on_unit(UnitEvent(
+                    model_id=m.model_id, shard_index=unit.shard.index,
+                    direction=unit.direction, minibatch=unit.minibatch,
+                    epoch=unit.epoch, device=d, start=start, end=end))
 
             # ---- advance model state -------------------------------------
             m.cursor += 1

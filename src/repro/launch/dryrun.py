@@ -211,6 +211,61 @@ class _null:
         return False
 
 
+# ---------------------------------------------------------------------------
+# Session plan dry-run: the partition/spill/schedule view of a workload,
+# without executing a single unit.  The Plan written here is the SAME object
+# repro.api.Session.run consumes — plan once, inspect, then execute.
+# ---------------------------------------------------------------------------
+
+def _plan_loader(cfg, batch, seq, seed):
+    from repro.models import api as mapi
+
+    class L:
+        def __iter__(self):
+            def gen():
+                i = 0
+                while True:
+                    k = jax.random.fold_in(jax.random.PRNGKey(seed), i)
+                    yield mapi.make_dummy_batch(cfg, batch, seq, key=k)
+                    i += 1
+            return gen()
+
+    return L()
+
+
+def plan_dryrun(args) -> dict:
+    """Build a Session over --arch TrainJobs, emit its Plan as JSON, and
+    verify the JSON round-trips byte-identically."""
+    from repro.api import Plan, Session, TrainJob
+    from repro.core.sharp import HydraConfig
+
+    archs = [a.strip() for a in (args.arch or "qwen3-0.6b").split(",")
+             if a.strip()]
+    session = Session(HydraConfig(
+        n_devices=args.n_devices,
+        device_budget_bytes=int(args.budget_mb * 10**6)))
+    for i, arch in enumerate(archs):
+        cfg = get_config(arch, smoke=args.smoke)
+        session.submit(TrainJob(cfg, _plan_loader(cfg, 2, 64, seed=i),
+                                epochs=1, steps_per_epoch=2, seed=i,
+                                batch=2, seq=64))
+    plan = session.plan()
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    plan.save(args.out)
+    reloaded = Plan.load(args.out)
+    if reloaded.to_json() != plan.to_json():
+        raise AssertionError(f"plan JSON does not round-trip ({args.out})")
+
+    summary = plan.summary()
+    print(json.dumps(summary))
+    est = summary["est_makespan_s"]
+    print(f"plan -> {args.out}  ({len(plan.jobs)} jobs, "
+          f"est makespan {est:.3e}s, round-trip OK)" if est is not None
+          else f"plan -> {args.out}  ({len(plan.jobs)} jobs, round-trip OK)")
+    return summary
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None)
@@ -219,7 +274,22 @@ def main():
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--both-meshes", action="store_true")
     ap.add_argument("--out", default="results/dryrun.jsonl")
+    # session-plan mode (repro.api): partition/spill/schedule, no execution
+    ap.add_argument("--plan", action="store_true",
+                    help="emit a Session Plan JSON instead of lowering HLO")
+    ap.add_argument("--smoke", action="store_true",
+                    help="(--plan) reduced configs")
+    ap.add_argument("--n-devices", type=int, default=2,
+                    help="(--plan) virtual device count")
+    ap.add_argument("--budget-mb", type=float, default=18,
+                    help="(--plan) per-device budget, MB")
     args = ap.parse_args()
+
+    if args.plan:
+        if args.out == "results/dryrun.jsonl":
+            args.out = "results/plan.json"
+        plan_dryrun(args)
+        return
 
     os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
     combos = []

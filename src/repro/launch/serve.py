@@ -1,13 +1,14 @@
-"""Serving CLI: a thin shell over ``repro.serving.InferenceEngine``.
+"""Serving CLI: a thin shell over ``repro.api.Session`` + ``ServeJob``.
 
 Synthetic requests are prefilled in one jitted call (batched prefill) and
 decoded with continuous batching over a fixed slot pool; greedy sampling
 (argmax) keeps outputs deterministic for tests.  ``--stagger`` drips
-requests in between decode steps so late arrivals join mid-flight, and a
+requests in between decode steps so late arrivals join mid-flight, a
 comma-separated ``--arch`` list serves several models at once with the
-LRTF policy from ``repro.core.scheduler`` picking which model steps next.
-Prints per-request latency/throughput metrics plus engine summaries as
-JSON.
+session's scheduling policy picking which model steps next, ``--buckets``
+pads prompt groups to power-of-two length buckets, and ``--cold`` starts
+models spilled in the host store (promoted on the first request).  Prints
+per-request latency/throughput metrics plus engine summaries as JSON.
 
   python -m repro.launch.serve --arch qwen3-0.6b --smoke \
       --batch 4 --prompt-len 32 --gen 16
@@ -23,19 +24,20 @@ import json
 import jax
 import jax.numpy as jnp
 
+from repro.api import ServeJob, Session
 from repro.configs import get_config
-from repro.models import api
-from repro.serving import InferenceEngine, MultiModelServer
+from repro.core.sharp import HydraConfig
 
 
-def build_engine(arch: str, args) -> InferenceEngine:
+def build_serve_job(arch: str, args) -> ServeJob:
     cfg = get_config(arch, smoke=args.smoke)
-    params = api.init_params(cfg, jax.random.PRNGKey(args.seed))
     max_seq = args.max_seq or (args.prompt_len + args.gen + 8)
     budget = (args.kv_budget_mb * 2**20) if args.kv_budget_mb else None
-    return InferenceEngine(cfg, params, capacity=args.capacity,
-                           max_seq=max_seq, kv_budget_bytes=budget,
-                           model_name=arch)
+    return ServeJob(cfg, seed=args.seed, name=arch, capacity=args.capacity,
+                    max_seq=max_seq, kv_budget_bytes=budget,
+                    bucket_sizes="pow2" if getattr(args, "buckets", False)
+                    else None,
+                    cold=getattr(args, "cold", False))
 
 
 def synth_prompts(cfg, n: int, prompt_len: int, seed: int):
@@ -46,29 +48,31 @@ def synth_prompts(cfg, n: int, prompt_len: int, seed: int):
 
 def serve(args) -> dict:
     archs = [a.strip() for a in args.arch.split(",") if a.strip()]
-    engines = {a: build_engine(a, args) for a in archs}
-    server = MultiModelServer(engines, scheduler=args.scheduler)
+    session = Session(HydraConfig(scheduler=args.scheduler, seed=args.seed))
+    jids = {a: session.submit(build_serve_job(a, args)) for a in archs}
 
     pending = []            # (model, prompt row) not yet submitted
-    for arch, eng in engines.items():
-        prompts = synth_prompts(eng.cfg, args.batch, args.prompt_len,
-                                args.seed)
+    for arch in archs:
+        cfg = session.jobs()[jids[arch]].cfg
+        prompts = synth_prompts(cfg, args.batch, args.prompt_len, args.seed)
         pending.extend((arch, prompts[i]) for i in range(args.batch))
 
     # submit everything up front, or drip --stagger at a time between ticks
     drip = args.stagger if args.stagger > 0 else len(pending)
-    while server.has_work() or pending:
+    while session.serve_has_work() or pending:
         for model, prompt in pending[:drip]:
-            server.submit(model, prompt, args.gen)
+            session.submit_request(model, prompt, args.gen)
         pending = pending[drip:]
-        server.step()
+        session.serve_tick()
 
-    out = {"engines": server.summary(),
-           "schedule": server.schedule_trace if len(archs) > 1 else None,
-           "requests": [r.metrics() for eng in engines.values()
-                        for r in eng.completed]}
+    report = session.run()     # no train/eval jobs: collects serve summaries
+    out = {"engines": {a: {k: v for k, v in report.serve[jids[a]].items()
+                           if k != "requests"} for a in archs},
+           "schedule": report.serve_trace if len(archs) > 1 else None,
+           "requests": [r for a in archs
+                        for r in report.serve[jids[a]].get("requests", [])]}
     if len(archs) == 1:
-        eng = engines[archs[0]]
+        eng = session.engine(archs[0])
         out["sample"] = eng.completed[0].generated[:8] if eng.completed else []
     return out
 
@@ -91,6 +95,10 @@ def main():
                     help="KV admission budget per model (0 = uncapped)")
     ap.add_argument("--stagger", type=int, default=0,
                     help="submit N requests per tick instead of all upfront")
+    ap.add_argument("--buckets", action="store_true",
+                    help="pad prompt groups to power-of-two length buckets")
+    ap.add_argument("--cold", action="store_true",
+                    help="start models spilled; promote on first request")
     ap.add_argument("--scheduler", default="lrtf",
                     choices=["lrtf", "srtf", "fifo", "random"])
     args = ap.parse_args()

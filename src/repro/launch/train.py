@@ -1,9 +1,10 @@
-"""SPMD training launcher.
+"""SPMD training launcher: a thin shell over ``repro.api.Session`` +
+``SpmdTrainJob``.
 
 Single-model pjit training over a mesh — the substrate Hydra's multi-model
 layer schedules over sub-meshes of.  On the dev container it runs real steps
 on the CPU device (reduced configs); on a pod the same driver drives the
-production mesh.
+production mesh.  The loop itself lives in ``repro.api.session._run_spmd``.
 
 Usage:
   python -m repro.launch.train --arch qwen3-0.6b --smoke --steps 20
@@ -15,90 +16,26 @@ from __future__ import annotations
 
 import argparse
 import json
-import time
-from typing import Optional
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro import checkpoint as ckpt
+from repro.api import Session, SpmdTrainJob
 from repro.configs import get_config
-from repro.data import DataConfig, Prefetcher, make_dataset
-from repro.models import api
-from repro.optim import OptimizerConfig, init_state
-from repro.sharding import specs as sh
-from repro.training import make_train_step
 
 
-def make_mesh_for_args(args):
-    from repro.launch.mesh import make_mesh, make_production_mesh
-    n = len(jax.devices())
-    if args.mesh == "production":
-        return make_production_mesh(multi_pod=args.multi_pod)
-    if n == 1:
-        return make_mesh((1, 1), ("data", "model"))
-    nd = max(1, n // 2)
-    return make_mesh((nd, n // nd), ("data", "model"))
+def job_from_args(args) -> SpmdTrainJob:
+    cfg = get_config(args.arch, smoke=args.smoke)
+    return SpmdTrainJob(
+        cfg, steps=args.steps, batch=args.batch, seq=args.seq,
+        accum=args.accum, lr=args.lr, optimizer=args.optimizer,
+        seed=args.seed, data=args.data, mesh=args.mesh,
+        multi_pod=args.multi_pod, log_every=args.log_every,
+        ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every)
 
 
 def train(args) -> dict:
-    cfg = get_config(args.arch, smoke=args.smoke)
-    mesh = make_mesh_for_args(args)
-    ocfg = OptimizerConfig(kind=args.optimizer, lr=args.lr,
-                           schedule="linear_warmup_cosine",
-                           warmup_steps=max(args.steps // 20, 1),
-                           total_steps=args.steps)
-
-    params = api.init_params(cfg, jax.random.PRNGKey(args.seed))
-    opt_state = init_state(ocfg, params)
-
-    pshard = sh.to_shardings(mesh, sh.param_specs(cfg, params, mesh))
-    oshard = sh.to_shardings(mesh, sh.opt_state_specs(cfg, opt_state, mesh))
-    params = jax.device_put(params, pshard)
-    opt_state = jax.device_put(opt_state, oshard)
-
-    data_cfg = DataConfig(batch_size=args.batch, seq_len=args.seq,
-                          vocab_size=cfg.vocab_size, seed=args.seed,
-                          path=args.data)
-    if cfg.family in ("audio", "vlm"):
-        def synth():
-            i = 0
-            while True:
-                yield api.make_dummy_batch(cfg, args.batch, args.seq,
-                                           key=jax.random.PRNGKey(i))
-                i += 1
-        it = synth()
-    else:
-        it = iter(Prefetcher(iter(make_dataset(data_cfg)), depth=2))
-
-    step_fn = jax.jit(
-        make_train_step(cfg, ocfg, accum_steps=args.accum),
-        in_shardings=(pshard, oshard, None),
-        out_shardings=(pshard, oshard, None),
-        donate_argnums=(0, 1))
-
-    history = []
-    t0 = time.perf_counter()
-    for step in range(args.steps):
-        batch = next(it)
-        params, opt_state, metrics = step_fn(params, opt_state, batch)
-        if step % args.log_every == 0 or step == args.steps - 1:
-            loss = float(metrics["loss"])
-            dt = time.perf_counter() - t0
-            tok_s = args.batch * args.seq * (step + 1) / dt
-            print(f"step {step:5d}  loss {loss:8.4f}  "
-                  f"gnorm {float(metrics['grad_norm']):7.3f}  "
-                  f"{tok_s:9.0f} tok/s")
-            history.append({"step": step, "loss": loss})
-        if args.ckpt_dir and step and step % args.ckpt_every == 0:
-            ckpt.save(f"{args.ckpt_dir}/step_{step}", params, step=step)
-    if args.ckpt_dir:
-        ckpt.save(f"{args.ckpt_dir}/step_{args.steps}", params,
-                  step=args.steps)
-    return {"history": history,
-            "final_loss": history[-1]["loss"] if history else None,
-            "params": api.param_count(params)}
+    session = Session()
+    jid = session.submit(job_from_args(args))
+    report = session.run()
+    return report.spmd[jid]
 
 
 def main():

@@ -70,6 +70,15 @@ def is_attention_family(cfg) -> bool:
     return cfg.family in ATTENTION_FAMILIES
 
 
+def supports_padded_prefill(cfg) -> bool:
+    """True when a right-padded prompt prefills token-identically to the
+    exact-length one (length-bucketed admission).  Needs a rewindable KV
+    cache AND per-token-independent mixing: capacity-bounded MoE routing
+    couples tokens — pad tokens consume expert capacity and displace real
+    tokens' routes — so only the non-MoE attention families qualify."""
+    return is_attention_family(cfg) and cfg.family != "moe"
+
+
 def decode_state_spec(cfg, batch: int, max_seq: int):
     """ShapeDtypeStruct tree of the decode state — zero allocation."""
     return jax.eval_shape(lambda: init_decode_state(cfg, batch, max_seq))

@@ -1,10 +1,11 @@
 """Continuous-batching multi-model inference (see docs/serving.md)."""
 
-from repro.serving.engine import InferenceEngine
+from repro.serving.engine import InferenceEngine, pow2_buckets
 from repro.serving.multi import MultiModelServer
 from repro.serving.queue import KVBudget, RequestQueue
 from repro.serving.request import Request, Status
 from repro.serving.slots import SlotPool, stack_trees, write_slots
 
 __all__ = ["InferenceEngine", "MultiModelServer", "KVBudget", "RequestQueue",
-           "Request", "Status", "SlotPool", "stack_trees", "write_slots"]
+           "Request", "Status", "SlotPool", "stack_trees", "write_slots",
+           "pow2_buckets"]

@@ -29,7 +29,9 @@ from repro.models import api
 from repro.serving.queue import KVBudget, RequestQueue
 from repro.serving.request import Request, Status
 from repro.serving.slots import SlotPool, write_slots
-from repro.training.train_loop import make_decode_step, make_prefill_into_cache
+from repro.training.train_loop import (make_decode_step,
+                                       make_padded_prefill_into_cache,
+                                       make_prefill_into_cache)
 
 
 @lru_cache(maxsize=None)
@@ -46,11 +48,30 @@ def _compiled_steps(cfg, window):
     return decode, prefill
 
 
+@lru_cache(maxsize=None)
+def _compiled_padded_prefill(cfg, window):
+    """Bucketed prefill: tokens padded to a bucket length, per-request true
+    lengths passed alongside.  Retraces per (n, bucket), not per (n, plen)."""
+    return jax.jit(jax.vmap(make_padded_prefill_into_cache(cfg, window=window),
+                            in_axes=(None, 0, 0, 0)), donate_argnums=(1,))
+
+
+def pow2_buckets(max_seq: int) -> tuple[int, ...]:
+    """Power-of-two length buckets covering [1, max_seq]."""
+    out, b = [], 1
+    while b < max_seq:
+        out.append(b)
+        b *= 2
+    out.append(max_seq)
+    return tuple(out)
+
+
 class InferenceEngine:
     def __init__(self, cfg, params, *, capacity: int = 8,
                  max_seq: int = 256, kv_budget_bytes: Optional[int] = None,
                  window: Optional[int] = None,
                  model_name: Optional[str] = None,
+                 bucket_sizes: Optional[Sequence[int]] = None,
                  clock=time.perf_counter):
         if cfg.is_encoder_decoder:
             # encdec decode states need real encoder output; init_decode_state
@@ -68,6 +89,21 @@ class InferenceEngine:
         self.slot_bytes = api.decode_state_bytes(cfg, 1, max_seq)
         self.budget = KVBudget(kv_budget_bytes, self.slot_bytes)
         self._decode, self._prefill = _compiled_steps(cfg, window)
+        # length-bucketed admission: pad prompt groups to the next bucket so
+        # prefill retraces are bounded per (n, bucket) instead of per
+        # (n, plen).  Families whose padded prefill is not token-identical
+        # (recurrent: no rewind; moe: pad tokens steal expert capacity)
+        # silently keep exact-length groups.
+        if bucket_sizes is not None and not api.supports_padded_prefill(cfg):
+            bucket_sizes = None
+        if bucket_sizes is not None:
+            # a bucket cannot outsize the cache; overlong prompts fall back
+            # to exact-length groups via _bucket
+            bucket_sizes = [b for b in bucket_sizes if 0 < b <= max_seq]
+        self.bucket_sizes = (tuple(sorted(set(bucket_sizes)))
+                             if bucket_sizes else None)
+        self._padded_prefill = (_compiled_padded_prefill(cfg, window)
+                                if self.bucket_sizes else None)
         self._active: dict[int, Request] = {}       # slot -> request
         self._tokens = np.zeros((capacity, 1, 1), np.int32)
         self.completed: list[Request] = []
@@ -130,6 +166,15 @@ class InferenceEngine:
                 del self._active[slot]
                 self.completed.append(req)
 
+    def _bucket(self, plen: int) -> int:
+        """Admission group key: smallest bucket >= plen (exact length when
+        bucketing is off or the prompt outgrows every bucket)."""
+        if self.bucket_sizes:
+            for b in self.bucket_sizes:
+                if b >= plen:
+                    return b
+        return plen
+
     def _admit(self) -> list[Request]:
         admitted: list[Request] = []
         while self.queue and self.pool.n_free and self.budget.reserve():
@@ -140,22 +185,33 @@ class InferenceEngine:
             admitted.append(req)
         if not admitted:
             return admitted
-        # one jitted prefill per same-length group: (n, 1, plen) tokens over
-        # n stacked fresh batch=1 states
+        # one jitted prefill per same-length group — (n, 1, plen) tokens over
+        # n stacked fresh batch=1 states — or per same-*bucket* group when
+        # length bucketing is on (mixed plens share one padded call)
         by_len: dict[int, list[Request]] = {}
         for req in admitted:
-            by_len.setdefault(req.prompt_len, []).append(req)
+            by_len.setdefault(self._bucket(req.prompt_len), []).append(req)
         for plen, group in sorted(by_len.items()):
             slots = [r.slot for r in group]
-            tokens = jnp.asarray(
-                np.stack([r.prompt for r in group])[:, None, :])
             states = self.pool.fresh_states(len(group))
             t0 = self.clock()
-            logits, states = self._prefill(self.params, states, tokens)
+            if self.bucket_sizes:
+                tokens = jnp.asarray(np.stack(
+                    [np.pad(r.prompt, (0, plen - r.prompt_len))
+                     for r in group])[:, None, :])
+                lengths = jnp.asarray([r.prompt_len for r in group], jnp.int32)
+                logits, states = self._padded_prefill(
+                    self.params, states, tokens, lengths)
+            else:
+                tokens = jnp.asarray(
+                    np.stack([r.prompt for r in group])[:, None, :])
+                logits, states = self._prefill(self.params, states, tokens)
             logits = jax.block_until_ready(logits)
             self.prefill_s += self.clock() - t0
             self.prefill_calls += 1
-            self.prefill_tokens += plen * len(group)
+            # true prompt tokens, not the padded bucket width — keeps
+            # prefill_tok_per_s comparable between bucketed and exact modes
+            self.prefill_tokens += sum(r.prompt_len for r in group)
             self.pool.state = write_slots(self.pool.state, states, slots)
             first = np.asarray(jnp.argmax(logits, axis=-1), np.int32)  # (n, 1)
             now = self.clock()
@@ -209,6 +265,8 @@ class InferenceEngine:
             "model": self.model_name,
             "capacity": self.pool.capacity,
             "max_seq": self.pool.max_seq,
+            "bucket_sizes": list(self.bucket_sizes)
+                if self.bucket_sizes else None,
             "slot_bytes": self.slot_bytes,
             "kv_budget_bytes": self.budget.budget_bytes,
             "kv_peak_bytes": self.budget.peak_bytes,

@@ -26,6 +26,7 @@ class Status(enum.Enum):
     QUEUED = "queued"
     RUNNING = "running"
     FINISHED = "finished"
+    CANCELLED = "cancelled"      # withdrawn while still queued
 
 
 @dataclass
@@ -57,6 +58,8 @@ class Request:
 
     @property
     def done(self) -> bool:
+        if self.status is Status.CANCELLED:
+            return True
         if len(self.generated) >= self.max_new_tokens:
             return True
         return bool(self.generated and self.eos_id is not None

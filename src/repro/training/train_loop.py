@@ -189,6 +189,49 @@ def make_prefill_into_cache(cfg, *, window: Optional[int] = None):
     return prefill_scan
 
 
+def make_padded_prefill_into_cache(cfg, *, window: Optional[int] = None):
+    """Length-bucketed prefill: consume a right-padded ``(b, bucket)`` prompt
+    whose true length is ``length``, returning the logits at position
+    ``length - 1`` and a state whose cache index is rewound to ``length``.
+
+    Correctness relies on two properties of the attention decode path:
+    the causal chunk mask means positions ``< length`` never attend to the
+    pad tail (padded key scores hit the -1e30 mask and underflow to exactly
+    zero weight, so the returned logits match an exact-length prefill); and
+    decode attention masks keys at ``kvpos > qpos``, so the garbage KV rows
+    the pad tail wrote at ``[length, bucket)`` are never read before the
+    decode loop overwrites them one row per step.  Serving engines therefore
+    retrace once per ``(n, bucket)`` instead of per ``(n, plen)``, with
+    token-identical outputs (tests/test_serving.py).
+
+    Dense/vlm attention families only: recurrent/hybrid states advance
+    through every consumed token and cannot be rewound past the pad tail,
+    and capacity-bounded MoE routing couples tokens — pad tokens consume
+    expert capacity and displace real tokens' routes, changing logits.
+    """
+    if not api.supports_padded_prefill(cfg):
+        raise ValueError(
+            f"{cfg.name} ({cfg.family}): padded prefill needs a rewindable "
+            "KV cache and per-token-independent mixing; recurrent/hybrid/"
+            "enc-dec/moe families must prefill at exact length")
+
+    def rewind(path, leaf, delta):
+        key = getattr(path[-1], "key", None) if path else None
+        return leaf - delta if key == "index" else leaf
+
+    def prefill(params, state, tokens, length):
+        bucket = tokens.shape[1]
+        logits, state = api.decode_step(cfg, params, state, tokens,
+                                        window=window)
+        last = jax.lax.dynamic_index_in_dim(logits, length - 1, axis=1,
+                                            keepdims=False)
+        state = jax.tree_util.tree_map_with_path(
+            partial(rewind, delta=bucket - length), state)
+        return last, state
+
+    return prefill
+
+
 def make_decode_step(cfg, *, window: Optional[int] = None):
     """One-token decode against a KV cache / recurrent state."""
 

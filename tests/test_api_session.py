@@ -1,0 +1,419 @@
+"""Unified session API (repro.api / hydra alias): plan/execute split,
+JSON plan round-trips, mixed train+serve sessions, EvalJob parity, cold
+serve promotion, config validation, and the submit/poll/cancel lifecycle."""
+
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import make_loader
+from repro.api import (EvalJob, HydraConfig, Plan, ServeJob, Session,
+                       TrainJob)
+from repro.configs import get_config
+from repro.models import api as mapi
+
+BUDGET = 18 * 10**6
+
+
+def _cfg():
+    return get_config("qwen3-0.6b", smoke=True)
+
+
+def _hc(**kw):
+    kw.setdefault("n_devices", 2)
+    kw.setdefault("device_budget_bytes", BUDGET)
+    return HydraConfig(**kw)
+
+
+def _train_jobs(cfg, n=2, steps=2):
+    return [TrainJob(cfg, make_loader(cfg, seed=i), lr=1e-3, epochs=1,
+                     steps_per_epoch=steps, seed=i, batch=2, seq=64)
+            for i in range(n)]
+
+
+def _prompt(cfg, seed, plen):
+    return np.asarray(jax.random.randint(
+        jax.random.PRNGKey(seed), (plen,), 0, cfg.vocab_size, jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# plan / execute split
+# ---------------------------------------------------------------------------
+
+def test_plan_is_json_serializable_and_round_trips():
+    cfg = _cfg()
+    session = Session(_hc())
+    for job in _train_jobs(cfg):
+        session.submit(job)
+    plan = session.plan()
+    text = plan.to_json()
+    json.loads(text)                       # valid JSON
+    reloaded = Plan.from_json(text)
+    assert reloaded.to_json() == text      # byte-identical round trip
+    assert [jp.job_id for jp in reloaded.jobs] == ["train-0", "train-1"]
+    # reconstructed partitions are identical dataclasses (incl. runtimes)
+    for jp, orig in zip(reloaded.jobs, session.train_execs):
+        assert jp.shards().shards == orig.partition.shards
+    assert plan.schedule["est_makespan_s"] > 0
+    assert plan.summary()["jobs"]["train-0"]["n_shards"] >= 2
+
+
+def test_plan_execute_equivalence_across_json_reload(tmp_path):
+    """A Plan re-loaded from JSON reproduces the original session's
+    partition, schedule, and losses exactly when run."""
+    cfg = _cfg()
+    hc = dict(pilot=False, fixed_unit_runtime=1e-3)
+
+    sess_a = Session(_hc(**hc))
+    for job in _train_jobs(cfg):
+        sess_a.submit(job)
+    plan_a = sess_a.plan()
+    path = tmp_path / "plan.json"
+    plan_a.save(str(path))
+
+    sess_b = Session(_hc(**hc))
+    for job in _train_jobs(cfg):
+        sess_b.submit(job)
+    plan_b = Plan.load(str(path))
+    report_b = sess_b.run(plan_b)
+    report_a = sess_a.run(plan_a)
+
+    for ma, mb in zip(sess_a.train_execs, sess_b.train_execs):
+        assert ma.partition.shards == mb.partition.shards
+    assert report_a.unit_trace == report_b.unit_trace
+    for mid in report_a.train.losses:
+        np.testing.assert_array_equal(report_a.train.losses[mid],
+                                      report_b.train.losses[mid])
+
+
+def test_run_rejects_diverged_plan():
+    cfg = _cfg()
+    sess = Session(_hc())
+    for job in _train_jobs(cfg, n=1):
+        sess.submit(job)
+    plan = sess.plan()
+    # corrupt the planned partition: pretend it has one giant shard
+    plan.jobs[0].partition["shards"] = [plan.jobs[0].partition["shards"][0]]
+    with pytest.raises(ValueError, match="divergence"):
+        sess.run(plan)
+
+
+# ---------------------------------------------------------------------------
+# mixed train + serve in one session
+# ---------------------------------------------------------------------------
+
+def test_mixed_train_serve_session():
+    cfg = _cfg()
+    interleaved = []
+
+    def spy_early_stop(losses):
+        # runs at each minibatch boundary, i.e. strictly during training
+        interleaved.append(len(session.serve_trace))
+        return False
+
+    session = Session(_hc())
+    t_jobs = _train_jobs(cfg, n=2, steps=2)
+    t_jobs[0].early_stop = spy_early_stop
+    for job in t_jobs:
+        session.submit(job)
+    sj = session.submit(ServeJob(cfg, seed=3, capacity=2, max_seq=32))
+    for i in range(2):
+        session.submit_request(sj, _prompt(cfg, 40 + i, 8), 4)
+
+    report = session.run()
+
+    assert report.train is not None and len(report.train.losses) == 2
+    rec = report.serve[sj]
+    assert rec["n_completed"] == 2
+    assert all(r["status"] == "finished" and r["n_generated"] == 4
+               for r in rec["requests"])
+    # serve engines genuinely ticked while training was still running
+    assert interleaved and interleaved[0] > 0
+    assert len(report.unit_trace) == report.train.units_executed
+
+
+def test_serve_outputs_match_singleton_engine():
+    """Tokens produced through a session tick-loop equal a lone engine's."""
+    cfg = _cfg()
+    params = mapi.init_params(cfg, jax.random.PRNGKey(5))
+    prompt = _prompt(cfg, 11, 9)
+
+    from repro.serving import InferenceEngine
+    ref_eng = InferenceEngine(cfg, params, capacity=2, max_seq=32)
+    ref_req = ref_eng.submit(prompt, 5)
+    ref_eng.run()
+
+    session = Session(_hc())
+    sj = session.submit(ServeJob(cfg, params=params, capacity=2, max_seq=32))
+    req = session.submit_request(sj, prompt, 5)
+    session.drain_serving()
+    assert req.generated == ref_req.generated
+
+
+# ---------------------------------------------------------------------------
+# EvalJob
+# ---------------------------------------------------------------------------
+
+def test_eval_job_matches_direct_forward_loop():
+    from repro.training.losses import softmax_xent
+    cfg = _cfg().replace(n_layers=4)
+    params = mapi.init_params(cfg, jax.random.PRNGKey(0))
+    batches = [mapi.make_dummy_batch(cfg, 2, 64,
+                                     key=jax.random.PRNGKey(100 + i))
+               for i in range(3)]
+
+    session = Session(_hc(n_devices=1, device_budget_bytes=10 * 10**6))
+    jid = session.submit(EvalJob(cfg, iter(batches), n_batches=3,
+                                 params=params, batch=2, seq=64))
+    rec = session.run().evals[jid]
+
+    assert rec["n_shards"] >= 2            # genuinely spilled
+    assert rec["bytes_moved"] > 0
+    direct = [float(softmax_xent(mapi.forward(cfg, params, b), b["labels"]))
+              for b in batches]
+    np.testing.assert_allclose(rec["losses"], direct, rtol=2e-4, atol=2e-4)
+    assert rec["perplexity"] == pytest.approx(np.exp(rec["mean_loss"]))
+
+
+# ---------------------------------------------------------------------------
+# cold serve (SHARP-for-inference entry point)
+# ---------------------------------------------------------------------------
+
+def test_cold_serve_promotes_on_first_request():
+    cfg = _cfg()
+    params = mapi.init_params(cfg, jax.random.PRNGKey(5))
+    prompt = _prompt(cfg, 11, 9)
+
+    from repro.serving import InferenceEngine
+    ref_eng = InferenceEngine(cfg, params, capacity=2, max_seq=32)
+    ref_req = ref_eng.submit(prompt, 5)
+    ref_eng.run()
+
+    session = Session(_hc(n_devices=1, device_budget_bytes=10 * 10**6))
+    sj = session.submit(ServeJob(cfg, params=params, capacity=2, max_seq=32,
+                                 cold=True))
+    assert session.poll(sj)["status"] == "pending"
+    plan = session.plan()
+    assert plan.job(sj).partition is not None        # spill placement planned
+    assert session.poll(sj)["promoted"] is False     # still host-resident
+
+    req = session.submit_request(sj, prompt, 5)      # promotion happens here
+    assert session.poll(sj)["promoted"] is True
+    report = session.run()
+
+    assert req.generated == ref_req.generated        # cold == warm outputs
+    rec = report.serve[sj]
+    assert rec["cold"] and rec["promote_bytes"] > 0
+
+
+# ---------------------------------------------------------------------------
+# validation + lifecycle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("bad", [
+    dict(buffer_frac=0.9), dict(buffer_frac=0.0),
+    dict(device_budget_bytes=0), dict(device_budget_bytes=-5),
+    dict(link_bw=0.0), dict(scheduler="bogus"), dict(n_devices=0),
+])
+def test_session_rejects_invalid_config(bad):
+    with pytest.raises(ValueError):
+        Session(HydraConfig(**bad))
+
+
+def test_submit_poll_cancel_lifecycle():
+    cfg = _cfg()
+    session = Session(_hc())
+    jobs = _train_jobs(cfg, n=3, steps=2)
+    jids = [session.submit(j) for j in jobs]
+    assert jids == ["train-0", "train-1", "train-2"]
+    assert all(session.poll(j)["status"] == "pending" for j in jids)
+
+    session.cancel(jids[1])
+    assert session.poll(jids[1])["status"] == "cancelled"
+
+    report = session.run()
+    # cancelled job never trained; survivors keep dense model ids 0..1
+    assert sorted(report.train.losses) == [0, 1]
+    assert all(len(v) == 2 for v in report.train.losses.values())
+    assert session.poll(jids[0])["status"] == "done"
+    assert session.poll(jids[1])["status"] == "cancelled"
+
+    with pytest.raises(KeyError):
+        session.poll("train-99")
+
+
+def test_cancel_then_submit_keeps_model_ids_unique():
+    """Regression: a cancel between materializations must not make a later
+    job collide with an existing exec's model_id (losses are keyed by it)."""
+    cfg = _cfg()
+    session = Session(_hc())
+    j0 = session.submit(TrainJob(cfg, make_loader(cfg, seed=0), epochs=1,
+                                 steps_per_epoch=2, batch=2, seq=64))
+    j1 = session.submit(TrainJob(cfg, make_loader(cfg, seed=1), epochs=1,
+                                 steps_per_epoch=2, batch=2, seq=64))
+    session.plan()                      # materializes j0 -> 0, j1 -> 1
+    session.cancel(j0)
+    session.submit(TrainJob(cfg, make_loader(cfg, seed=2), epochs=1,
+                            steps_per_epoch=2, batch=2, seq=64))
+    report = session.run()
+    # j0 trained nothing; j1 and j2 each trained 2 steps under distinct ids
+    assert sorted(report.train.losses) == [1, 2]
+    assert all(len(v) == 2 for v in report.train.losses.values())
+
+
+def test_run_rejects_plan_from_different_config():
+    cfg = _cfg()
+    sess_a = Session(_hc(scheduler="lrtf"))
+    sess_a.submit(TrainJob(cfg, make_loader(cfg, seed=0), epochs=1,
+                           steps_per_epoch=2, batch=2, seq=64))
+    plan = Plan.from_json(sess_a.plan().to_json())   # as if disk-reloaded
+
+    sess_b = Session(_hc(scheduler="fifo"))
+    sess_b.submit(TrainJob(cfg, make_loader(cfg, seed=0), epochs=1,
+                           steps_per_epoch=2, batch=2, seq=64))
+    with pytest.raises(ValueError, match="scheduler"):
+        sess_b.run(plan)
+
+
+def test_arch_config_json_round_trip_is_exact():
+    from repro.api.plan import cfg_from_dict, cfg_to_dict
+    from repro.configs import ASSIGNED_ARCHS
+    for arch in ASSIGNED_ARCHS:
+        cfg = get_config(arch, smoke=True)
+        back = cfg_from_dict(json.loads(json.dumps(cfg_to_dict(cfg))))
+        assert back == cfg and hash(back) == hash(cfg)
+
+
+def test_cancel_serve_job_marks_queued_requests_cancelled():
+    cfg = _cfg()
+    session = Session(_hc())
+    sj = session.submit(ServeJob(cfg, seed=0, capacity=1, max_seq=32))
+    # capacity 1: the second request stays queued behind the first
+    r1 = session.submit_request(sj, _prompt(cfg, 1, 8), 3)
+    r2 = session.submit_request(sj, _prompt(cfg, 2, 8), 3)
+    session.serve_tick()                     # r1 admitted, r2 still queued
+    session.cancel(sj)
+    assert r2.status.value == "cancelled" and r2.done
+    session.drain_serving()                  # in-flight r1 finishes
+    assert r1.status.value == "finished" and len(r1.generated) == 3
+
+
+def test_duplicate_serve_name_rejected():
+    cfg = _cfg()
+    session = Session(_hc())
+    session.submit(ServeJob(cfg, seed=0))
+    with pytest.raises(ValueError, match="routing name"):
+        session.submit(ServeJob(cfg, seed=1))
+    session.submit(ServeJob(cfg, seed=1, name="replica-b"))  # distinct: fine
+
+
+def test_run_rejects_plan_missing_a_session_job():
+    cfg = _cfg()
+    session = Session(_hc())
+    session.submit(TrainJob(cfg, make_loader(cfg, seed=0), epochs=1,
+                            steps_per_epoch=2, batch=2, seq=64))
+    plan = session.plan()
+    session.submit(TrainJob(cfg, make_loader(cfg, seed=1), epochs=1,
+                            steps_per_epoch=2, batch=2, seq=64))
+    with pytest.raises(ValueError, match="not\\s+in the plan"):
+        session.run(plan)
+
+
+def test_truncated_run_returns_job_to_pending():
+    cfg = _cfg()
+    session = Session(_hc())
+    jid = session.submit(TrainJob(cfg, make_loader(cfg, seed=0), epochs=1,
+                                  steps_per_epoch=4, batch=2, seq=64))
+    session.run(max_units=1)                 # far short of a full epoch
+    assert session.poll(jid)["status"] == "pending"
+    report = session.run()                   # resumes and completes
+    assert session.poll(jid)["status"] == "done"
+    assert len(report.train.losses[0]) == 4
+
+
+def test_plan_does_not_build_warm_engines():
+    cfg = _cfg()
+    session = Session(_hc())
+    sj = session.submit(ServeJob(cfg, seed=0, capacity=2, max_seq=32))
+    plan = session.plan()
+    # the plan records the serve spec, but no engine (device state) exists
+    assert plan.job(sj).meta["capacity"] == 2
+    assert "n_completed" not in session.poll(sj)
+    session.submit_request(sj, _prompt(cfg, 1, 8), 2)   # lazily built here
+    assert "n_completed" in session.poll(sj)
+
+
+def test_resumed_run_does_not_rerun_finished_eval():
+    cfg = _cfg()
+    session = Session(_hc())
+    session.submit(TrainJob(cfg, make_loader(cfg, seed=0), epochs=1,
+                            steps_per_epoch=2, batch=2, seq=64))
+    ej = session.submit(EvalJob(cfg, make_loader(cfg, seed=9), n_batches=2,
+                                seed=0, batch=2, seq=64))
+    first = session.run(max_units=1)         # truncates train; eval completes
+    assert len(first.evals[ej]["losses"]) == 2
+    second = session.run()                   # resumes train only
+    assert second.evals[ej]["losses"] == first.evals[ej]["losses"]
+    assert session.poll(ej)["batches_done"] == 2
+
+
+def test_cancelled_serve_name_is_reusable():
+    cfg = _cfg()
+    session = Session(_hc())
+    s0 = session.submit(ServeJob(cfg, seed=0, name="m"))
+    session.cancel(s0)
+    s1 = session.submit(ServeJob(cfg, seed=1, name="m"))   # name freed
+    req = session.submit_request("m", _prompt(cfg, 1, 8), 2)
+    session.drain_serving()
+    assert req.done and session.poll(s1)["n_completed"] == 1
+
+
+def test_short_eval_dataloader_yields_partial_results_not_crash():
+    cfg = _cfg()
+    batches = [mapi.make_dummy_batch(cfg, 2, 64)]      # 1 batch, 3 requested
+    session = Session(_hc())
+    session.submit(TrainJob(cfg, make_loader(cfg, seed=0), epochs=1,
+                            steps_per_epoch=2, batch=2, seq=64))
+    ej = session.submit(EvalJob(cfg, iter(batches), n_batches=3,
+                                seed=0, batch=2, seq=64))
+    report = session.run()                  # must not raise StopIteration
+    assert len(report.train.losses[0]) == 2             # train survived
+    assert len(report.evals[ej]["losses"]) == 1         # partial eval
+    assert session.poll(ej)["status"] == "done"
+
+
+def test_bad_bucket_spec_fails_at_submit():
+    cfg = _cfg()
+    session = Session(_hc())
+    with pytest.raises(ValueError, match="pow2"):
+        session.submit(ServeJob(cfg, bucket_sizes="pow2 "))
+    with pytest.raises(ValueError, match="positive"):
+        session.submit(ServeJob(cfg, bucket_sizes=(0, 8)))
+    with pytest.raises(ValueError, match="max_seq"):
+        session.submit(ServeJob(cfg, max_seq=64, bucket_sizes=(8, 512)))
+    # the failed submits registered nothing
+    assert session.jobs() == {}
+
+
+def test_rejected_foreign_plan_does_not_poison_session():
+    """Config verification must fire BEFORE materializing from the plan:
+    after the rejection, a plain run() partitions under the session's own
+    budget, not the foreign plan's."""
+    cfg = _cfg()
+    big = Session(HydraConfig(n_devices=2, device_budget_bytes=10**9))
+    big.submit(TrainJob(cfg, make_loader(cfg, seed=0), epochs=1,
+                        steps_per_epoch=2, batch=2, seq=64))
+    foreign = Plan.from_json(big.plan().to_json())
+    assert len(foreign.jobs[0].partition["shards"]) == 1   # fits whole
+
+    small = Session(_hc())                                 # 18MB: 2+ shards
+    small.submit(TrainJob(cfg, make_loader(cfg, seed=0), epochs=1,
+                          steps_per_epoch=2, batch=2, seq=64))
+    with pytest.raises(ValueError, match="HydraConfig differs"):
+        small.run(foreign)
+    report = small.run()       # must partition under 18MB and complete
+    assert len(small.train_execs[0].partition.shards) >= 2
+    assert len(report.train.losses[0]) == 2

@@ -259,3 +259,76 @@ def test_multi_model_lrtf_prefers_more_remaining_work(dense):
     # same measured per-token cost, 6x the outstanding tokens: LRTF must
     # pick the heavy engine first
     assert server.step() == "heavy"
+
+
+# ---------------------------------------------------------------------------
+# length-bucketed prefill admission
+# ---------------------------------------------------------------------------
+
+def test_pow2_buckets_cover_range():
+    from repro.serving import pow2_buckets
+    assert pow2_buckets(64) == (1, 2, 4, 8, 16, 32, 64)
+    assert pow2_buckets(40) == (1, 2, 4, 8, 16, 32, 40)
+    assert pow2_buckets(1) == (1,)
+
+
+def test_bucketed_prefill_tokens_identical_and_one_trace(dense):
+    """Mixed prompt lengths in one bucket share ONE prefill call, and every
+    request's token stream still equals its solo-decode reference."""
+    cfg, params = dense
+    lens = [9, 11, 13, 16]
+    prompts = [_prompt(cfg, 70 + i, L) for i, L in enumerate(lens)]
+
+    eng = InferenceEngine(cfg, params, capacity=4, max_seq=MAX_SEQ,
+                          bucket_sizes=(4, 8, 16, 32))
+    reqs = [eng.submit(p, 6) for p in prompts]
+    eng.run()
+
+    assert eng.prefill_calls == 1            # one (n=4, bucket=16) group
+    assert eng.summary()["bucket_sizes"] == [4, 8, 16, 32]
+    for p, r in zip(prompts, reqs):
+        assert r.generated == _reference(cfg, params, p, 6)
+
+
+def test_bucketed_vs_exact_engine_same_tokens(dense):
+    cfg, params = dense
+    prompts = [_prompt(cfg, 80 + i, L) for i, L in enumerate([5, 7, 12])]
+    exact = InferenceEngine(cfg, params, capacity=3, max_seq=MAX_SEQ)
+    bucketed = InferenceEngine(cfg, params, capacity=3, max_seq=MAX_SEQ,
+                               bucket_sizes=(8, 16))
+    reqs_e = [exact.submit(p, 5) for p in prompts]
+    reqs_b = [bucketed.submit(p, 5) for p in prompts]
+    exact.run()
+    bucketed.run()
+    assert exact.prefill_calls == 3 and bucketed.prefill_calls == 2
+    for re_, rb in zip(reqs_e, reqs_b):
+        assert re_.generated == rb.generated
+
+
+def test_bucketing_ignored_on_recurrent_family(ssm):
+    # recurrent state advances through every consumed token: no rewind, so
+    # the engine silently falls back to exact-length admission groups
+    cfg, params = ssm
+    eng = InferenceEngine(cfg, params, capacity=2, max_seq=MAX_SEQ,
+                          bucket_sizes=(8, 16))
+    assert eng.bucket_sizes is None
+    req = eng.submit(_prompt(cfg, 90, 6), 4)
+    eng.run()
+    assert req.generated == _reference(cfg, params, _prompt(cfg, 90, 6), 4)
+
+
+def test_padded_prefill_factory_rejects_recurrent(ssm):
+    from repro.training.train_loop import make_padded_prefill_into_cache
+    cfg, _ = ssm
+    with pytest.raises(ValueError, match="rewindable"):
+        make_padded_prefill_into_cache(cfg)
+
+
+def test_bucketing_ignored_on_moe_family():
+    # capacity-bounded expert routing couples tokens: pad tokens would
+    # consume expert capacity and displace real tokens' routes, so the
+    # engine must refuse padded prefill for moe just like recurrent
+    cfg = get_config("mixtral-8x22b", smoke=True)
+    eng = InferenceEngine(cfg, None, capacity=1, max_seq=16,
+                          bucket_sizes=(8, 16))
+    assert eng.bucket_sizes is None
