@@ -4,12 +4,13 @@
 #   make test-fast   - quick signal: skips the slow subprocess/system suites
 #   make bench-smoke - serving + kernel benchmark smoke (prints CSV + JSON)
 #   make plan-smoke  - session plan dry-run: emit + round-trip a Plan JSON
+#   make paged-smoke - paged vs slot-pool serving under one KV budget
 
 PY ?= python
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export PYTHONPATH
 
-.PHONY: test test-fast bench-smoke plan-smoke
+.PHONY: test test-fast bench-smoke plan-smoke paged-smoke
 
 test:
 	$(PY) -m pytest -x -q
@@ -26,3 +27,6 @@ bench-smoke:
 plan-smoke:
 	$(PY) -m repro.launch.dryrun --plan --arch qwen3-0.6b,bert-large-1b \
 	    --smoke --budget-mb 18 --out results/plan_smoke.json
+
+paged-smoke:
+	$(PY) -m benchmarks.bench_serving --paged

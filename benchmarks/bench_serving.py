@@ -131,19 +131,84 @@ def bench_continuous(arch="qwen3-0.6b", n_requests=8, capacity=4,
             "decode_speedup": round(engine_tps / seq_tps, 2)}
 
 
+def bench_paged(arch="qwen3-0.6b", n_requests=12, capacity=12, plen=8,
+                gen=8, max_seq=128, block_size=16,
+                budget_slots=3) -> dict:
+    """Paged vs slot-pool admission under ONE KV byte budget.
+
+    The slot pool charges ``max_seq`` rows per request, so a budget worth
+    ``budget_slots`` slots caps concurrency at ``budget_slots`` no matter
+    how short the prompts are; block-granular paging charges the actual
+    prompt + decode extent, so the same budget admits strictly more
+    short-prompt requests.  Reports peak admitted concurrency and peak KV
+    bytes for both engines (peak page bytes must stay <= budget —
+    tests/test_paging.py asserts it; the bench reports it).
+    """
+    cfg = get_config(arch, smoke=True)
+    params = api.init_params(cfg, jax.random.PRNGKey(0))
+    prompts = [np.asarray(jax.random.randint(
+        jax.random.PRNGKey(30 + i), (plen,), 0, cfg.vocab_size, jnp.int32))
+        for i in range(n_requests)]
+    budget = budget_slots * api.decode_state_bytes(cfg, 1, max_seq)
+
+    def drive(paged: bool):
+        eng = InferenceEngine(cfg, params, capacity=capacity,
+                              max_seq=max_seq, kv_budget_bytes=budget,
+                              paged=paged, block_size=block_size,
+                              model_name=arch)
+        for p in prompts:
+            eng.submit(p, gen)
+        t0 = time.perf_counter()
+        done = eng.run()
+        wall = time.perf_counter() - t0
+        n_gen = sum(len(r.generated) for r in done)
+        return eng, n_gen / wall
+
+    slot_eng, slot_tps = drive(paged=False)
+    paged_eng, paged_tps = drive(paged=True)
+    slot_sum, paged_sum = slot_eng.summary(), paged_eng.summary()
+    emit(f"serve_paged_concurrency_{arch}", 0.0,
+         f"{paged_sum['peak_concurrency']}vs{slot_sum['peak_concurrency']}")
+    emit(f"serve_paged_kv_peak_{arch}", 0.0,
+         f"{paged_sum['kv_page_peak_bytes']}B")
+    emit(f"serve_paged_{arch}", 0.0, f"{paged_tps:.0f}tok/s")
+    emit(f"serve_slot_{arch}", 0.0, f"{slot_tps:.0f}tok/s")
+    return {"arch": arch, "n_requests": n_requests, "capacity": capacity,
+            "prompt_len": plen, "gen": gen, "max_seq": max_seq,
+            "block_size": block_size,
+            "kv_budget_bytes": budget,
+            "slot_peak_concurrency": slot_sum["peak_concurrency"],
+            "paged_peak_concurrency": paged_sum["peak_concurrency"],
+            "concurrency_gain": round(paged_sum["peak_concurrency"]
+                                      / max(slot_sum["peak_concurrency"], 1),
+                                      2),
+            "slot_kv_peak_bytes": slot_sum["kv_peak_bytes"],
+            "paged_kv_reserved_peak_bytes": paged_sum["kv_peak_bytes"],
+            "paged_kv_page_peak_bytes": paged_sum["kv_page_peak_bytes"],
+            "page_peak_within_budget":
+                paged_sum["kv_page_peak_bytes"] <= budget,
+            "slot_tok_per_s": round(slot_tps, 1),
+            "paged_tok_per_s": round(paged_tps, 1)}
+
+
 def run() -> None:
     """Bench-harness entry (benchmarks.run suite 'serving')."""
     bench_prefill()
     bench_continuous()
+    bench_paged()
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="small shapes + JSON summary")
+    ap.add_argument("--paged", action="store_true",
+                    help="paged vs slot-pool admission under one KV budget")
     ap.add_argument("--arch", default="qwen3-0.6b")
     args = ap.parse_args()
-    if args.smoke:
+    if args.paged:
+        print(json.dumps({"paged": bench_paged(arch=args.arch)}))
+    elif args.smoke:
         out = {"prefill": bench_prefill(arch=args.arch),
                "continuous": bench_continuous(arch=args.arch)}
         print(json.dumps(out))

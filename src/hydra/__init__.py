@@ -13,10 +13,10 @@ session API under that name so examples read like the paper:
 Everything here is a re-export; the implementation lives in ``repro.api``.
 """
 
-from repro.api import (EvalJob, HydraConfig, JobPlan, JobSpec, JobState,
-                       Plan, ServeJob, Session, SessionReport, SpmdTrainJob,
-                       TrainJob)
+from repro.api import (AsyncRun, EvalJob, HydraConfig, JobPlan, JobSpec,
+                       JobState, Plan, ServeJob, Session, SessionReport,
+                       SpmdTrainJob, TrainJob)
 
-__all__ = ["Session", "SessionReport", "JobState",
+__all__ = ["Session", "SessionReport", "AsyncRun", "JobState",
            "JobSpec", "TrainJob", "ServeJob", "EvalJob", "SpmdTrainJob",
            "Plan", "JobPlan", "HydraConfig"]

@@ -18,9 +18,10 @@ for the migration table.
 from repro.api.jobs import (EvalJob, JobSpec, ServeJob, SpmdTrainJob,
                             TrainJob)
 from repro.api.plan import JobPlan, Plan
-from repro.api.session import JobState, Session, SessionReport
+from repro.api.session import (AsyncRun, JobState, Session,
+                               SessionReport)
 from repro.core.sharp import HydraConfig
 
-__all__ = ["Session", "SessionReport", "JobState",
+__all__ = ["Session", "SessionReport", "AsyncRun", "JobState",
            "JobSpec", "TrainJob", "ServeJob", "EvalJob", "SpmdTrainJob",
            "Plan", "JobPlan", "HydraConfig"]

@@ -77,6 +77,17 @@ class ServeJob(JobSpec):
     params live spilled in the session's host store and move to the device
     only when the first request arrives (shards promoted through
     ``core/spilling.py``, bytes accounted in the serve report).
+
+    ``paged=True`` replaces the fixed-slot decode pool with the
+    block-granular paged KV cache (``block_size`` rows per block):
+    admission reserves blocks for the request's actual prompt + decode
+    budget instead of a ``max_seq`` slot.  With ``kv_budget_bytes=None``
+    the pages charge the SESSION's device-0 ``DeviceMemory`` ledger — the
+    same budget SHARP shard promotions and double-buffers charge — so
+    mixed train+serve plans stay byte-accurate; a non-None
+    ``kv_budget_bytes`` keeps a private ledger of that size instead.
+    Families without a lane-independent pure KV cache (recurrent, moe)
+    silently keep the slot pool.
     """
     params: Optional[Any] = None                # init'd from seed if None
     seed: int = 0
@@ -87,6 +98,8 @@ class ServeJob(JobSpec):
     window: Optional[int] = None
     bucket_sizes: Optional[Any] = None          # Sequence[int] | "pow2" | None
     cold: bool = False
+    paged: bool = False
+    block_size: int = 16                        # KV rows per physical block
     kind: str = field(default="serve", init=False)
 
     def resolved_buckets(self) -> Optional[Sequence[int]]:

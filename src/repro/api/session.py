@@ -24,6 +24,7 @@ from __future__ import annotations
 
 import enum
 import itertools
+import threading
 import time
 from dataclasses import dataclass, field
 from typing import Any, Optional, Sequence
@@ -40,7 +41,7 @@ from repro.core import scheduler as sched
 from repro.core import shard_graph as sg
 from repro.core.sharp import (HydraConfig, ModelExec, RunReport,
                               ShardFunctions, SharpExecutor, UnitEvent)
-from repro.core.spilling import HostModelStore, to_device
+from repro.core.spilling import DeviceMemory, HostModelStore, to_device
 
 
 class JobState(enum.Enum):
@@ -81,6 +82,12 @@ class Session:
 
     def __init__(self, hydra_cfg: Optional[HydraConfig] = None):
         self.hc = (hydra_cfg or HydraConfig()).validate()
+        # session-owned device ledgers: SHARP promotions, double-buffers,
+        # and paged serving KV reservations all charge these same objects,
+        # so one byte budget arbitrates mixed train+serve residency
+        self.devices = [DeviceMemory(d, self.hc.device_budget_bytes,
+                                     self.hc.buffer_frac)
+                        for d in range(self.hc.n_devices)]
         self._jobs: dict[str, JobSpec] = {}
         self._state: dict[str, JobState] = {}
         self._counters: dict[str, Any] = {}
@@ -94,6 +101,11 @@ class Session:
         self._serve_names: dict[str, str] = {}      # routing name -> job_id
         self._materialized: set[str] = set()
         self._results: dict[str, dict] = {}         # finished spmd/eval jobs
+        self._async_run: Optional["AsyncRun"] = None
+        # serializes engine construction/promotion against the run thread:
+        # run_async advertises live submit_request, which may lazily build
+        # an engine while serve_tick is walking the engine dict
+        self._engine_lock = threading.Lock()
         self.serve_trace: list[str] = []
         self.unit_trace: list[tuple] = []
 
@@ -247,11 +259,28 @@ class Session:
         # must not promise buckets they won't get
         buckets = (job.resolved_buckets()
                    if mapi.supports_padded_prefill(job.cfg) else None)
-        return {"capacity": job.capacity, "max_seq": job.max_seq,
+        meta = {"capacity": job.capacity, "max_seq": job.max_seq,
                 "kv_budget_bytes": job.kv_budget_bytes,
                 "slot_bytes": mapi.decode_state_bytes(job.cfg, 1, job.max_seq),
                 "bucket_sizes": list(buckets) if buckets else None,
                 "cold": cold}
+        # mirror the engine's paged fallback: recurrent/moe families keep
+        # the slot pool, so the plan must not promise pages they won't get
+        paged = job.paged and mapi.supports_paging(job.cfg)
+        meta["paged"] = paged
+        if paged:
+            from repro.serving import blocks_for_rows
+            block_bytes = mapi.kv_block_bytes(job.cfg, job.block_size)
+            per_req = blocks_for_rows(job.max_seq, job.block_size)
+            meta.update(
+                block_size=job.block_size,
+                block_bytes=block_bytes,
+                max_blocks_per_request=per_req,
+                # worst case every lane pinned at max_seq — the cap the
+                # plan's memory split charges against the device budget
+                kv_page_cap_bytes=job.capacity * per_req * block_bytes,
+                shared_ledger=job.kv_budget_bytes is None)
+        return meta
 
     def _schedule_estimate(self) -> dict:
         """Compute-only makespan estimate from the same greedy list scheduler
@@ -273,7 +302,39 @@ class Session:
         return {"scheduler": self.hc.scheduler,
                 "n_devices": self.hc.n_devices,
                 "est_makespan_s": est,
-                "n_train_units": sum(len(u) for u in unit_times)}
+                "n_train_units": sum(len(u) for u in unit_times),
+                "memory": self._memory_split()}
+
+    def _serve_kv_cap(self) -> int:
+        """Worst-case bytes the session's shared-ledger paged serve jobs
+        can reserve (every lane pinned at max_seq) — the slice of the
+        device budget the partitioner must leave for KV pages."""
+        from repro.models import api as mapi
+        from repro.serving import blocks_for_rows
+        cap = 0
+        for jid in self._active(ServeJob):
+            job = self._jobs[jid]
+            if job.paged and job.kv_budget_bytes is None \
+                    and mapi.supports_paging(job.cfg):
+                cap += (job.capacity
+                        * blocks_for_rows(job.max_seq, job.block_size)
+                        * mapi.kv_block_bytes(job.cfg, job.block_size))
+        return cap
+
+    def _memory_split(self) -> dict:
+        """One device byte budget, split: train double-buffer reservation,
+        the worst-case serve KV-page cap (shared-ledger paged jobs), and
+        what is left for promoted shards.  Mirrors execution exactly:
+        ``_spill_setup`` partitions against ``budget - kv_cap`` and the
+        partitioner carves ``buffer_frac`` of THAT, so the buffer term
+        here is computed on the reduced budget too."""
+        budget = self.hc.device_budget_bytes
+        kv_cap = self._serve_kv_cap()
+        buffer_bytes = int((budget - kv_cap) * self.hc.buffer_frac)
+        return {"device_budget_bytes": budget,
+                "train_buffer_bytes": buffer_bytes,
+                "serve_kv_page_cap_bytes": kv_cap,
+                "shard_headroom_bytes": budget - buffer_bytes - kv_cap}
 
     # -- materialization ------------------------------------------------------
     def _materialize(self, plan: Optional[Plan] = None,
@@ -378,9 +439,20 @@ class Session:
         """Shared partition + store + shard-fns construction."""
         shard_plan = sg.build_plan(cfg)
         host = sg.prepare_host_params(cfg, jax.tree.map(np.asarray, params))
+        # shards are sized against the budget MINUS the serve KV-page cap:
+        # pages charge the same ledger promotions do, so a shard planned
+        # for the full budget would blow _check_budget mid-run whenever
+        # serve admission is active between its units
+        budget = self.hc.device_budget_bytes - self._serve_kv_cap()
+        if budget <= 0:
+            raise ValueError(
+                f"paged serve jobs reserve {self._serve_kv_cap()} B of KV "
+                f"pages, leaving no shard headroom in the "
+                f"{self.hc.device_budget_bytes} B device budget — shrink "
+                "ServeJob capacity/max_seq or give them kv_budget_bytes")
         partition = planned if planned is not None else pt.partition(
             cfg, host, shard_plan,
-            budget_bytes=self.hc.device_budget_bytes,
+            budget_bytes=budget,
             batch=batch, seq=seq, oracle=self.hc.partition_oracle,
             buffer_frac=self.hc.buffer_frac, train=train)
         return shard_plan, partition
@@ -435,11 +507,21 @@ class Session:
 
     def _make_engine(self, job: ServeJob, params):
         from repro.serving import InferenceEngine
+        kw: dict[str, Any] = {}
+        if job.paged:
+            kw.update(paged=True, block_size=job.block_size)
+            if job.kv_budget_bytes is None:
+                # pages charge the session's device-0 ledger — the budget
+                # SHARP promotions charge — unless the job pins a private cap
+                kw.update(ledger=self.devices[0])
+            else:
+                kw.update(kv_budget_bytes=job.kv_budget_bytes)
+        else:
+            kw.update(kv_budget_bytes=job.kv_budget_bytes)
         return InferenceEngine(
             job.cfg, params, capacity=job.capacity, max_seq=job.max_seq,
-            kv_budget_bytes=job.kv_budget_bytes, window=job.window,
-            model_name=job.name or job.cfg.name,
-            bucket_sizes=job.resolved_buckets())
+            window=job.window, model_name=job.name or job.cfg.name,
+            bucket_sizes=job.resolved_buckets(), **kw)
 
     def _promote_cold(self, jid: str) -> None:
         """First request for a cold model: promote its shards out of the
@@ -466,13 +548,14 @@ class Session:
         job = self._require(jid)
         if not isinstance(job, ServeJob):
             raise TypeError(f"{jid} is a {job.kind} job, not serve")
-        if jid not in self._materialized:
-            # just this job: answering a serve request must not force param
-            # init/partitioning for every pending train job in the session
-            self._materialize(only=jid)
-        if jid not in self._engines:
-            self._promote_cold(jid)
-        return self._engines[jid]
+        with self._engine_lock:      # one builder, even mid-async-run
+            if jid not in self._materialized:
+                # just this job: answering a serve request must not force
+                # param init/partitioning for every pending train job
+                self._materialize(only=jid)
+            if jid not in self._engines:
+                self._promote_cold(jid)
+            return self._engines[jid]
 
     def submit_request(self, target: str, prompt, max_new_tokens: int, **kw):
         """Enqueue one generation request on a serve job (by id or name)."""
@@ -483,7 +566,9 @@ class Session:
         return self.engine(jid).submit(prompt, max_new_tokens, **kw)
 
     def serve_has_work(self) -> bool:
-        return any(e.has_work() for e in self._engines.values())
+        with self._engine_lock:
+            engines = list(self._engines.values())
+        return any(e.has_work() for e in engines)
 
     def serve_tick(self) -> Optional[str]:
         """One serving tick: the session's scheduling policy picks which
@@ -493,7 +578,9 @@ class Session:
         Deliberately not delegated to ``MultiModelServer``: that wrapper
         snapshots its engine dict at construction, while a session's engine
         set grows mid-run as cold models promote."""
-        eligible = [(jid, eng) for jid, eng in self._engines.items()
+        with self._engine_lock:      # snapshot: submit_request may be
+            engines = list(self._engines.items())   # adding an engine now
+        eligible = [(jid, eng) for jid, eng in engines
                     if eng.has_work()]
         if not eligible:
             return None
@@ -514,19 +601,51 @@ class Session:
         return ticks
 
     # -- execution ------------------------------------------------------------
+    def run_async(self, plan: Optional[Plan] = None, *,
+                  max_units: Optional[int] = None) -> "AsyncRun":
+        """``run`` on a background executor thread, returning immediately.
+
+        ``poll(job_id)`` stays live while the run is in flight (execution
+        state is mutated in place), so callers can watch training epochs
+        advance or serve queues drain and keep submitting requests against
+        running serve jobs.  One run at a time: a second ``run_async``
+        before the first finishes raises.
+        """
+        self._guard_single_run()
+        self._async_run = AsyncRun(self, plan, max_units)
+        return self._async_run
+
+    def _guard_single_run(self) -> None:
+        """Two executors over the same stores/ledgers/data iterators would
+        silently corrupt each other — refuse, whether the other run is the
+        async handle's or another thread's plain run()."""
+        if self._async_run is not None and not self._async_run.done():
+            raise RuntimeError(
+                "a session run is already in flight; wait on its handle "
+                "(AsyncRun.result) before starting another")
+
     def run(self, plan: Optional[Plan] = None, *,
             max_units: Optional[int] = None) -> SessionReport:
         """Execute a Plan: SHARP training with serve ticks between shard
         units, then serving drain, then spmd and eval jobs."""
+        self._guard_single_run()
+        return self._run_impl(plan, max_units)
+
+    def _run_impl(self, plan: Optional[Plan],
+                  max_units: Optional[int]) -> SessionReport:
         wall0 = time.perf_counter()
-        if plan is None:
-            # no external plan to honor: materialize directly instead of
-            # paying for plan serialization + schedule simulation
-            self._materialize()
-        else:
-            self._verify_plan_config(plan)   # before any state is built
-            self._materialize(plan)
-            self._verify_plan_partitions(plan)
+        # under the engine lock: a concurrent submit_request during an
+        # async run materializes lazily via engine(), and two builders for
+        # one job would double-init params and clobber cold-serve state
+        with self._engine_lock:
+            if plan is None:
+                # no external plan to honor: materialize directly instead
+                # of paying for plan serialization + schedule simulation
+                self._materialize()
+            else:
+                self._verify_plan_config(plan)   # before any state is built
+                self._materialize(plan)
+                self._verify_plan_partitions(plan)
         report = SessionReport()
 
         train_ids = [jid for jid in self._active(TrainJob)
@@ -541,7 +660,12 @@ class Session:
             self.serve_tick()        # serve jobs tick between shard units
 
         if execs:
-            executor = SharpExecutor(self.hc, execs)
+            # train residency is rebuilt from the host stores each run;
+            # live KV-page reservations (in-flight serve requests) persist
+            for dm in self.devices:
+                dm.resident_bytes = 0
+                dm.buffered_bytes = 0
+            executor = SharpExecutor(self.hc, execs, devices=self.devices)
             report.train = executor.run(max_units=max_units, on_unit=on_unit)
         for jid in train_ids:
             # don't stomp a mid-run cancel, and a max_units-truncated job
@@ -631,6 +755,45 @@ class Session:
         """ModelExecs ordered by model_id (ModelOrchestrator compat)."""
         self._materialize()
         return sorted(self._train_execs.values(), key=lambda m: m.model_id)
+
+
+class AsyncRun:
+    """Handle for a background ``Session.run`` (``Session.run_async``).
+
+    ``done()`` is non-blocking; ``result(timeout)`` joins the executor
+    thread and either returns the ``SessionReport`` or re-raises whatever
+    the run raised — a failed background run never disappears silently.
+    """
+
+    def __init__(self, session: Session, plan: Optional[Plan],
+                 max_units: Optional[int]):
+        self._report: Optional[SessionReport] = None
+        self._exc: Optional[BaseException] = None
+
+        def _main():
+            try:
+                # _run_impl, not run(): the single-run guard would see THIS
+                # handle as the in-flight run and refuse its own execution
+                self._report = session._run_impl(plan, max_units)
+            except BaseException as e:          # re-raised in result()
+                self._exc = e
+
+        self._thread = threading.Thread(
+            target=_main, name="hydra-session-run", daemon=True)
+        self._thread.start()
+
+    def done(self) -> bool:
+        return not self._thread.is_alive()
+
+    def result(self, timeout: Optional[float] = None) -> SessionReport:
+        self._thread.join(timeout)
+        if self._thread.is_alive():
+            raise TimeoutError(
+                f"session run still executing after {timeout} s")
+        if self._exc is not None:
+            raise self._exc
+        assert self._report is not None
+        return self._report
 
 
 # ---------------------------------------------------------------------------

@@ -273,12 +273,21 @@ class RunReport:
 class SharpExecutor:
     """Event-driven SHARP loop over virtual devices with real JAX compute."""
 
-    def __init__(self, hydra_cfg: HydraConfig, models: list[ModelExec]):
+    def __init__(self, hydra_cfg: HydraConfig, models: list[ModelExec],
+                 devices: Optional[list[DeviceMemory]] = None):
         self.hc = hydra_cfg
         self.models = models
-        self.devices = [DeviceMemory(d, hydra_cfg.device_budget_bytes,
-                                     hydra_cfg.buffer_frac)
-                        for d in range(hydra_cfg.n_devices)]
+        # caller-owned ledgers (repro.api.Session) let serving KV pages and
+        # train double-buffers charge the SAME byte budget; standalone use
+        # keeps private per-device ledgers
+        self.devices = devices if devices is not None else [
+            DeviceMemory(d, hydra_cfg.device_budget_bytes,
+                         hydra_cfg.buffer_frac)
+            for d in range(hydra_cfg.n_devices)]
+        if len(self.devices) != hydra_cfg.n_devices:
+            raise ValueError(
+                f"{len(self.devices)} DeviceMemory ledgers for "
+                f"{hydra_cfg.n_devices} devices")
         self.pick = sched.get_scheduler(hydra_cfg.scheduler,
                                         seed=hydra_cfg.seed)
         self.exposed_transfer = 0.0

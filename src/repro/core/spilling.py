@@ -143,7 +143,14 @@ class HostModelStore:
 
 
 class DeviceMemory:
-    """Budget + double-buffer accounting for one virtual device."""
+    """Budget + double-buffer + KV-page accounting for one virtual device.
+
+    One ledger, three charges against the same byte budget: promoted shard
+    residency (``resident_bytes``), the double-buffer loading zone
+    (``buffered_bytes``), and serving KV-page reservations
+    (``kv_reserved_bytes`` — charged by page-granular admission in
+    ``repro.serving``, so mixed train+serve plans stay byte-accurate).
+    """
 
     def __init__(self, device_id: int, budget_bytes: int,
                  buffer_frac: float = 0.05):
@@ -152,7 +159,24 @@ class DeviceMemory:
         self.buffer_budget = int(budget_bytes * buffer_frac)
         self.resident_bytes = 0
         self.buffered_bytes = 0
+        self.kv_reserved_bytes = 0
+        self.kv_peak_bytes = 0
         self.stats = TransferStats()
+
+    def used_bytes(self) -> int:
+        return self.resident_bytes + self.buffered_bytes \
+            + self.kv_reserved_bytes
+
+    def _check_budget(self) -> None:
+        # a real error, not an assert: budget enforcement is a correctness
+        # invariant that must survive `python -O`
+        if self.used_bytes() > self.budget:
+            raise RuntimeError(
+                f"device {self.device_id} over budget: "
+                f"{self.used_bytes()/1e9:.3f} GB > {self.budget/1e9:.3f} GB "
+                f"(resident {self.resident_bytes/1e9:.3f} GB, double-buffer "
+                f"{self.buffered_bytes/1e9:.3f} GB, kv pages "
+                f"{self.kv_reserved_bytes/1e9:.3f} GB)")
 
     def charge_promotion(self, nbytes: int, *, into_buffer: bool):
         if into_buffer:
@@ -161,10 +185,28 @@ class DeviceMemory:
             self.resident_bytes += nbytes
         self.stats.promoted_bytes += nbytes
         self.stats.n_promotions += 1
-        assert self.resident_bytes + self.buffered_bytes <= self.budget, \
-            (f"device {self.device_id} over budget: "
-             f"{(self.resident_bytes + self.buffered_bytes)/1e9:.2f} GB "
-             f"> {self.budget/1e9:.2f} GB")
+        self._check_budget()
+
+    # -- serving KV pages ----------------------------------------------------
+    def can_reserve_kv(self, nbytes: int) -> bool:
+        return self.used_bytes() + nbytes <= self.budget
+
+    def reserve_kv(self, nbytes: int) -> bool:
+        """Charge a KV-page reservation; False (not an error) when it does
+        not fit — admission control degrades to queueing, not crashing."""
+        if not self.can_reserve_kv(nbytes):
+            return False
+        self.kv_reserved_bytes += nbytes
+        self.kv_peak_bytes = max(self.kv_peak_bytes, self.kv_reserved_bytes)
+        return True
+
+    def release_kv(self, nbytes: int) -> None:
+        if nbytes > self.kv_reserved_bytes:
+            raise RuntimeError(
+                f"device {self.device_id}: release_kv({nbytes}) exceeds the "
+                f"{self.kv_reserved_bytes} B reserved — release without a "
+                "matching reserve")
+        self.kv_reserved_bytes -= nbytes
 
     def activate_buffer(self):
         """Promote the double-buffered shard to the active region."""

@@ -13,7 +13,9 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention_bhsd
+from repro.kernels.paged_attention import paged_attention_lanes
 from repro.kernels.rmsnorm import rms_norm_2d
 from repro.kernels.ssd_scan import ssd_scan_bshpn
 from repro.kernels.swiglu import swiglu_2d
@@ -35,6 +37,34 @@ def flash_attention(q, k, v, *, causal: bool = True, window=None,
         v.transpose(0, 2, 1, 3), causal=causal, window=window,
         block_q=block_q, block_k=block_k, interpret=_interp(interpret))
     return out.transpose(0, 2, 1, 3)
+
+
+def default_paged_impl() -> str:
+    """Engine-facing policy: the Mosaic kernel on TPU, the pure-jnp gather
+    fallback elsewhere (the Pallas interpreter is faithful but far too slow
+    to decode through; it is exercised by tests/test_kernels.py)."""
+    return "pallas" if _ON_TPU else "jnp"
+
+
+@partial(jax.jit, static_argnames=("window", "impl"))
+def paged_attention(q, k_pages, v_pages, tables, lengths, *,
+                    window=None, impl: str = "jnp"):
+    """Single-token attention through a block table.
+
+    q: (n, nh, hd); k/v_pages: (P, bs, nkv, hd); tables: (n, B) physical
+    block ids (pad unused entries with a valid block — they are masked);
+    lengths: (n,) valid rows per lane including the current token.
+    ``impl``: 'jnp' | 'pallas' | 'pallas_interpret'.
+    """
+    if impl == "jnp":
+        return ref.paged_attention_ref(q, k_pages, v_pages, tables, lengths,
+                                       window=window)
+    if impl not in ("pallas", "pallas_interpret"):
+        raise ValueError(f"paged_attention impl={impl!r}: expected "
+                         "'jnp', 'pallas', or 'pallas_interpret'")
+    return paged_attention_lanes(q, k_pages, v_pages, tables, lengths,
+                                 window=window,
+                                 interpret=(impl == "pallas_interpret"))
 
 
 @partial(jax.jit, static_argnames=("chunk", "interpret"))

@@ -1,0 +1,117 @@
+"""Pallas TPU paged attention: single-token decode over a block-table KV.
+
+The serving engine stores K/V in fixed-size physical blocks
+(``(n_blocks, block_size, n_kv_heads, head_dim)`` pages); each decode lane
+owns a *logical* sequence named by a block table row.  The kernel reads K/V
+straight through the table — grid ``(lane, kv_head, logical_block)`` with
+the block dimension innermost so the running online-softmax scratch
+``(m, l, acc)`` carries across it, exactly like the flash kernel — and the
+table is a scalar-prefetch operand, so the physical block id feeds the K/V
+``BlockSpec`` index maps and no gathered contiguous copy of the cache is
+ever materialized (the whole point of paging: the contiguous gather would
+cost a ``max_seq``-sized copy per lane per step).
+
+GQA mirrors ``flash_attention.py``: q is blocked ``(1, groups, head_dim)``
+per kv head and repeated K/V heads are never materialized.  Logical blocks
+past a lane's length are masked to ``NEG_INF`` (their table entries point at
+the reserved garbage block 0, a valid physical index), so stale or
+unallocated pages contribute exactly zero attention weight.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _paged_kernel(tables_ref, lengths_ref, q_ref, k_ref, v_ref, o_ref,
+                  m_scr, l_scr, acc_scr, *,
+                  scale: float, block_size: int, window):
+    lane = pl.program_id(0)
+    b = pl.program_id(2)
+    nb = pl.num_programs(2)
+
+    @pl.when(b == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)             # (groups, hd)
+    k = k_ref[0, :, 0].astype(jnp.float32)       # (block_size, hd)
+    v = v_ref[0, :, 0].astype(jnp.float32)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale
+
+    length = lengths_ref[lane]                   # valid rows incl. this token
+    k_pos = b * block_size + jax.lax.broadcasted_iota(
+        jnp.int32, (q.shape[0], block_size), 1)
+    mask = k_pos < length
+    if window is not None:
+        mask &= k_pos > (length - 1) - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    l_prev = l_scr[...]
+    m_cur = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    p = jnp.exp(s - m_cur[:, None])
+    alpha = jnp.exp(m_prev - m_cur)
+    l_scr[...] = l_prev * alpha + jnp.sum(p, axis=-1)
+    acc_scr[...] = acc_scr[...] * alpha[:, None] + p @ v
+    m_scr[...] = m_cur
+
+    @pl.when(b == nb - 1)
+    def _finish():
+        denom = jnp.maximum(l_scr[...], 1e-30)[:, None]
+        o_ref[0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+def paged_attention_lanes(q, k_pages, v_pages, tables, lengths, *,
+                          window=None, interpret: bool = False):
+    """q: (n, nh, hd); k/v_pages: (P, bs, nkv, hd); tables: (n, B) physical
+    block ids (every entry must be a valid index — pad with the garbage
+    block); lengths: (n,) valid rows per lane INCLUDING the current token.
+    Returns (n, nh, hd) in q's dtype."""
+    n, nh, hd = q.shape
+    _, block_size, nkv, _ = k_pages.shape
+    n_blocks = tables.shape[1]
+    assert nh % nkv == 0
+    groups = nh // nkv
+    scale = 1.0 / math.sqrt(hd)
+
+    kernel = functools.partial(_paged_kernel, scale=scale,
+                               block_size=block_size, window=window)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,                   # tables, lengths
+        grid=(n, nkv, n_blocks),
+        in_specs=[
+            pl.BlockSpec((1, groups, hd),
+                         lambda i, kv, b, t, le: (i, kv, 0)),
+            pl.BlockSpec((1, block_size, 1, hd),
+                         lambda i, kv, b, t, le: (t[i, b], 0, kv, 0)),
+            pl.BlockSpec((1, block_size, 1, hd),
+                         lambda i, kv, b, t, le: (t[i, b], 0, kv, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, groups, hd),
+                               lambda i, kv, b, t, le: (i, kv, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((groups,), jnp.float32),      # running max m
+            pltpu.VMEM((groups,), jnp.float32),      # running denom l
+            pltpu.VMEM((groups, hd), jnp.float32),   # output accumulator
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n, nh, hd), q.dtype),
+        interpret=interpret,
+    )(tables.astype(jnp.int32), lengths.astype(jnp.int32), q,
+      k_pages, v_pages)

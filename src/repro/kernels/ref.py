@@ -30,6 +30,36 @@ def flash_attention_ref(q, k, v, *, causal: bool = True, window=None):
     return out.reshape(b, nh, sq, hd).astype(q.dtype)
 
 
+def paged_attention_ref(q, k_pages, v_pages, tables, lengths, *, window=None):
+    """Gather-based oracle for single-token paged attention.
+
+    q: (n, nh, hd); k/v_pages: (P, bs, nkv, hd); tables: (n, B) physical
+    block ids; lengths: (n,) valid rows per lane including the current
+    token.  Gathers each lane's logical sequence contiguous (the copy the
+    Pallas kernel exists to avoid), masks rows past ``length`` to -1e30 —
+    masked rows contribute exactly zero weight, so stale page contents
+    never perturb the output — and runs the same grouped-GQA f32 softmax
+    as ``_sdpa_dense``.  Doubles as the scanned pure-jnp fallback path for
+    backends/families the kernel doesn't cover."""
+    n, nh, hd = q.shape
+    _, bs, nkv, _ = k_pages.shape
+    n_blocks = tables.shape[1]
+    groups = nh // nkv
+    k = k_pages[tables].reshape(n, n_blocks * bs, nkv, hd)
+    v = v_pages[tables].reshape(n, n_blocks * bs, nkv, hd)
+    qg = q.reshape(n, nkv, groups, hd).astype(jnp.float32)
+    logits = jnp.einsum("nkgh,nskh->nkgs", qg,
+                        k.astype(jnp.float32)) / math.sqrt(hd)
+    kv_pos = jnp.arange(n_blocks * bs)[None, :]
+    mask = kv_pos < lengths[:, None]
+    if window is not None:
+        mask &= kv_pos > (lengths[:, None] - 1) - window
+    logits = jnp.where(mask[:, None, None, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("nkgs,nskh->nkgh", probs, v.astype(jnp.float32))
+    return out.reshape(n, nh, hd).astype(q.dtype)
+
+
 def ssd_scan_ref(x, log_a, b_coef, c_coef, *, chunk: int):
     """Sequential-recurrence oracle (O(s) scan, independent of the chunked
     algorithm): S_t = exp(a_t) S_{t-1} + B_t x_t^T ; y_t = C_t · S_t."""

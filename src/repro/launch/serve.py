@@ -32,12 +32,14 @@ from repro.core.sharp import HydraConfig
 def build_serve_job(arch: str, args) -> ServeJob:
     cfg = get_config(arch, smoke=args.smoke)
     max_seq = args.max_seq or (args.prompt_len + args.gen + 8)
-    budget = (args.kv_budget_mb * 2**20) if args.kv_budget_mb else None
+    budget = int(args.kv_budget_mb * 2**20) if args.kv_budget_mb else None
     return ServeJob(cfg, seed=args.seed, name=arch, capacity=args.capacity,
                     max_seq=max_seq, kv_budget_bytes=budget,
                     bucket_sizes="pow2" if getattr(args, "buckets", False)
                     else None,
-                    cold=getattr(args, "cold", False))
+                    cold=getattr(args, "cold", False),
+                    paged=getattr(args, "paged", False),
+                    block_size=getattr(args, "block_size", 16))
 
 
 def synth_prompts(cfg, n: int, prompt_len: int, seed: int):
@@ -99,6 +101,11 @@ def main():
                     help="pad prompt groups to power-of-two length buckets")
     ap.add_argument("--cold", action="store_true",
                     help="start models spilled; promote on first request")
+    ap.add_argument("--paged", action="store_true",
+                    help="block-granular paged KV cache instead of the "
+                    "fixed slot pool (dense/vlm families)")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="KV rows per physical block (with --paged)")
     ap.add_argument("--scheduler", default="lrtf",
                     choices=["lrtf", "srtf", "fifo", "random"])
     args = ap.parse_args()

@@ -79,6 +79,52 @@ def supports_padded_prefill(cfg) -> bool:
     return is_attention_family(cfg) and cfg.family != "moe"
 
 
+PAGED_FAMILIES = ("dense", "vlm")
+
+
+def supports_paging(cfg) -> bool:
+    """True when decode state can live in a block-granular paged KV cache.
+
+    Needs (a) a pure KV-cache decode state — recurrent/hybrid states are
+    O(1) in sequence length, so there is nothing to page — and (b) lanes
+    that decode independently when batched: capacity-bounded MoE routing
+    couples lanes (expert capacity is a function of the token batch), so
+    a batched paged step would not be token-identical to per-lane decode.
+    """
+    return cfg.family in PAGED_FAMILIES
+
+
+def init_kv_pages(cfg, n_blocks: int, block_size: int):
+    """Physical KV block pool: {"k","v"} of (L, n_blocks, block_size,
+    n_kv_heads, head_dim) in ``cfg.kv_cache_dtype`` — the same layout as
+    ``init_kv_cache`` with the block axis where batch was, so one page
+    plane per layer scans exactly like the contiguous cache."""
+    from repro.models import layers as nn
+    pages = nn.init_kv_cache(cfg, n_blocks, block_size)
+    return {"k": pages["k"], "v": pages["v"]}
+
+
+def kv_block_bytes(cfg, block_size: int) -> int:
+    """Residency cost of ONE physical block across all layers (K and V) —
+    the unit page-granular admission charges against the device ledger."""
+    spec = jax.eval_shape(lambda: init_kv_pages(cfg, 1, block_size))
+    return sum(math.prod(x.shape) * x.dtype.itemsize
+               for x in jax.tree.leaves(spec))
+
+
+def paged_decode_step(cfg, params, pages, tables, lengths, tokens, *,
+                      window: Optional[int] = None, impl: str = "jnp"):
+    """One decode step reading K/V through per-lane block tables."""
+    if not supports_paging(cfg):
+        raise ValueError(
+            f"{cfg.name} ({cfg.family}): paging needs a pure KV-cache "
+            "decode state and lane-independent mixing; serve this family "
+            "through the slot pool instead")
+    return family_module(cfg).paged_decode_step(
+        cfg, params, pages, tables, lengths, tokens,
+        window=window, impl=impl)
+
+
 def decode_state_spec(cfg, batch: int, max_seq: int):
     """ShapeDtypeStruct tree of the decode state — zero allocation."""
     return jax.eval_shape(lambda: init_decode_state(cfg, batch, max_seq))

@@ -263,6 +263,40 @@ def attention(params: Params, x: jnp.ndarray, cfg, *,
     return out @ params["wo"].astype(dt), new_cache
 
 
+def paged_attention_decode(params: Params, x: jnp.ndarray, cfg, *,
+                           k_pages: jnp.ndarray, v_pages: jnp.ndarray,
+                           tables: jnp.ndarray, lengths: jnp.ndarray,
+                           window: Optional[int] = None,
+                           impl: str = "jnp"):
+    """One-token attention block over a paged KV cache (one layer's pages).
+
+    x: (n, 1, d) *normed* hidden states, one decode lane per row.
+    k/v_pages: (P, bs, nkv, hd) physical blocks; tables: (n, B) block ids
+    (unused entries must name a valid block — the pool's garbage block);
+    lengths: (n,) rows already written, i.e. this token's row index.
+
+    Writes this step's K/V row through the block table (one scatter across
+    lanes — inactive lanes all land in the shared garbage block) and
+    attends to the ``[0, lengths]`` logical prefix via
+    ``kernels.ops.paged_attention``.  Returns (out, (k_pages, v_pages)).
+    """
+    n = x.shape[0]
+    q, k, v = _project_qkv(params, x, x, cfg)
+    positions = lengths[:, None]                       # (n, 1)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    bs = k_pages.shape[1]
+    blk = tables[jnp.arange(n), lengths // bs]
+    off = lengths % bs
+    k_pages = k_pages.at[blk, off].set(k[:, 0].astype(k_pages.dtype))
+    v_pages = v_pages.at[blk, off].set(v[:, 0].astype(v_pages.dtype))
+    from repro.kernels import ops as kops
+    out = kops.paged_attention(q[:, 0], k_pages, v_pages, tables,
+                               lengths + 1, window=window, impl=impl)
+    out = out.reshape(n, 1, cfg.n_heads * cfg.head_dim)
+    return out @ params["wo"].astype(x.dtype), (k_pages, v_pages)
+
+
 def init_kv_cache(cfg, batch: int, max_seq: int, n_layers: Optional[int] = None,
                   dtype=None) -> dict:
     """Stacked (layers-first) KV cache for decode.

@@ -128,6 +128,37 @@ def init_decode_state(cfg, batch: int, max_seq: int):
     return {"kv": nn.init_kv_cache(cfg, batch, max_seq)}
 
 
+def paged_decode_step(cfg, params, pages, tables, lengths, tokens, *,
+                      window=None, impl="jnp"):
+    """One decode step over a paged KV cache shared by all lanes.
+
+    tokens: (n, 1); pages: {"k","v"} of (L, P, bs, nkv, hd); tables: (n, B)
+    physical block ids per lane; lengths: (n,) rows already written (this
+    token's row index).  Batched over lanes rather than vmapped — the pages
+    are shared state, so the per-lane programs are not independent — with
+    the per-layer page planes scanned exactly like ``decode_step`` scans
+    the contiguous cache.  Returns (logits (n, 1, V), new pages).
+    """
+    x = nn.embed(params["embed"], tokens, cfg.dtype)
+
+    def body(h, xs):
+        lp, kp, vp = xs
+        a, (nkp, nvp) = nn.paged_attention_decode(
+            lp["attn"], _norm(cfg, lp["attn_norm"], h), cfg,
+            k_pages=kp, v_pages=vp, tables=tables, lengths=lengths,
+            window=window if window is not None else cfg.window, impl=impl)
+        h = h + a
+        hn = _norm(cfg, lp["mlp_norm"], h)
+        m = (nn.swiglu(lp["mlp"], hn) if cfg.mlp == "swiglu"
+             else nn.gelu_mlp(lp["mlp"], hn))
+        return h + m, (nkp, nvp)
+
+    x, (nk, nv) = jax.lax.scan(body, x,
+                               (params["layers"], pages["k"], pages["v"]))
+    x = _norm(cfg, params["final_norm"], x)
+    return nn.unembed(params["embed"], x), {"k": nk, "v": nv}
+
+
 def decode_step(cfg, params, state, tokens, *, window=None):
     """One decode step: tokens (b, 1) -> logits (b, 1, V), new state."""
     x = nn.embed(params["embed"], tokens, cfg.dtype)

@@ -2,10 +2,12 @@
 
 from repro.serving.engine import InferenceEngine, pow2_buckets
 from repro.serving.multi import MultiModelServer
-from repro.serving.queue import KVBudget, RequestQueue
+from repro.serving.paging import BlockPool, blocks_for_rows, default_n_blocks
+from repro.serving.queue import KVBudget, PagedKVBudget, RequestQueue
 from repro.serving.request import Request, Status
 from repro.serving.slots import SlotPool, stack_trees, write_slots
 
-__all__ = ["InferenceEngine", "MultiModelServer", "KVBudget", "RequestQueue",
-           "Request", "Status", "SlotPool", "stack_trees", "write_slots",
-           "pow2_buckets"]
+__all__ = ["InferenceEngine", "MultiModelServer", "KVBudget", "PagedKVBudget",
+           "RequestQueue", "Request", "Status", "SlotPool", "BlockPool",
+           "blocks_for_rows", "default_n_blocks", "stack_trees",
+           "write_slots", "pow2_buckets"]

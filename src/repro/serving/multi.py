@@ -62,4 +62,26 @@ class MultiModelServer:
         return {name: eng.completed for name, eng in self.engines.items()}
 
     def summary(self) -> dict:
-        return {name: eng.summary() for name, eng in self.engines.items()}
+        out = {name: eng.summary() for name, eng in self.engines.items()}
+        ledger = self.shared_ledger()
+        if ledger is not None:
+            out["device_memory"] = {
+                "budget_bytes": ledger.budget,
+                "kv_reserved_bytes": ledger.kv_reserved_bytes,
+                "kv_peak_bytes": ledger.kv_peak_bytes,
+                "resident_bytes": ledger.resident_bytes,
+            }
+        return out
+
+    def shared_ledger(self):
+        """The one DeviceMemory every paged engine charges, when the server
+        was built that way (admission across models then splits a single
+        device byte budget); None when ledgers are absent or per-engine.
+        A lone engine's private ledger (device_id -1, built from its own
+        kv_budget_bytes) is per-engine state, not device-level memory."""
+        ledgers = [e.ledger for e in self.engines.values()
+                   if getattr(e, "ledger", None) is not None]
+        if ledgers and all(lg is ledgers[0] for lg in ledgers) \
+                and (len(ledgers) > 1 or ledgers[0].device_id >= 0):
+            return ledgers[0]
+        return None

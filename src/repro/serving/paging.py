@@ -1,0 +1,102 @@
+"""Block-granular KV paging: a free-list of fixed-size physical KV blocks.
+
+The slot pool reserves a ``max_seq``-sized cache per request, so admission
+is bounded by the worst case.  ``BlockPool`` instead owns ONE pages pytree
+— ``{"k","v"}`` of ``(L, n_blocks, block_size, n_kv_heads, head_dim)`` —
+and hands out physical blocks request-by-request; a request's residency is
+the blocks it has actually grown into, so short prompts admit at their real
+footprint and concurrency rises under the same byte budget (paper §4.2's
+byte-accounted memory management, applied to decode state).
+
+Physical block 0 is reserved as the *garbage block*: inactive decode lanes
+and unused block-table entries all point at it, so every table entry is a
+valid physical index (the Pallas kernel's scalar-prefetch index map needs
+no clamping) and the lane-batched KV write scatter has a harmless target.
+Attention masks rows past each lane's length, so garbage contents are
+mathematically invisible.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+from repro.models import api
+
+
+class BlockPool:
+    """Free-list of physical KV blocks + the pages pytree itself."""
+
+    GARBAGE = 0          # reserved physical block; never allocated
+
+    def __init__(self, cfg, n_blocks: int, block_size: int):
+        if block_size < 1:
+            raise ValueError("block_size must be >= 1")
+        if n_blocks < 2:
+            raise ValueError(
+                f"n_blocks={n_blocks}: need at least one allocatable block "
+                "on top of the reserved garbage block 0")
+        self.block_size = block_size
+        self.n_blocks = n_blocks
+        self.block_bytes = api.kv_block_bytes(cfg, block_size)
+        self.pages = api.init_kv_pages(cfg, n_blocks, block_size)
+        # low ids handed out first (stable layouts in tests); 0 is reserved
+        self._free = list(range(n_blocks - 1, 0, -1))
+        self._allocated: set[int] = set()
+        self.total_allocs = 0        # lifetime blocks handed out (reuse stat)
+        self.peak_used = 0
+
+    @property
+    def n_allocatable(self) -> int:
+        return self.n_blocks - 1
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def n_used(self) -> int:
+        return len(self._allocated)
+
+    def used_bytes(self) -> int:
+        return self.n_used * self.block_bytes
+
+    def peak_bytes(self) -> int:
+        return self.peak_used * self.block_bytes
+
+    def alloc(self, n: int = 1) -> list[int]:
+        if n > len(self._free):
+            raise RuntimeError(
+                f"BlockPool exhausted: need {n} block(s), "
+                f"{len(self._free)} free of {self.n_allocatable} "
+                f"allocatable ({self.block_size} rows * "
+                f"{self.block_bytes} B each) — raise n_blocks or lower "
+                "concurrency")
+        ids = [self._free.pop() for _ in range(n)]
+        self._allocated.update(ids)
+        self.total_allocs += n
+        self.peak_used = max(self.peak_used, self.n_used)
+        return ids
+
+    def free(self, ids) -> None:
+        for b in ids:
+            if b not in self._allocated:
+                raise RuntimeError(
+                    f"BlockPool.free({b}): block is not allocated "
+                    "(double free, or the reserved garbage block)")
+            self._allocated.discard(b)
+            self._free.append(b)
+
+
+def blocks_for_rows(rows: int, block_size: int) -> int:
+    """Blocks needed to hold ``rows`` KV rows (ceil division)."""
+    return -(-rows // block_size)
+
+
+def default_n_blocks(capacity: int, max_seq: int, block_size: int,
+                     n_blocks: Optional[int] = None) -> int:
+    """Physical pool size: worst case of every lane at ``max_seq`` rows,
+    plus the garbage block — sized so lazy growth can never exhaust the
+    pool while admission holds the per-request reservation invariant."""
+    if n_blocks is not None:
+        return n_blocks
+    return capacity * blocks_for_rows(max_seq, block_size) + 1

@@ -1,12 +1,20 @@
 """FIFO request queue (arrival-stamped) + KV-budget admission control.
 
-Admission is slot-granular: every running request owns one slot of the
-fixed-capacity pool, and a slot's decode-state residency is a constant
-``slot_bytes`` (computed via ``api.decode_state_bytes`` — no allocation).
-``KVBudget`` enforces ``reserved <= budget_bytes`` as an invariant: a
-request is admitted only if reserving one more slot stays under budget,
-so concurrency degrades gracefully when the budget is tighter than the
-pool (tests/test_serving.py asserts the peak never exceeds it).
+Two admission granularities share this module:
+
+* ``KVBudget`` — slot-granular: every running request owns one slot of the
+  fixed-capacity pool at a constant ``slot_bytes`` residency (computed via
+  ``api.decode_state_bytes`` — no allocation).
+* ``PagedKVBudget`` — page-granular: a request reserves only the KV blocks
+  its actual prompt plus decode budget can touch, charged against a shared
+  ``core.spilling.DeviceMemory`` ledger — the SAME ledger SHARP shard
+  promotions charge, so train double-buffers and serve pages split one
+  device byte budget.
+
+Both enforce ``reserved <= budget`` as an invariant: a request is admitted
+only if its reservation fits, so concurrency degrades gracefully when the
+budget is tighter than the pool (tests/test_serving.py asserts the peak
+never exceeds it).
 """
 
 from __future__ import annotations
@@ -33,6 +41,11 @@ class RequestQueue:
 
     def pop(self) -> Request:
         return self._q.popleft()
+
+    def peek(self) -> Request:
+        """Head of the queue without removing it (page-granular admission
+        must size the head's reservation before deciding to admit)."""
+        return self._q[0]
 
     def __len__(self) -> int:
         return len(self._q)
@@ -75,10 +88,61 @@ class KVBudget:
         return True
 
     def release(self) -> None:
-        assert self.reserved_bytes >= self.slot_bytes, "release without reserve"
+        # a real error, not an assert: a double release corrupts admission
+        # accounting and must be caught under `python -O` too
+        if self.reserved_bytes < self.slot_bytes:
+            raise RuntimeError(
+                f"KVBudget.release: only {self.reserved_bytes} B reserved, "
+                f"below one slot ({self.slot_bytes} B) — release without a "
+                "matching reserve")
         self.reserved_bytes -= self.slot_bytes
 
     def max_concurrent(self) -> Optional[int]:
         if self.budget_bytes is None:
             return None
         return self.budget_bytes // self.slot_bytes
+
+
+class PagedKVBudget:
+    """Page-granular admission charging a shared ``DeviceMemory`` ledger.
+
+    Reservations are variable-sized (blocks for the request's actual
+    prompt + decode budget, not ``max_seq``); the ledger arbitrates the
+    device byte budget between these reservations and whatever else lives
+    on the device (promoted shards, double buffers).  Local
+    ``reserved_bytes``/``peak_bytes`` counters track THIS engine's share
+    so multi-engine metrics stay attributable.
+    """
+
+    def __init__(self, ledger, block_bytes: int):
+        if block_bytes <= 0:
+            raise ValueError("block_bytes must be positive")
+        self.ledger = ledger
+        self.block_bytes = block_bytes
+        self.reserved_bytes = 0
+        self.peak_bytes = 0
+
+    @property
+    def budget_bytes(self) -> int:
+        return self.ledger.budget
+
+    def can_reserve(self, n_blocks: int) -> bool:
+        return self.ledger.can_reserve_kv(n_blocks * self.block_bytes)
+
+    def reserve(self, n_blocks: int) -> bool:
+        nbytes = n_blocks * self.block_bytes
+        if not self.ledger.reserve_kv(nbytes):
+            return False
+        self.reserved_bytes += nbytes
+        self.peak_bytes = max(self.peak_bytes, self.reserved_bytes)
+        return True
+
+    def release(self, n_blocks: int) -> None:
+        nbytes = n_blocks * self.block_bytes
+        if nbytes > self.reserved_bytes:
+            raise RuntimeError(
+                f"PagedKVBudget.release({n_blocks} blocks = {nbytes} B): "
+                f"only {self.reserved_bytes} B reserved — release without "
+                "a matching reserve")
+        self.reserved_bytes -= nbytes
+        self.ledger.release_kv(nbytes)

@@ -42,8 +42,12 @@ class Request:
     first_token_time: Optional[float] = None
     finish_time: Optional[float] = None
     status: Status = Status.QUEUED
-    slot: Optional[int] = None               # pool slot while RUNNING
+    slot: Optional[int] = None               # pool slot / decode lane
     generated: list[int] = field(default_factory=list)
+    # paged engines only: blocks reserved at admission (the byte guarantee)
+    # and the high-water mark of blocks actually allocated while running
+    reserved_blocks: Optional[int] = None
+    peak_blocks: Optional[int] = None
 
     def __post_init__(self):
         self.prompt = np.asarray(self.prompt, np.int32).reshape(-1)
@@ -81,6 +85,9 @@ class Request:
         def dur(a, b):
             return round(b - a, 6) if a is not None and b is not None else None
 
+        if self.reserved_blocks is not None:
+            out["kv_reserved_blocks"] = self.reserved_blocks
+            out["kv_peak_blocks"] = self.peak_blocks
         out["queue_wait_s"] = dur(self.arrival_time, self.admit_time)
         out["ttft_s"] = dur(self.arrival_time, self.first_token_time)
         out["e2e_s"] = dur(self.arrival_time, self.finish_time)

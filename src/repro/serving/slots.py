@@ -66,6 +66,13 @@ class SlotPool:
         return self.capacity - len(self._free)
 
     def alloc(self, request_id: str) -> int:
+        if not self._free:
+            # without this guard an exhausted pool surfaces as a bare
+            # IndexError from list.pop — useless at the admission call site
+            raise RuntimeError(
+                f"SlotPool exhausted: all {self.capacity} slots occupied "
+                f"({len(self.occupant)} active requests); admission must "
+                "check n_free before alloc")
         slot = self._free.pop()
         self.occupant[slot] = request_id
         return slot

@@ -244,6 +244,25 @@ def make_decode_step(cfg, *, window: Optional[int] = None):
     return decode_step
 
 
+def make_paged_decode_step(cfg, *, window: Optional[int] = None,
+                           impl: str = "jnp"):
+    """One-token greedy decode through per-lane KV block tables.
+
+    Returns ``step(params, pages, tables, lengths, tokens) ->
+    (next_tokens (n, 1) int32, new pages)`` — the paged twin of
+    ``make_decode_step``, batched over lanes (the pages are shared state,
+    so the lanes cannot be vmapped as independent programs)."""
+
+    def paged_step(params, pages, tables, lengths, tokens):
+        logits, pages = api.paged_decode_step(
+            cfg, params, pages, tables, lengths, tokens,
+            window=window, impl=impl)
+        next_tok = jnp.argmax(logits[:, -1, :], axis=-1)[:, None]
+        return next_tok.astype(jnp.int32), pages
+
+    return paged_step
+
+
 def decode_window_for(cfg, shape) -> Optional[int]:
     """Policy: long_500k on full-attention archs uses the SWA fallback."""
     if shape.name != "long_500k":

@@ -417,3 +417,129 @@ def test_rejected_foreign_plan_does_not_poison_session():
     report = small.run()       # must partition under 18MB and complete
     assert len(small.train_execs[0].partition.shards) >= 2
     assert len(report.train.losses[0]) == 2
+
+
+# ---------------------------------------------------------------------------
+# async run (background executor thread with live poll)
+# ---------------------------------------------------------------------------
+
+def test_run_async_lifecycle():
+    """run_async returns immediately; poll stays live mid-run; result()
+    joins and hands back the same report run() would; a second run_async
+    mid-flight raises; after completion a new one is allowed."""
+    import time as _time
+    cfg = _cfg()
+    session = Session(_hc(fixed_unit_runtime=1e-3, pilot=False))
+    t0 = session.submit(TrainJob(cfg, make_loader(cfg, seed=0), epochs=1,
+                                 steps_per_epoch=3, batch=2, seq=64))
+    sv = session.submit(ServeJob(cfg, seed=1, capacity=2, max_seq=32,
+                                 paged=True, block_size=8))
+    req = session.submit_request(sv, _prompt(cfg, 5, 6), 4)
+    handle = session.run_async()
+    with pytest.raises(RuntimeError, match="already in flight"):
+        session.run_async()
+    seen_statuses = set()
+    while not handle.done():
+        seen_statuses.add(session.poll(t0)["status"])    # live mid-run
+        _time.sleep(0.01)
+    report = handle.result(timeout=30)
+    assert handle.done()
+    assert len(report.train.losses[0]) == 3
+    assert req.done and len(req.generated) == 4
+    assert session.poll(t0)["status"] == "done"
+    assert seen_statuses <= {"pending", "running", "done"}
+    # a finished handle can be waited on repeatedly
+    assert handle.result() is report
+    # and the session accepts a fresh async run afterwards
+    session.submit_request(sv, _prompt(cfg, 6, 5), 2)
+    assert session.run_async().result(timeout=30).serve[sv]["n_completed"] == 2
+
+
+def test_plain_run_refused_while_async_run_in_flight():
+    """Two executors over one session's stores/ledgers would corrupt each
+    other — the guard covers run(), not just a second run_async()."""
+    import threading
+    cfg = _cfg()
+    session = Session(_hc(fixed_unit_runtime=1e-3, pilot=False))
+    gate = threading.Event()
+
+    def gated_loader():
+        gate.wait(30)                        # pins the async run in-flight
+        yield from make_loader(cfg, seed=0)
+
+    session.submit(TrainJob(cfg, gated_loader(), epochs=1,
+                            steps_per_epoch=2, batch=2, seq=64))
+    handle = session.run_async()
+    try:
+        with pytest.raises(RuntimeError, match="already in flight"):
+            session.run()
+    finally:
+        gate.set()
+        handle.result(timeout=60)
+    session.run()                            # finished handle: allowed again
+
+
+def test_run_async_propagates_failures():
+    cfg = _cfg()
+    session = Session(_hc())
+
+    def exploding():
+        raise RuntimeError("boom-loader")
+        yield
+
+    session.submit(TrainJob(cfg, exploding(), epochs=1, steps_per_epoch=1,
+                            batch=2, seq=64))
+    handle = session.run_async()
+    with pytest.raises(RuntimeError, match="boom-loader"):
+        handle.result(timeout=60)
+
+
+# ---------------------------------------------------------------------------
+# paged serving through the session: one ledger, one plan-reported split
+# ---------------------------------------------------------------------------
+
+def test_paged_serve_shares_session_ledger_with_training():
+    cfg = _cfg()
+    session = Session(_hc())
+    session.submit(TrainJob(cfg, make_loader(cfg, seed=0), epochs=1,
+                            steps_per_epoch=2, batch=2, seq=64))
+    sv = session.submit(ServeJob(cfg, seed=1, capacity=2, max_seq=32,
+                                 paged=True, block_size=8))
+    plan = session.plan()
+    mem = plan.schedule["memory"]
+    meta = plan.job(sv).meta
+    assert meta["paged"] and meta["shared_ledger"]
+    assert mem["serve_kv_page_cap_bytes"] == meta["kv_page_cap_bytes"] > 0
+    assert mem["device_budget_bytes"] == BUDGET
+    assert mem["shard_headroom_bytes"] == BUDGET \
+        - mem["train_buffer_bytes"] - mem["serve_kv_page_cap_bytes"]
+    # the split is operative, not informational: shards are sized against
+    # the budget minus the KV-page cap, so planned promotions can never
+    # collide with worst-case serve reservations on the shared ledger
+    assert plan.job("train-0").partition["budget_bytes"] == \
+        BUDGET - mem["serve_kv_page_cap_bytes"]
+
+    req = session.submit_request(sv, _prompt(cfg, 3, 7), 5)
+    eng = session.engine(sv)
+    assert eng.paged and eng.ledger is session.devices[0]
+    report = session.run(plan)
+    assert req.done and len(req.generated) == 5
+    rec = report.serve[sv]
+    assert rec["paged"] and rec["kv_page_peak_bytes"] <= BUDGET
+    # drained: the shared ledger holds no leftover page reservation
+    assert session.devices[0].kv_reserved_bytes == 0
+    assert session.devices[0].kv_peak_bytes > 0
+
+
+def test_paged_serve_private_budget_keeps_own_ledger():
+    cfg = _cfg()
+    session = Session(_hc())
+    budget = 64 * 1024
+    sv = session.submit(ServeJob(cfg, seed=1, capacity=2, max_seq=32,
+                                 paged=True, block_size=8,
+                                 kv_budget_bytes=budget))
+    meta = session.plan().job(sv).meta
+    assert meta["paged"] and not meta["shared_ledger"]
+    eng = session.engine(sv)
+    assert eng.ledger is not session.devices[0]
+    assert eng.budget.budget_bytes == budget

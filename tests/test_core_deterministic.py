@@ -92,11 +92,25 @@ def test_device_memory_activate_buffer_moves_bytes():
     assert dm.buffered_bytes == 0
 
 
-def test_device_memory_over_budget_asserts():
+def test_device_memory_over_budget_raises():
     dm = DeviceMemory(0, 500)
     dm.charge_promotion(400, into_buffer=False)
-    with pytest.raises(AssertionError):
+    with pytest.raises(RuntimeError, match="over budget"):
         dm.charge_promotion(200, into_buffer=False)
+
+
+def test_device_memory_kv_reservation_shares_budget():
+    # serving KV pages and promoted shards charge ONE ledger
+    dm = DeviceMemory(0, 1000)
+    assert dm.reserve_kv(600)
+    assert not dm.reserve_kv(500)          # would overflow: refused, no raise
+    dm.charge_promotion(300, into_buffer=False)
+    with pytest.raises(RuntimeError, match="kv pages"):
+        dm.charge_promotion(200, into_buffer=False)
+    dm.release_kv(600)
+    assert dm.kv_peak_bytes == 600
+    with pytest.raises(RuntimeError, match="matching reserve"):
+        dm.release_kv(1)
 
 
 def test_device_memory_demotion_floors_at_zero():

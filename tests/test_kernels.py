@@ -35,6 +35,83 @@ def test_flash_attention(b, sq, sk, nh, nkv, hd, causal, window, dtype):
                                rtol=tol, atol=tol)
 
 
+@pytest.mark.parametrize("n,nh,nkv,hd,bs,B,P,window,dtype", [
+    (3, 8, 2, 64, 8, 4, 16, None, jnp.float32),     # GQA, multi-block
+    (2, 4, 4, 32, 16, 2, 8, None, jnp.float32),     # MHA
+    (4, 8, 1, 64, 8, 8, 33, None, jnp.float32),     # deep tables
+    (2, 8, 2, 64, 8, 4, 16, 5, jnp.float32),        # sliding window
+    (3, 4, 2, 32, 8, 3, 12, None, jnp.bfloat16),    # serving dtype
+    (1, 2, 1, 16, 4, 1, 2, None, jnp.float32),      # single block
+])
+def test_paged_attention_kernel(n, nh, nkv, hd, bs, B, P, window, dtype):
+    """Pallas paged attention (scalar-prefetched block tables) == the
+    gather-based oracle, across GQA/window/partial-length shapes."""
+    ks = jax.random.split(jax.random.PRNGKey(7), 3)
+    q = jax.random.normal(ks[0], (n, nh, hd), dtype)
+    kp = jax.random.normal(ks[1], (P, bs, nkv, hd), dtype)
+    vp = jax.random.normal(ks[2], (P, bs, nkv, hd), dtype)
+    rng = np.random.default_rng(n * 100 + B)
+    # distinct physical blocks per lane, never the garbage block 0
+    tables = jnp.asarray(
+        (rng.permutation(P - 1)[: n * B] + 1).reshape(n, B), jnp.int32)
+    # lengths cover: partial first block, exact block boundary, full table
+    lengths = jnp.asarray(
+        [max(1, (i * B * bs) // n) if i else bs // 2 for i in range(n)]
+        [: n], jnp.int32)
+    lengths = jnp.clip(lengths, 1, B * bs)
+    out = ops.paged_attention(q, kp, vp, tables, lengths, window=window,
+                              impl="pallas_interpret")
+    exp = ref.paged_attention_ref(q, kp, vp, tables, lengths, window=window)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(exp, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_paged_attention_ref_matches_contiguous():
+    """The oracle itself == dense softmax over the gathered contiguous
+    prefix — pins the block-table indexing convention."""
+    import math
+    n, nh, nkv, hd, bs, B, P = 2, 4, 2, 32, 8, 3, 10
+    ks = jax.random.split(jax.random.PRNGKey(11), 3)
+    q = jax.random.normal(ks[0], (n, nh, hd), jnp.float32)
+    kp = jax.random.normal(ks[1], (P, bs, nkv, hd), jnp.float32)
+    vp = jax.random.normal(ks[2], (P, bs, nkv, hd), jnp.float32)
+    tables = jnp.asarray([[4, 2, 7], [1, 9, 3]], jnp.int32)
+    lengths = [13, 24]
+    out = ref.paged_attention_ref(q, kp, vp, tables,
+                                  jnp.asarray(lengths, jnp.int32))
+    g = nh // nkv
+    k_all = np.asarray(kp)[np.asarray(tables)].reshape(n, B * bs, nkv, hd)
+    v_all = np.asarray(vp)[np.asarray(tables)].reshape(n, B * bs, nkv, hd)
+    for i, L in enumerate(lengths):
+        qi = np.asarray(q)[i].reshape(nkv, g, hd)
+        s = np.einsum("kgh,skh->kgs", qi, k_all[i, :L]) / math.sqrt(hd)
+        p = np.exp(s - s.max(-1, keepdims=True))
+        p /= p.sum(-1, keepdims=True)
+        o = np.einsum("kgs,skh->kgh", p, v_all[i, :L]).reshape(nh, hd)
+        np.testing.assert_allclose(np.asarray(out)[i], o,
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_paged_attention_ignores_stale_pages():
+    """Rows past a lane's length (garbage block, recycled pages) must
+    contribute exactly zero weight: rewriting them cannot change logits."""
+    n, nh, nkv, hd, bs, B, P = 1, 2, 1, 16, 4, 2, 6
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    q = jax.random.normal(ks[0], (n, nh, hd), jnp.float32)
+    kp = jax.random.normal(ks[1], (P, bs, nkv, hd), jnp.float32)
+    vp = jax.random.normal(ks[2], (P, bs, nkv, hd), jnp.float32)
+    tables = jnp.asarray([[2, 5]], jnp.int32)
+    lengths = jnp.asarray([5], jnp.int32)        # one row into block 5
+    base = ref.paged_attention_ref(q, kp, vp, tables, lengths)
+    # trash every row the mask should hide: block 5 rows [1:], block 0
+    kp2 = kp.at[5, 1:].set(999.0).at[0].set(-999.0)
+    vp2 = vp.at[5, 1:].set(999.0).at[0].set(-999.0)
+    out = ref.paged_attention_ref(q, kp2, vp2, tables, lengths)
+    np.testing.assert_array_equal(np.asarray(base), np.asarray(out))
+
+
 @pytest.mark.parametrize("b,s,h,p,n,chunk", [
     (2, 256, 2, 16, 8, 64),
     (1, 128, 4, 64, 32, 32),

@@ -324,6 +324,130 @@ def test_padded_prefill_factory_rejects_recurrent(ssm):
         make_padded_prefill_into_cache(cfg)
 
 
+# ---------------------------------------------------------------------------
+# paged KV cache (block-granular admission)
+# ---------------------------------------------------------------------------
+
+def test_paged_engine_token_identical_to_sequential(dense):
+    cfg, params = dense
+    eng = InferenceEngine(cfg, params, capacity=3, max_seq=MAX_SEQ,
+                          paged=True, block_size=4)
+    assert eng.paged
+    specs = [(8, 5), (12, 7), (8, 4), (10, 6), (12, 3), (1, 8)]
+    reqs = []
+    for i, (plen, gen) in enumerate(specs):
+        prompt = _prompt(cfg, 150 + i, plen)
+        reqs.append((prompt, gen, eng.submit(prompt, gen)))
+    done = eng.run()
+    assert len(done) == len(specs)
+    for prompt, gen, req in reqs:
+        assert req.generated == _reference(cfg, params, prompt, gen), \
+            f"{req.request_id}: {req.generated}"
+    # every block returned to the free list; recycling actually happened
+    assert eng.pool.n_free == eng.pool.n_allocatable
+    assert eng.pool.total_allocs > eng.pool.peak_used
+
+
+def test_paged_equals_slot_engine_tokens(dense):
+    """The acceptance bar: the paged path decodes token-identically to the
+    slot-pool path for the same submissions (staggered joins included)."""
+    cfg, params = dense
+    slot = InferenceEngine(cfg, params, capacity=3, max_seq=MAX_SEQ)
+    paged = InferenceEngine(cfg, params, capacity=3, max_seq=MAX_SEQ,
+                            paged=True, block_size=8)
+    specs = [(8, 6), (12, 4), (9, 7), (11, 5), (8, 3)]
+    rs = [slot.submit(_prompt(cfg, 160 + i, p), g)
+          for i, (p, g) in enumerate(specs)]
+    rp = [paged.submit(_prompt(cfg, 160 + i, p), g)
+          for i, (p, g) in enumerate(specs)]
+    slot.run()
+    paged.run()
+    for a, b in zip(rs, rp):
+        assert a.generated == b.generated
+
+
+def test_paged_admission_respects_budget_and_admits_more(dense):
+    """Under ONE byte budget worth two max_seq slots, paging admits more
+    short-prompt requests than the slot pool while never letting reserved
+    or physically-allocated page bytes exceed the budget."""
+    cfg, params = dense
+    budget = 2 * api.decode_state_bytes(cfg, 1, MAX_SEQ)
+    slot = InferenceEngine(cfg, params, capacity=6, max_seq=MAX_SEQ,
+                           kv_budget_bytes=budget)
+    paged = InferenceEngine(cfg, params, capacity=6, max_seq=MAX_SEQ,
+                            kv_budget_bytes=budget, paged=True, block_size=4)
+    for i in range(6):
+        slot.submit(_prompt(cfg, 170 + i, 6), 4)
+        paged.submit(_prompt(cfg, 170 + i, 6), 4)
+    while paged.step():
+        assert paged.budget.reserved_bytes <= budget
+        assert paged.pool.used_bytes() <= paged.budget.reserved_bytes
+    slot.run()
+    assert len(paged.completed) == 6
+    assert paged.budget.peak_bytes <= budget
+    assert paged.pool.peak_bytes() <= budget
+    assert paged.peak_concurrency > slot.peak_concurrency == 2
+
+
+def test_paged_with_buckets_token_identical(dense):
+    cfg, params = dense
+    eng = InferenceEngine(cfg, params, capacity=4, max_seq=MAX_SEQ,
+                          paged=True, block_size=8,
+                          bucket_sizes=(4, 8, 16, 32))
+    prompts = [_prompt(cfg, 180 + i, L) for i, L in enumerate([9, 11, 13, 16])]
+    reqs = [eng.submit(p, 6) for p in prompts]
+    eng.run()
+    assert eng.prefill_calls == 1            # one (n=4, bucket=16) group
+    for p, r in zip(prompts, reqs):
+        assert r.generated == _reference(cfg, params, p, 6)
+
+
+def test_paged_falls_back_on_recurrent_and_moe(ssm):
+    cfg, params = ssm
+    eng = InferenceEngine(cfg, params, capacity=2, max_seq=MAX_SEQ,
+                          paged=True)
+    assert not eng.paged                     # O(1) state: nothing to page
+    req = eng.submit(_prompt(cfg, 95, 6), 4)
+    eng.run()
+    assert req.generated == _reference(cfg, params, _prompt(cfg, 95, 6), 4)
+    moe = get_config("mixtral-8x22b", smoke=True)
+    eng = InferenceEngine(moe, None, capacity=1, max_seq=16, paged=True)
+    assert not eng.paged                     # expert capacity couples lanes
+
+
+def test_paged_summary_reports_page_stats(dense):
+    cfg, params = dense
+    eng = InferenceEngine(cfg, params, capacity=2, max_seq=MAX_SEQ,
+                          paged=True, block_size=8)
+    eng.submit(_prompt(cfg, 99, 10), 4)
+    eng.run()
+    s = eng.summary()
+    assert s["paged"] and s["block_size"] == 8
+    assert s["kv_page_peak_bytes"] == 2 * s["block_bytes"]  # 10+3 rows
+    assert s["peak_concurrency"] == 1
+
+
+# ---------------------------------------------------------------------------
+# accounting guards survive python -O (real errors, not asserts)
+# ---------------------------------------------------------------------------
+
+def test_kv_budget_release_without_reserve_raises():
+    b = KVBudget(budget_bytes=None, slot_bytes=100)
+    with pytest.raises(RuntimeError, match="matching reserve"):
+        b.release()
+    b.reserve()
+    b.release()                              # balanced: fine
+
+
+def test_slot_pool_exhaustion_raises_clear_error(dense):
+    from repro.serving import SlotPool
+    cfg, _ = dense
+    pool = SlotPool(cfg, capacity=1, max_seq=8)
+    pool.alloc("r0")
+    with pytest.raises(RuntimeError, match="SlotPool exhausted"):
+        pool.alloc("r1")
+
+
 def test_bucketing_ignored_on_moe_family():
     # capacity-bounded expert routing couples tokens: pad tokens would
     # consume expert capacity and displace real tokens' routes, so the

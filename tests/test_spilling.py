@@ -62,7 +62,7 @@ def test_shared_grad_accumulation():
 def test_device_budget_enforced():
     dev = DeviceMemory(0, budget_bytes=1000, buffer_frac=0.1)
     dev.charge_promotion(900, into_buffer=False)
-    with pytest.raises(AssertionError):
+    with pytest.raises(RuntimeError, match="over budget"):
         dev.charge_promotion(200, into_buffer=True)
 
 
