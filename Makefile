@@ -5,12 +5,16 @@
 #   make bench-smoke - serving + kernel benchmark smoke (prints CSV + JSON)
 #   make plan-smoke  - session plan dry-run: emit + round-trip a Plan JSON
 #   make paged-smoke - paged vs slot-pool serving under one KV budget
+#   make backend-smoke - both decode backends per supporting family + the
+#                        copy-on-write prefix-share workload (self-asserting:
+#                        token identity, block-reuse ratio > 1, and strictly
+#                        more admitted concurrency than unshared paging)
 
 PY ?= python
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export PYTHONPATH
 
-.PHONY: test test-fast bench-smoke plan-smoke paged-smoke
+.PHONY: test test-fast bench-smoke plan-smoke paged-smoke backend-smoke
 
 test:
 	$(PY) -m pytest -x -q
@@ -30,3 +34,6 @@ plan-smoke:
 
 paged-smoke:
 	$(PY) -m benchmarks.bench_serving --paged
+
+backend-smoke:
+	$(PY) -m benchmarks.bench_serving --backend-smoke

@@ -191,11 +191,129 @@ def bench_paged(arch="qwen3-0.6b", n_requests=12, capacity=12, plen=8,
             "paged_tok_per_s": round(paged_tps, 1)}
 
 
+def bench_prefix_share(arch="qwen3-0.6b", n_requests=6, prefix_blocks=8,
+                       tail=2, gen=4, max_seq=64, block_size=4,
+                       budget_requests=2) -> dict:
+    """Copy-on-write prefix sharing vs unshared paged admission, ONE budget.
+
+    ``n_requests`` share a ``prefix_blocks``-block common prompt prefix;
+    half carry distinct tails (full-block aliasing) and half repeat the
+    first tail exactly (identical prompts — those alias the partial
+    boundary block too, so the first decode write past the shared extent
+    exercises COPY-ON-WRITE).  Unshared paging charges every request its
+    full extent, so a budget worth ``budget_requests`` requests caps
+    concurrency there; sharing charges only unshared blocks, so the same
+    budget admits strictly more (asserted — this is the ``make
+    backend-smoke`` acceptance bar), with token-identical outputs, a
+    block-reuse ratio > 1, and at least one COW copy.
+    """
+    cfg = get_config(arch, smoke=True)
+    params = api.init_params(cfg, jax.random.PRNGKey(0))
+    from repro.serving import blocks_for_rows
+    key = jax.random.PRNGKey(77)
+    prefix = np.asarray(jax.random.randint(
+        key, (prefix_blocks * block_size,), 0, cfg.vocab_size, jnp.int32))
+    # i % 2 == 1 repeats tail 80+i-1 -> adjacent identical prompts; the
+    # duplicate aliases the donor's boundary block and must COW it at its
+    # first decode write
+    prompts = [np.concatenate([prefix, np.asarray(jax.random.randint(
+        jax.random.PRNGKey(80 + i - (i % 2)), (tail,), 0, cfg.vocab_size,
+        jnp.int32))]) for i in range(n_requests)]
+    worst = blocks_for_rows(len(prompts[0]) + gen - 1, block_size)
+    budget = budget_requests * worst * api.kv_block_bytes(cfg, block_size)
+
+    def drive(share: bool):
+        eng = InferenceEngine(cfg, params, capacity=n_requests,
+                              max_seq=max_seq, backend="paged",
+                              block_size=block_size, prefix_share=share,
+                              kv_budget_bytes=budget, model_name=arch)
+        reqs = [eng.submit(p, gen) for p in prompts]
+        eng.run()
+        return eng.summary(), [r.generated for r in reqs]
+
+    base_sum, base_toks = drive(share=False)
+    share_sum, share_toks = drive(share=True)
+    assert share_toks == base_toks, \
+        "prefix-shared decode diverged from unshared paged decode"
+    reuse = (share_sum["shared_block_hits"] + share_sum["kv_block_allocs"]) \
+        / share_sum["kv_block_allocs"]
+    assert reuse > 1, f"no block reuse on a common-prefix workload: {reuse}"
+    assert share_sum["cow_copies"] > 0, \
+        "duplicate prompts never copied their shared boundary block — " \
+        "the COW path did not run"
+    assert share_sum["peak_concurrency"] > base_sum["peak_concurrency"], \
+        (f"sharing admitted {share_sum['peak_concurrency']} <= unshared "
+         f"{base_sum['peak_concurrency']} under budget {budget}")
+    assert share_sum["kv_page_peak_bytes"] <= budget
+    emit(f"serve_prefix_share_concurrency_{arch}", 0.0,
+         f"{share_sum['peak_concurrency']}vs{base_sum['peak_concurrency']}")
+    emit(f"serve_prefix_share_reuse_{arch}", 0.0, f"{reuse:.2f}x")
+    return {"arch": arch, "n_requests": n_requests,
+            "prefix_len": int(prefix.shape[0]), "tail": tail, "gen": gen,
+            "block_size": block_size, "kv_budget_bytes": budget,
+            "shared_block_ratio": round(reuse, 2),
+            "shared_block_hits": share_sum["shared_block_hits"],
+            "cow_copies": share_sum["cow_copies"],
+            "unshared_peak_concurrency": base_sum["peak_concurrency"],
+            "shared_peak_concurrency": share_sum["peak_concurrency"],
+            "unshared_kv_page_peak_bytes": base_sum["kv_page_peak_bytes"],
+            "shared_kv_page_peak_bytes": share_sum["kv_page_peak_bytes"],
+            "page_peak_within_budget":
+                share_sum["kv_page_peak_bytes"] <= budget,
+            "tokens_identical": share_toks == base_toks}
+
+
+# one servable arch per family the backend smoke exercises (encoder-decoder
+# families are not servable; vlm shares the transformer paths with dense)
+_SMOKE_FAMILY_ARCHS = {"dense": "qwen3-0.6b", "ssm": "xlstm-350m",
+                       "hybrid": "zamba2-1.2b", "moe": "mixtral-8x22b"}
+
+
+def bench_backends(plen=8, gen=6, n_requests=4, max_seq=64) -> dict:
+    """Every smoke family through each backend its FamilySpec declares:
+    slot for all, paged too where ``paging`` is declared — asserting the
+    backends agree token-for-token."""
+    from repro.models.registry import spec as family_spec
+    out = {}
+    for family, arch in _SMOKE_FAMILY_ARCHS.items():
+        cfg = get_config(arch, smoke=True)
+        spec = family_spec(cfg)
+        backends = ["slot"] + (["paged"] if spec.paging else [])
+        params = api.init_params(cfg, jax.random.PRNGKey(0))
+        prompts = [np.asarray(jax.random.randint(
+            jax.random.PRNGKey(60 + i), (plen,), 0, cfg.vocab_size,
+            jnp.int32)) for i in range(n_requests)]
+        toks, rec = {}, {"backends": backends}
+        for name in backends:
+            eng = InferenceEngine(cfg, params, capacity=n_requests,
+                                  max_seq=max_seq, backend=name,
+                                  model_name=arch)
+            reqs = [eng.submit(p, gen) for p in prompts]
+            t0 = time.perf_counter()
+            eng.run()
+            wall = time.perf_counter() - t0
+            toks[name] = [r.generated for r in reqs]
+            s = eng.summary()
+            assert s["backend"] == name
+            rec[name] = {"decode_tok_per_s": s["decode_tok_per_s"],
+                         "kv_peak_bytes": s["kv_peak_bytes"],
+                         "wall_s": round(wall, 4)}
+            emit(f"serve_backend_{name}_{family}", wall * 1e6,
+                 f"{s['decode_tok_per_s']}tok/s")
+        if "paged" in backends:
+            assert toks["paged"] == toks["slot"], \
+                f"{family}: paged backend diverged from slot backend"
+        rec["tokens_identical"] = len(set(map(str, toks.values()))) == 1
+        out[family] = rec
+    return out
+
+
 def run() -> None:
     """Bench-harness entry (benchmarks.run suite 'serving')."""
     bench_prefill()
     bench_continuous()
     bench_paged()
+    bench_prefix_share()
 
 
 def main():
@@ -204,9 +322,23 @@ def main():
                     help="small shapes + JSON summary")
     ap.add_argument("--paged", action="store_true",
                     help="paged vs slot-pool admission under one KV budget")
+    ap.add_argument("--prefix-share", action="store_true",
+                    help="copy-on-write prefix sharing vs unshared paged "
+                    "admission under one KV budget")
+    ap.add_argument("--backend-smoke", action="store_true",
+                    help="both decode backends per supporting family + the "
+                    "prefix-share workload (self-asserting; make "
+                    "backend-smoke)")
     ap.add_argument("--arch", default="qwen3-0.6b")
     args = ap.parse_args()
-    if args.paged:
+    if args.backend_smoke:
+        out = {"backends": bench_backends(),
+               "prefix_share": bench_prefix_share(arch=args.arch)}
+        print(json.dumps(out))
+    elif args.prefix_share:
+        print(json.dumps({"prefix_share": bench_prefix_share(
+            arch=args.arch)}))
+    elif args.paged:
         print(json.dumps({"paged": bench_paged(arch=args.arch)}))
     elif args.smoke:
         out = {"prefill": bench_prefill(arch=args.arch),

@@ -10,13 +10,28 @@ session API under that name so examples read like the paper:
     session.submit(hydra.TrainJob(cfg, loader))
     report = session.run(session.plan())
 
-Everything here is a re-export; the implementation lives in ``repro.api``.
+The capability registry and decode-backend surface are re-exported too:
+``hydra.family_spec(cfg)`` answers what a model family can do
+(``batched_prefill`` / ``padded_prefill`` / ``paging`` / ...), and
+``hydra.SlotBackend`` / ``hydra.PagedBackend`` are the two decode-state
+layouts serving engines select between (see docs/api.md).
+
+Everything here is a re-export; the implementation lives in ``repro``.
 """
 
 from repro.api import (AsyncRun, EvalJob, HydraConfig, JobPlan, JobSpec,
                        JobState, Plan, ServeJob, Session, SessionReport,
                        SpmdTrainJob, TrainJob)
+from repro.models.api import family_spec
+from repro.models.registry import (CapabilityFallbackWarning, FamilySpec,
+                                   families_with, registered_families)
+from repro.serving import (DecodeBackend, InferenceEngine, PagedBackend,
+                           SlotBackend)
 
 __all__ = ["Session", "SessionReport", "AsyncRun", "JobState",
            "JobSpec", "TrainJob", "ServeJob", "EvalJob", "SpmdTrainJob",
-           "Plan", "JobPlan", "HydraConfig"]
+           "Plan", "JobPlan", "HydraConfig",
+           "FamilySpec", "family_spec", "families_with",
+           "registered_families", "CapabilityFallbackWarning",
+           "DecodeBackend", "SlotBackend", "PagedBackend",
+           "InferenceEngine"]

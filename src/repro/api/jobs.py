@@ -78,16 +78,21 @@ class ServeJob(JobSpec):
     only when the first request arrives (shards promoted through
     ``core/spilling.py``, bytes accounted in the serve report).
 
-    ``paged=True`` replaces the fixed-slot decode pool with the
-    block-granular paged KV cache (``block_size`` rows per block):
-    admission reserves blocks for the request's actual prompt + decode
-    budget instead of a ``max_seq`` slot.  With ``kv_budget_bytes=None``
-    the pages charge the SESSION's device-0 ``DeviceMemory`` ledger — the
-    same budget SHARP shard promotions and double-buffers charge — so
-    mixed train+serve plans stay byte-accurate; a non-None
-    ``kv_budget_bytes`` keeps a private ledger of that size instead.
-    Families without a lane-independent pure KV cache (recurrent, moe)
-    silently keep the slot pool.
+    ``backend`` selects the decode backend by name — ``"slot"`` (default)
+    or ``"paged"`` (``paged=True`` is the legacy spelling of the same
+    request).  The paged backend keeps K/V in the block-granular paged
+    cache (``block_size`` rows per block): admission reserves blocks for
+    the request's actual prompt + decode budget instead of a ``max_seq``
+    slot, and ``prefix_share`` (default on) lets requests with a common
+    block-aligned prompt prefix alias physical pages copy-on-write.  With
+    ``kv_budget_bytes=None`` the pages charge the SESSION's device-0
+    ``DeviceMemory`` ledger — the same budget SHARP shard promotions and
+    double-buffers charge — so mixed train+serve plans stay byte-accurate;
+    a non-None ``kv_budget_bytes`` keeps a private ledger of that size
+    instead.  A family whose ``FamilySpec`` does not declare the requested
+    capability falls back (slot backend / exact-length groups) with a
+    ``CapabilityFallbackWarning``; the *effective* backend is recorded in
+    the plan meta and ``session.poll``.
     """
     params: Optional[Any] = None                # init'd from seed if None
     seed: int = 0
@@ -98,9 +103,34 @@ class ServeJob(JobSpec):
     window: Optional[int] = None
     bucket_sizes: Optional[Any] = None          # Sequence[int] | "pow2" | None
     cold: bool = False
-    paged: bool = False
+    backend: Optional[str] = None               # "slot" | "paged" | None
+    paged: bool = False                         # legacy alias: backend="paged"
     block_size: int = 16                        # KV rows per physical block
+    prefix_share: bool = True                   # COW prefix sharing (paged)
     kind: str = field(default="serve", init=False)
+
+    def requested_backend(self) -> str:
+        """The backend this spec asks for, before capability fallback."""
+        if self.backend is not None:
+            if self.backend not in ("slot", "paged"):
+                raise ValueError(
+                    f"backend={self.backend!r}: known decode backends are "
+                    "'slot' and 'paged'")
+            if self.paged and self.backend != "paged":
+                raise ValueError(
+                    "conflicting spec: paged=True but backend="
+                    f"{self.backend!r}; drop one of them")
+            return self.backend
+        return "paged" if self.paged else "slot"
+
+    def effective_backend(self) -> str:
+        """The backend the engine will actually run, after checking the
+        family's declared capabilities (mirrors the engine's fallback)."""
+        from repro.models.registry import spec as family_spec
+        req = self.requested_backend()
+        if req == "paged" and not family_spec(self.cfg).paging:
+            return "slot"
+        return req
 
     def resolved_buckets(self) -> Optional[Sequence[int]]:
         if self.bucket_sizes is None:

@@ -123,6 +123,7 @@ class Session:
         name = None
         if isinstance(job, ServeJob):       # validate before registering
             job.resolved_buckets()          # fail fast on a bad bucket spec
+            job.requested_backend()         # ... and on a bad backend name
             name = job.name or job.cfg.name
             if name in self._serve_names:
                 raise ValueError(
@@ -151,9 +152,18 @@ class Session:
             out.update(losses_seen=len(m.losses), epoch=m.epoch,
                        minibatch=m.minibatch, done=m.done,
                        stopped_early=m.stopped_early)
+        if isinstance(job, ServeJob):
+            # effective backend/capabilities — a capability fallback must
+            # be visible to pollers, not just a one-time warning
+            from repro.models.registry import spec as family_spec
+            spec = family_spec(job.cfg)
+            out.update(backend=job.effective_backend(),
+                       requested_backend=job.requested_backend(),
+                       capabilities=spec.capabilities())
         if job_id in self._engines:
             eng = self._engines[job_id]
-            out.update(n_completed=len(eng.completed),
+            out.update(backend=eng.backend.name,
+                       n_completed=len(eng.completed),
                        n_active=len(eng.active_requests()),
                        n_queued=len(eng.queued_requests()))
         if job_id in self._cold:
@@ -253,24 +263,32 @@ class Session:
         return jp
 
     def _serve_meta(self, job: ServeJob, *, cold: bool) -> dict:
-        from repro.models import api as mapi
-        # mirror the engine: families without token-identical padded prefill
-        # (recurrent, moe) silently run exact-length admission, so the plan
-        # must not promise buckets they won't get
-        buckets = (job.resolved_buckets()
-                   if mapi.supports_padded_prefill(job.cfg) else None)
+        from repro.models.registry import spec as family_spec
+        spec = family_spec(job.cfg)
+        # mirror the engine's capability fallbacks: the plan records the
+        # EFFECTIVE backend/buckets, never a capability the family's spec
+        # does not declare, plus why each fallback happened
+        buckets = job.resolved_buckets() if spec.padded_prefill else None
+        backend = job.effective_backend()
+        fallbacks = {}
+        if job.requested_backend() != backend:
+            fallbacks["backend"] = spec.why_not("paging")
+        if job.bucket_sizes is not None and not spec.padded_prefill:
+            fallbacks["bucket_sizes"] = spec.why_not("padded_prefill")
         meta = {"capacity": job.capacity, "max_seq": job.max_seq,
                 "kv_budget_bytes": job.kv_budget_bytes,
-                "slot_bytes": mapi.decode_state_bytes(job.cfg, 1, job.max_seq),
+                "slot_bytes": spec.decode_state_bytes(job.cfg, 1,
+                                                      job.max_seq),
                 "bucket_sizes": list(buckets) if buckets else None,
-                "cold": cold}
-        # mirror the engine's paged fallback: recurrent/moe families keep
-        # the slot pool, so the plan must not promise pages they won't get
-        paged = job.paged and mapi.supports_paging(job.cfg)
-        meta["paged"] = paged
-        if paged:
+                "cold": cold,
+                "backend": backend,
+                "requested_backend": job.requested_backend(),
+                "capabilities": spec.capabilities(),
+                "capability_fallbacks": fallbacks}
+        meta["paged"] = backend == "paged"
+        if backend == "paged":
             from repro.serving import blocks_for_rows
-            block_bytes = mapi.kv_block_bytes(job.cfg, job.block_size)
+            block_bytes = spec.kv_block_bytes(job.cfg, job.block_size)
             per_req = blocks_for_rows(job.max_seq, job.block_size)
             meta.update(
                 block_size=job.block_size,
@@ -279,6 +297,7 @@ class Session:
                 # worst case every lane pinned at max_seq — the cap the
                 # plan's memory split charges against the device budget
                 kv_page_cap_bytes=job.capacity * per_req * block_bytes,
+                prefix_share=job.prefix_share,
                 shared_ledger=job.kv_budget_bytes is None)
         return meta
 
@@ -309,16 +328,17 @@ class Session:
         """Worst-case bytes the session's shared-ledger paged serve jobs
         can reserve (every lane pinned at max_seq) — the slice of the
         device budget the partitioner must leave for KV pages."""
-        from repro.models import api as mapi
+        from repro.models.registry import spec as family_spec
         from repro.serving import blocks_for_rows
         cap = 0
         for jid in self._active(ServeJob):
             job = self._jobs[jid]
-            if job.paged and job.kv_budget_bytes is None \
-                    and mapi.supports_paging(job.cfg):
+            if job.effective_backend() == "paged" \
+                    and job.kv_budget_bytes is None:
                 cap += (job.capacity
                         * blocks_for_rows(job.max_seq, job.block_size)
-                        * mapi.kv_block_bytes(job.cfg, job.block_size))
+                        * family_spec(job.cfg).kv_block_bytes(
+                            job.cfg, job.block_size))
         return cap
 
     def _memory_split(self) -> dict:
@@ -506,10 +526,14 @@ class Session:
                            "promote_bytes": 0, "promote_s": 0.0}
 
     def _make_engine(self, job: ServeJob, params):
+        """Backend selection happens ONCE here: resolve the job's effective
+        backend through the FamilySpec registry and hand the engine one
+        backend choice — no capability branches at call sites."""
         from repro.serving import InferenceEngine
         kw: dict[str, Any] = {}
-        if job.paged:
-            kw.update(paged=True, block_size=job.block_size)
+        if job.effective_backend() == "paged":
+            kw.update(block_size=job.block_size,
+                      prefix_share=job.prefix_share)
             if job.kv_budget_bytes is None:
                 # pages charge the session's device-0 ledger — the budget
                 # SHARP promotions charge — unless the job pins a private cap
@@ -521,6 +545,7 @@ class Session:
         return InferenceEngine(
             job.cfg, params, capacity=job.capacity, max_seq=job.max_seq,
             window=job.window, model_name=job.name or job.cfg.name,
+            backend=job.requested_backend(),
             bucket_sizes=job.resolved_buckets(), **kw)
 
     def _promote_cold(self, jid: str) -> None:
@@ -840,7 +865,9 @@ def _run_spmd(job: SpmdTrainJob) -> dict:
     data_cfg = DataConfig(batch_size=job.batch, seq_len=job.seq,
                           vocab_size=cfg.vocab_size, seed=job.seed,
                           path=job.data)
-    if cfg.family in ("audio", "vlm"):
+    from repro.models.registry import spec as family_spec
+    if not family_spec(cfg).token_stream_data:
+        # audio/vlm batches carry embeddings the token pipeline can't make
         def synth():
             i = 0
             while True:

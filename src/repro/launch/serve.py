@@ -6,9 +6,12 @@ decoded with continuous batching over a fixed slot pool; greedy sampling
 requests in between decode steps so late arrivals join mid-flight, a
 comma-separated ``--arch`` list serves several models at once with the
 session's scheduling policy picking which model steps next, ``--buckets``
-pads prompt groups to power-of-two length buckets, and ``--cold`` starts
-models spilled in the host store (promoted on the first request).  Prints
-per-request latency/throughput metrics plus engine summaries as JSON.
+pads prompt groups to power-of-two length buckets, ``--cold`` starts
+models spilled in the host store (promoted on the first request), and
+``--backend slot|paged`` picks the decode backend once (``--paged`` is
+the legacy spelling; ``--no-prefix-share`` disables copy-on-write
+prompt-prefix page sharing).  Prints per-request latency/throughput
+metrics plus engine summaries as JSON.
 
   python -m repro.launch.serve --arch qwen3-0.6b --smoke \
       --batch 4 --prompt-len 32 --gen 16
@@ -33,13 +36,17 @@ def build_serve_job(arch: str, args) -> ServeJob:
     cfg = get_config(arch, smoke=args.smoke)
     max_seq = args.max_seq or (args.prompt_len + args.gen + 8)
     budget = int(args.kv_budget_mb * 2**20) if args.kv_budget_mb else None
+    # pass both spellings through: ServeJob.requested_backend() resolves
+    # the legacy --paged flag and rejects a conflicting --backend slot
     return ServeJob(cfg, seed=args.seed, name=arch, capacity=args.capacity,
                     max_seq=max_seq, kv_budget_bytes=budget,
                     bucket_sizes="pow2" if getattr(args, "buckets", False)
                     else None,
                     cold=getattr(args, "cold", False),
+                    backend=getattr(args, "backend", None),
                     paged=getattr(args, "paged", False),
-                    block_size=getattr(args, "block_size", 16))
+                    block_size=getattr(args, "block_size", 16),
+                    prefix_share=not getattr(args, "no_prefix_share", False))
 
 
 def synth_prompts(cfg, n: int, prompt_len: int, seed: int):
@@ -101,11 +108,17 @@ def main():
                     help="pad prompt groups to power-of-two length buckets")
     ap.add_argument("--cold", action="store_true",
                     help="start models spilled; promote on first request")
+    ap.add_argument("--backend", default=None, choices=["slot", "paged"],
+                    help="decode backend (default: slot; families whose "
+                    "FamilySpec lacks a capability fall back with a "
+                    "warning)")
     ap.add_argument("--paged", action="store_true",
-                    help="block-granular paged KV cache instead of the "
-                    "fixed slot pool (dense/vlm families)")
+                    help="legacy spelling of --backend paged")
     ap.add_argument("--block-size", type=int, default=16,
-                    help="KV rows per physical block (with --paged)")
+                    help="KV rows per physical block (paged backend)")
+    ap.add_argument("--no-prefix-share", action="store_true",
+                    help="disable copy-on-write prompt-prefix page sharing "
+                    "(paged backend)")
     ap.add_argument("--scheduler", default="lrtf",
                     choices=["lrtf", "srtf", "fifo", "random"])
     args = ap.parse_args()

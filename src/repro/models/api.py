@@ -1,4 +1,5 @@
-"""Unified model API: dispatch on ``cfg.family``.
+"""Unified model API: dispatch on ``cfg.family`` through the FamilySpec
+registry (``repro.models.registry``).
 
 Every family module exposes the same surface:
     init_params(cfg, key) -> params
@@ -7,30 +8,35 @@ Every family module exposes the same surface:
     decode_step(cfg, params, state, tokens) -> (logits, state)
     apply_layer_range(cfg, stacked_slice, x, ...)   (Hydra shard primitive)
 
+and registers a ``FamilySpec`` declaring its capabilities
+(``batched_prefill`` / ``padded_prefill`` / ``paging`` / ...) and decode-
+state cost fns.  This module is a thin lookup over that registry; callers
+that need a capability decision read ``family_spec(cfg)`` instead of
+testing family names.
+
 ``input_specs`` builds ShapeDtypeStruct stand-ins for the dry-run — weak-type
 correct, shardable, zero allocation.
 """
 
 from __future__ import annotations
 
-import math
+import warnings
 from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.models import encdec, hybrid, moe, ssm, transformer
+from repro.models import registry
+from repro.models.registry import FamilySpec  # noqa: F401  (re-export)
+
+
+def family_spec(cfg) -> registry.FamilySpec:
+    """The registered FamilySpec for ``cfg`` (or a family name)."""
+    return registry.spec(cfg)
 
 
 def family_module(cfg):
-    return {
-        "dense": transformer,
-        "vlm": transformer,
-        "moe": moe,
-        "ssm": ssm,
-        "hybrid": hybrid,
-        "audio": encdec,
-    }[cfg.family]
+    return registry.spec(cfg).module
 
 
 def init_params(cfg, key):
@@ -57,42 +63,8 @@ def param_count(params) -> int:
 
 
 # ---------------------------------------------------------------------------
-# serving helpers
+# serving helpers (capability decisions live in the FamilySpec registry)
 # ---------------------------------------------------------------------------
-
-ATTENTION_FAMILIES = ("dense", "vlm", "moe")
-
-
-def is_attention_family(cfg) -> bool:
-    """True when decode state is a pure KV cache that an entire prompt chunk
-    can be written into in one ``decode_step`` call (batched prefill).
-    Recurrent/hybrid/enc-dec states advance strictly token-by-token."""
-    return cfg.family in ATTENTION_FAMILIES
-
-
-def supports_padded_prefill(cfg) -> bool:
-    """True when a right-padded prompt prefills token-identically to the
-    exact-length one (length-bucketed admission).  Needs a rewindable KV
-    cache AND per-token-independent mixing: capacity-bounded MoE routing
-    couples tokens — pad tokens consume expert capacity and displace real
-    tokens' routes — so only the non-MoE attention families qualify."""
-    return is_attention_family(cfg) and cfg.family != "moe"
-
-
-PAGED_FAMILIES = ("dense", "vlm")
-
-
-def supports_paging(cfg) -> bool:
-    """True when decode state can live in a block-granular paged KV cache.
-
-    Needs (a) a pure KV-cache decode state — recurrent/hybrid states are
-    O(1) in sequence length, so there is nothing to page — and (b) lanes
-    that decode independently when batched: capacity-bounded MoE routing
-    couples lanes (expert capacity is a function of the token batch), so
-    a batched paged step would not be token-identical to per-lane decode.
-    """
-    return cfg.family in PAGED_FAMILIES
-
 
 def init_kv_pages(cfg, n_blocks: int, block_size: int):
     """Physical KV block pool: {"k","v"} of (L, n_blocks, block_size,
@@ -107,20 +79,18 @@ def init_kv_pages(cfg, n_blocks: int, block_size: int):
 def kv_block_bytes(cfg, block_size: int) -> int:
     """Residency cost of ONE physical block across all layers (K and V) —
     the unit page-granular admission charges against the device ledger."""
-    spec = jax.eval_shape(lambda: init_kv_pages(cfg, 1, block_size))
-    return sum(math.prod(x.shape) * x.dtype.itemsize
-               for x in jax.tree.leaves(spec))
+    return registry.spec(cfg).kv_block_bytes(cfg, block_size)
 
 
 def paged_decode_step(cfg, params, pages, tables, lengths, tokens, *,
                       window: Optional[int] = None, impl: str = "jnp"):
     """One decode step reading K/V through per-lane block tables."""
-    if not supports_paging(cfg):
+    spec = registry.spec(cfg)
+    if not spec.paging:
         raise ValueError(
-            f"{cfg.name} ({cfg.family}): paging needs a pure KV-cache "
-            "decode state and lane-independent mixing; serve this family "
-            "through the slot pool instead")
-    return family_module(cfg).paged_decode_step(
+            f"{cfg.name} ({cfg.family}): {spec.why_not('paging')}; serve "
+            "this family through the slot backend instead")
+    return spec.module.paged_decode_step(
         cfg, params, pages, tables, lengths, tokens,
         window=window, impl=impl)
 
@@ -132,9 +102,49 @@ def decode_state_spec(cfg, batch: int, max_seq: int):
 
 def decode_state_bytes(cfg, batch: int, max_seq: int) -> int:
     """Residency cost of one decode state (KV-budget admission control)."""
-    spec = decode_state_spec(cfg, batch, max_seq)
-    return sum(math.prod(x.shape) * x.dtype.itemsize
-               for x in jax.tree.leaves(spec))
+    return registry.spec(cfg).decode_state_bytes(cfg, batch, max_seq)
+
+
+# ---------------------------------------------------------------------------
+# deprecated predicate shims (the registry replaced the predicate zoo)
+# ---------------------------------------------------------------------------
+
+def _deprecated(old: str, new: str) -> None:
+    warnings.warn(
+        f"repro.models.api.{old} is deprecated: capability decisions now "
+        f"live in the FamilySpec registry; use {new} "
+        "(see docs/api.md#backends--capabilities)",
+        DeprecationWarning, stacklevel=3)
+
+
+def is_attention_family(cfg) -> bool:
+    """Deprecated: use ``family_spec(cfg).batched_prefill``."""
+    _deprecated("is_attention_family", "family_spec(cfg).batched_prefill")
+    return registry.spec(cfg).batched_prefill
+
+
+def supports_padded_prefill(cfg) -> bool:
+    """Deprecated: use ``family_spec(cfg).padded_prefill``."""
+    _deprecated("supports_padded_prefill", "family_spec(cfg).padded_prefill")
+    return registry.spec(cfg).padded_prefill
+
+
+def supports_paging(cfg) -> bool:
+    """Deprecated: use ``family_spec(cfg).paging``."""
+    _deprecated("supports_paging", "family_spec(cfg).paging")
+    return registry.spec(cfg).paging
+
+
+def __getattr__(name: str):
+    # PEP 562 shims: the old capability tuples are now registry queries
+    if name == "ATTENTION_FAMILIES":
+        _deprecated("ATTENTION_FAMILIES",
+                    "registry.families_with('batched_prefill')")
+        return registry.families_with("batched_prefill")
+    if name == "PAGED_FAMILIES":
+        _deprecated("PAGED_FAMILIES", "registry.families_with('paging')")
+        return registry.families_with("paging")
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 # ---------------------------------------------------------------------------

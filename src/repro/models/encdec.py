@@ -198,3 +198,31 @@ def decode_step(cfg, params, state, tokens, *, window=None):
     new_state = {"kv": {"k": nk, "v": nv, "index": idx + 1},
                  "cross": state["cross"]}
     return logits, new_state
+
+
+def _register():
+    import sys
+
+    from repro.models import registry
+    registry.register(registry.FamilySpec(
+        family="audio", module=sys.modules[__name__],
+        batched_prefill=False, padded_prefill=False, paging=False,
+        pure_kv_state=False, servable=False, token_stream_data=False,
+        notes={
+            "servable": "encoder-decoder decode states need real encoder "
+                        "output; InferenceEngine has no encoder-output "
+                        "path yet",
+            "batched_prefill": "decoder states advance token-by-token "
+                               "against the cross-attention cache",
+            "padded_prefill": "decoder prefill cannot be rewound past a "
+                              "pad tail",
+            "paging": "cross-attention cache is request-constant — paging "
+                      "the self-attention half alone buys nothing",
+            "pure_kv_state": "decode state couples self- and cross-"
+                             "attention caches",
+            "token_stream_data": "audio batches carry encoder frame "
+                                 "embeddings alongside tokens",
+        }))
+
+
+_register()

@@ -166,3 +166,26 @@ def decode_step(cfg, params, state, tokens, *, window=None):
                  "kv": {"k": nk, "v": nv, "index": kv["index"] + 1},
                  "pos": pos + 1}
     return logits, new_state
+
+
+def _register():
+    import sys
+
+    from repro.models import registry
+    registry.register(registry.FamilySpec(
+        family="hybrid", module=sys.modules[__name__],
+        batched_prefill=False, padded_prefill=False, paging=False,
+        pure_kv_state=False, servable=True, token_stream_data=True,
+        notes={
+            "batched_prefill": "mamba recurrences advance strictly "
+                               "token-by-token (prefill scans the prompt)",
+            "padded_prefill": "recurrent sub-states cannot be rewound past "
+                              "a pad tail",
+            "paging": "decode state mixes O(1) recurrences with the shared-"
+                      "attention KV slots — not a pure pageable KV cache",
+            "pure_kv_state": "decode state mixes mamba recurrences with a "
+                             "KV cache",
+        }))
+
+
+_register()

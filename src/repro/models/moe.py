@@ -372,3 +372,24 @@ def decode_step(cfg, params, state, tokens, *, window=None):
     new_state = {"kv": {"k": nk, "v": nv,
                         "index": kv["index"] + tokens.shape[1]}}
     return logits, new_state
+
+
+def _register():
+    import sys
+
+    from repro.models import registry
+    registry.register(registry.FamilySpec(
+        family="moe", module=sys.modules[__name__],
+        batched_prefill=True, padded_prefill=False, paging=False,
+        pure_kv_state=True, servable=True, token_stream_data=True,
+        notes={
+            "padded_prefill": "capacity-bounded expert routing couples "
+                              "tokens: pad tokens consume expert capacity "
+                              "and displace real tokens' routes",
+            "paging": "expert capacity is a function of the token batch, "
+                      "coupling decode lanes: a batched paged step would "
+                      "not be token-identical to per-lane decode",
+        }))
+
+
+_register()

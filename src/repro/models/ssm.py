@@ -491,3 +491,25 @@ def decode_step(cfg, params, state, tokens, **_):
     x = nn.rms_norm(params["final_norm"], x)
     logits = nn.unembed(params["embed"], x[:, None, :])
     return logits, {"groups": new_groups, "pos": state["pos"] + 1}
+
+
+def _register():
+    import sys
+
+    from repro.models import registry
+    registry.register(registry.FamilySpec(
+        family="ssm", module=sys.modules[__name__],
+        batched_prefill=False, padded_prefill=False, paging=False,
+        pure_kv_state=False, servable=True, token_stream_data=True,
+        notes={
+            "batched_prefill": "recurrent state advances strictly "
+                               "token-by-token (prefill scans the prompt)",
+            "padded_prefill": "recurrent state cannot be rewound past a "
+                              "pad tail",
+            "paging": "O(1) recurrent state — nothing to page",
+            "pure_kv_state": "decode state is conv/ssd recurrences, not a "
+                             "KV cache",
+        }))
+
+
+_register()

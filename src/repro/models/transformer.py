@@ -175,3 +175,46 @@ def decode_step(cfg, params, state, tokens, *, window=None):
     logits = nn.unembed(params["embed"], x)
     new_state = {"kv": {"k": nk, "v": nv, "index": kv["index"] + tokens.shape[1]}}
     return logits, new_state
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+def _kv_state_bytes(cfg, batch: int, max_seq: int) -> int:
+    """Analytic residency of the pure KV decode state: K + V planes of
+    (L, b, s, n_kv, hd) in ``cfg.kv_cache_dtype`` plus the int32 write
+    index — must agree with ``jax.eval_shape`` over ``init_decode_state``
+    (tests/test_registry.py cross-checks)."""
+    item = jnp.dtype(cfg.kv_cache_dtype).itemsize
+    kv = 2 * cfg.n_layers * batch * max_seq * cfg.n_kv_heads \
+        * cfg.head_dim * item
+    return kv + jnp.dtype(jnp.int32).itemsize
+
+
+def _kv_block_bytes(cfg, block_size: int) -> int:
+    """Analytic residency of ONE physical KV block across all layers."""
+    item = jnp.dtype(cfg.kv_cache_dtype).itemsize
+    return 2 * cfg.n_layers * block_size * cfg.n_kv_heads \
+        * cfg.head_dim * item
+
+
+def _register():
+    import sys
+
+    from repro.models import registry
+    mod = sys.modules[__name__]
+    for family, tokens_only in (("dense", True), ("vlm", False)):
+        registry.register(registry.FamilySpec(
+            family=family, module=mod,
+            batched_prefill=True, padded_prefill=True, paging=True,
+            pure_kv_state=True, servable=True,
+            token_stream_data=tokens_only,
+            notes={} if tokens_only else {
+                "token_stream_data": "VLM batches carry fused patch+text "
+                                     "embeddings, not raw token streams"},
+            decode_state_cost=_kv_state_bytes,
+            kv_block_cost=_kv_block_bytes))
+
+
+_register()

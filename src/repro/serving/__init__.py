@@ -1,5 +1,8 @@
 """Continuous-batching multi-model inference (see docs/serving.md)."""
 
+from repro.models.registry import CapabilityFallbackWarning
+from repro.serving.backends import (BACKENDS, DecodeBackend, PagedBackend,
+                                    SlotBackend, make_backend)
 from repro.serving.engine import InferenceEngine, pow2_buckets
 from repro.serving.multi import MultiModelServer
 from repro.serving.paging import BlockPool, blocks_for_rows, default_n_blocks
@@ -10,4 +13,6 @@ from repro.serving.slots import SlotPool, stack_trees, write_slots
 __all__ = ["InferenceEngine", "MultiModelServer", "KVBudget", "PagedKVBudget",
            "RequestQueue", "Request", "Status", "SlotPool", "BlockPool",
            "blocks_for_rows", "default_n_blocks", "stack_trees",
-           "write_slots", "pow2_buckets"]
+           "write_slots", "pow2_buckets", "DecodeBackend", "SlotBackend",
+           "PagedBackend", "BACKENDS", "make_backend",
+           "CapabilityFallbackWarning"]

@@ -1,0 +1,576 @@
+"""DecodeBackend: one surface for decode-state placement + admission cost.
+
+``InferenceEngine`` owns the request lifecycle (queue, bucketing, prefill
+grouping, metrics); a **backend** owns where decode state lives and what a
+request's residency costs.  The engine selects a backend object once and
+never branches on layout again — adding a backend (or a feature inside
+one) touches no engine call sites.  The protocol:
+
+    free_lanes                      -> lanes available for admission
+    admission_check(req, rows)      -> raise iff the request can NEVER fit
+    reserve(req, rows) -> bool      -> admission: lane + byte reservation
+    release(req)                    -> retire: free lane, release bytes
+    fresh_states(n, rows)           -> transient states for a prefill group
+    write_prefill(group, states)    -> move prefilled rows into the backend
+    decode(params, tokens, active)  -> one pooled decode step (all lanes)
+    advance(lane)                   -> post-token bookkeeping
+    summary()                       -> backend-specific metric extras
+
+Two implementations:
+
+* ``SlotBackend`` — every request owns a ``max_seq``-sized slot of a
+  stacked decode-state pool; admission charges a constant ``slot_bytes``.
+  Works for every servable family.
+* ``PagedBackend`` — K/V lives in a refcounted ``BlockPool`` of fixed-size
+  blocks; admission reserves only the blocks the request's actual
+  prompt + decode extent can touch, charged against a ``DeviceMemory``
+  ledger.  Ships **copy-on-write prefix sharing**: requests with a common
+  block-aligned prompt prefix alias the same physical pages (refcounted),
+  admission charges only the unshared blocks, and the first write past the
+  shared extent copies the boundary block before touching it — outputs
+  stay token-identical to unshared decode while common-prefix workloads
+  admit strictly more concurrency under the same byte budget
+  (tests/test_prefix_sharing.py, ``make backend-smoke``).
+
+Both charge their reservations through the same budget shapes
+(``KVBudget`` / ``PagedKVBudget`` over ``core.spilling.DeviceMemory``), so
+a session's device byte ledger arbitrates decode state exactly like SHARP
+shard promotions.
+"""
+
+from __future__ import annotations
+
+import hashlib
+from functools import lru_cache
+from typing import Optional, Protocol, Sequence, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import api
+from repro.models.registry import spec as family_spec
+from repro.serving.paging import (BlockPool, blocks_for_rows,
+                                  default_n_blocks)
+from repro.serving.queue import KVBudget, PagedKVBudget
+from repro.serving.request import Request
+from repro.serving.slots import SlotPool, stack_trees, write_slots
+from repro.training.train_loop import make_decode_step, make_paged_decode_step
+
+
+@runtime_checkable
+class DecodeBackend(Protocol):
+    """Structural protocol every decode backend implements (see module
+    docstring for the call contract)."""
+
+    name: str
+
+    @property
+    def free_lanes(self) -> int: ...
+
+    def admission_check(self, req: Request, prefill_rows: int) -> None: ...
+
+    def reserve(self, req: Request, prefill_rows: int) -> bool: ...
+
+    def release(self, req: Request) -> None: ...
+
+    def fresh_states(self, n: int, prefill_rows: int): ...
+
+    def write_prefill(self, group: Sequence[Request], states) -> None: ...
+
+    def decode(self, params, tokens: np.ndarray,
+               active: dict) -> np.ndarray: ...
+
+    def advance(self, lane: int) -> None: ...
+
+    def summary(self) -> dict: ...
+
+
+# ---------------------------------------------------------------------------
+# compiled decode programs (module-level caches: a fresh backend for an
+# already-loaded model never recompiles)
+# ---------------------------------------------------------------------------
+
+@lru_cache(maxsize=None)
+def _compiled_decode(cfg, window):
+    """Slot decode vmapped over the slot axis; the pre-step pool state is
+    donated so XLA updates the KV cache in place instead of copying the
+    whole pool every tick."""
+    return jax.jit(jax.vmap(make_decode_step(cfg, window=window),
+                            in_axes=(None, 0, 0)), donate_argnums=(1,))
+
+
+@lru_cache(maxsize=None)
+def _compiled_paged_decode(cfg, window, impl):
+    """One-token decode through block tables, pages donated in place."""
+    return jax.jit(make_paged_decode_step(cfg, window=window, impl=impl),
+                   donate_argnums=(1,))
+
+
+@lru_cache(maxsize=None)
+def _compiled_page_scatter(block_size):
+    """Scatter freshly prefilled contiguous KV rows into physical blocks.
+
+    k/v_new: (n, L, 1, W, nkv, hd) stacked prefill output, W a multiple of
+    ``block_size``; ids: (n * W/bs,) physical block per logical block, all
+    requests concatenated (aliased blocks are redirected to the garbage
+    block — their owner already holds identical rows).  Pages are donated
+    — the scatter updates the pool in place instead of copying every page
+    per admission."""
+    def scatter(kp, vp, k_new, v_new, ids):
+        n, L, _, W, nkv, hd = k_new.shape
+        nb = W // block_size
+
+        def resh(a):
+            a = a[:, :, 0].transpose(1, 0, 2, 3, 4)        # (L, n, W, kv, hd)
+            return a.reshape(L, n * nb, block_size, nkv, hd)
+
+        kp = kp.at[:, ids].set(resh(k_new).astype(kp.dtype))
+        vp = vp.at[:, ids].set(resh(v_new).astype(vp.dtype))
+        return kp, vp
+
+    return jax.jit(scatter, donate_argnums=(0, 1))
+
+
+@lru_cache(maxsize=None)
+def _compiled_page_copy():
+    """Copy one physical block's rows (all layers) src -> dst: the
+    copy-on-write primitive.  Pages donated — an in-place row copy, not a
+    pool copy."""
+    def copy(kp, vp, src, dst):
+        kp = kp.at[:, dst].set(kp[:, src])
+        vp = vp.at[:, dst].set(vp[:, src])
+        return kp, vp
+
+    return jax.jit(copy, donate_argnums=(0, 1))
+
+
+# ---------------------------------------------------------------------------
+# slot backend
+# ---------------------------------------------------------------------------
+
+class SlotBackend:
+    """Fixed slot pool: constant ``slot_bytes`` admission, every family."""
+
+    name = "slot"
+
+    def __init__(self, cfg, capacity: int, max_seq: int, *,
+                 window: Optional[int] = None,
+                 kv_budget_bytes: Optional[int] = None, ledger=None):
+        self.cfg = cfg
+        self.capacity = capacity
+        self.max_seq = max_seq
+        self.slot_bytes = family_spec(cfg).decode_state_bytes(cfg, 1, max_seq)
+        self.pool = SlotPool(cfg, capacity, max_seq)
+        self.ledger = ledger
+        if ledger is not None:
+            if kv_budget_bytes is not None:
+                raise ValueError(
+                    "pass either a shared DeviceMemory ledger or a private "
+                    "kv_budget_bytes, not both")
+            # slot-granular reservations against the shared device ledger:
+            # one budget arbitrates slots, pages, and SHARP promotions
+            self.budget = PagedKVBudget(ledger, self.slot_bytes)
+        else:
+            self.budget = KVBudget(kv_budget_bytes, self.slot_bytes)
+        self._decode = _compiled_decode(cfg, window)
+
+    @property
+    def free_lanes(self) -> int:
+        return self.pool.n_free
+
+    def admission_check(self, req: Request, prefill_rows: int) -> None:
+        if isinstance(self.budget, PagedKVBudget) \
+                and self.slot_bytes > self.ledger.budget:
+            raise ValueError(
+                f"one decode slot costs {self.slot_bytes} B but the ledger "
+                f"budget is {self.ledger.budget} B — the engine can never "
+                "admit this request")
+
+    def _reserve_one(self) -> bool:
+        if isinstance(self.budget, PagedKVBudget):
+            return self.budget.reserve(1)
+        return self.budget.reserve()
+
+    def reserve(self, req: Request, prefill_rows: int) -> bool:
+        if not self._reserve_one():
+            return False
+        req.slot = self.pool.alloc(req.request_id)
+        return True
+
+    def release(self, req: Request) -> None:
+        self.pool.free(req.slot)
+        if isinstance(self.budget, PagedKVBudget):
+            self.budget.release(1)
+        else:
+            self.budget.release()
+
+    def fresh_states(self, n: int, prefill_rows: int):
+        return self.pool.fresh_states(n)
+
+    def write_prefill(self, group: Sequence[Request], states) -> None:
+        slots = [r.slot for r in group]
+        self.pool.state = write_slots(self.pool.state, states, slots)
+
+    def decode(self, params, tokens: np.ndarray, active: dict) -> np.ndarray:
+        toks = jnp.asarray(tokens)
+        ntoks, self.pool.state = self._decode(params, self.pool.state, toks)
+        # np.array (copy): asarray of a jax array is a read-only view, and
+        # admission writes freshly prefilled tokens into this buffer
+        return np.array(jax.block_until_ready(ntoks), np.int32)
+
+    def advance(self, lane: int) -> None:
+        pass
+
+    def summary(self) -> dict:
+        return {}
+
+
+# ---------------------------------------------------------------------------
+# paged backend (block-granular admission + copy-on-write prefix sharing)
+# ---------------------------------------------------------------------------
+
+class PagedBackend:
+    """Refcounted block pool; admission charges only unshared blocks."""
+
+    name = "paged"
+
+    def __init__(self, cfg, capacity: int, max_seq: int, *,
+                 window: Optional[int] = None, block_size: int = 16,
+                 n_blocks: Optional[int] = None,
+                 kv_budget_bytes: Optional[int] = None, ledger=None,
+                 paged_impl: Optional[str] = None,
+                 prefix_share: bool = True):
+        from repro.core.spilling import DeviceMemory
+        from repro.kernels import ops as kops
+        if ledger is not None and kv_budget_bytes is not None:
+            raise ValueError(
+                "pass either a shared DeviceMemory ledger or a private "
+                "kv_budget_bytes, not both")
+        self.cfg = cfg
+        self.capacity = capacity
+        self.max_seq = max_seq
+        self.block_size = block_size
+        self.prefix_share = bool(prefix_share)
+        self.max_blocks = blocks_for_rows(max_seq, block_size)
+        block_bytes = family_spec(cfg).kv_block_bytes(cfg, block_size)
+        worst = default_n_blocks(capacity, max_seq, block_size, n_blocks)
+        if ledger is None:
+            budget = (kv_budget_bytes if kv_budget_bytes is not None
+                      else (worst - 1) * block_bytes)
+            if budget < block_bytes:
+                raise ValueError(
+                    f"KV budget {budget} B below one block "
+                    f"({block_bytes} B): nothing could ever be admitted")
+            ledger = DeviceMemory(-1, budget)
+        self.ledger = ledger
+        if n_blocks is None:
+            # never materialize pages the byte budget can't admit anyway:
+            # cap the physical pool at the budget's worth of blocks
+            worst = max(2, min(worst,
+                               int(ledger.budget) // block_bytes + 1))
+        self.pool = BlockPool(cfg, worst, block_size)
+        self.budget = PagedKVBudget(ledger, self.pool.block_bytes)
+        self.paged_impl = paged_impl or kops.default_paged_impl()
+        self._decode = _compiled_paged_decode(cfg, window, self.paged_impl)
+        self._page_scatter = _compiled_page_scatter(block_size)
+        self._page_copy = _compiled_page_copy()
+        self._tables = np.full((capacity, self.max_blocks),
+                               BlockPool.GARBAGE, np.int32)
+        self._lengths = np.zeros((capacity,), np.int32)
+        self._lane_free = list(range(capacity - 1, -1, -1))
+        self._lane_blocks: dict[int, list[int]] = {}   # logical -> physical
+        self._lane_owned: dict[int, set[int]] = {}     # charge-owned blocks
+        self._committed_blocks = 0   # sum of active reservations + orphans
+        self._fresh_by_width: dict[int, object] = {}
+        # prefix index: full-block token chains -> physical block, plus a
+        # parent-chain children map for boundary (partial-block) matches
+        self._index: dict[bytes, int] = {}
+        self._children: dict[bytes, list[int]] = {}
+        self._block_tokens: dict[int, np.ndarray] = {}
+        self._rev: dict[int, tuple] = {}               # bid -> (key, parent)
+        self._orphans: set[int] = set()  # charged blocks whose owner retired
+        self.shared_block_hits = 0       # blocks aliased instead of allocated
+        self.cow_copies = 0              # copy-on-write block copies
+
+    # -- sizing --------------------------------------------------------------
+    def _prefill_width(self, prefill_rows: int) -> int:
+        """Contiguous rows the prefill writes, rounded up to whole blocks
+        (the scatter moves whole blocks; the round-up tail is masked)."""
+        return blocks_for_rows(prefill_rows,
+                               self.block_size) * self.block_size
+
+    def _worst_blocks(self, req: Request, prefill_rows: int) -> int:
+        """Blocks for the WORST CASE this request can touch — its prefill
+        footprint or its full decode extent, whichever is larger."""
+        rows = max(self._prefill_width(prefill_rows),
+                   req.prompt_len + req.max_new_tokens - 1)
+        return blocks_for_rows(rows, self.block_size)
+
+    @property
+    def free_lanes(self) -> int:
+        return len(self._lane_free)
+
+    # -- prefix matching -----------------------------------------------------
+    def _chain_keys(self, prompt: np.ndarray, n_full: int) -> list[bytes]:
+        """Cumulative-content keys for the prompt's full blocks: key[j]
+        digests tokens [0, (j+1)*bs).  One incremental hash walk — O(plen)
+        total with O(1)-sized keys, instead of storing every byte prefix."""
+        h = hashlib.sha256()
+        keys = []
+        bs = self.block_size
+        for j in range(n_full):
+            h.update(prompt[j * bs:(j + 1) * bs].tobytes())
+            keys.append(h.digest())
+        return keys
+
+    _ROOT = b"root"          # parent key of block 0's chain
+
+    def _match_prefix(self, prompt: np.ndarray):
+        """Physical blocks this prompt can alias: the longest run of fully
+        covered prompt blocks whose token chains are indexed, plus (when
+        every full block matched) a boundary block whose indexed tokens
+        start with the prompt's partial tail."""
+        if not self.prefix_share:
+            return [], None
+        bs = self.block_size
+        plen = int(prompt.shape[0])
+        n_full = plen // bs
+        keys = self._chain_keys(prompt, n_full)
+        aliased: list[int] = []
+        for j in range(n_full):
+            bid = self._index.get(keys[j])
+            if bid is None:
+                break
+            aliased.append(bid)
+        boundary = None
+        tail = plen - n_full * bs
+        if tail and len(aliased) == n_full:
+            parent = keys[n_full - 1] if n_full else self._ROOT
+            for bid in self._children.get(parent, ()):
+                toks = self._block_tokens.get(bid)
+                if toks is not None and toks.shape[0] >= tail \
+                        and bool((toks[:tail] == prompt[n_full * bs:]).all()):
+                    boundary = bid
+                    break
+        return aliased, boundary
+
+    def _register_prefix(self, req: Request, n_aliased: int,
+                         boundary_aliased: bool) -> None:
+        """Index this request's OWNED prompt blocks so later arrivals can
+        alias them (aliased blocks are already indexed by their owner).
+        ``_block_tokens`` keeps each indexed block's own tokens so a chain
+        match is confirmed against real content at alias time — boundary
+        matches compare tokens; full-block matches ride on the digest."""
+        if not self.prefix_share:
+            return
+        bs = self.block_size
+        prompt = req.prompt
+        plen = req.prompt_len
+        blocks = self._lane_blocks[req.slot]
+        n_full = plen // bs
+        keys = self._chain_keys(prompt, n_full)
+        for j in range(n_aliased, n_full):
+            bid = blocks[j]
+            key = keys[j]
+            parent = keys[j - 1] if j else self._ROOT
+            self._index[key] = bid
+            self._children.setdefault(parent, []).append(bid)
+            self._block_tokens[bid] = prompt[j * bs:(j + 1) * bs]
+            self._rev[bid] = (key, parent)
+        tail = plen - n_full * bs
+        if tail and not boundary_aliased and n_full < len(blocks):
+            # partial boundary block: no full chain key, but boundary-
+            # matchable by later arrivals whose tail it covers
+            bid = blocks[n_full]
+            parent = keys[n_full - 1] if n_full else self._ROOT
+            self._children.setdefault(parent, []).append(bid)
+            self._block_tokens[bid] = prompt[n_full * bs:plen]
+            self._rev[bid] = (None, parent)
+
+    def _unindex(self, bid: int) -> None:
+        entry = self._rev.pop(bid, None)
+        if entry is None:
+            return
+        key, parent = entry
+        if key is not None:
+            self._index.pop(key, None)
+        kids = self._children.get(parent)
+        if kids is not None:
+            kids.remove(bid)
+            if not kids:
+                del self._children[parent]
+        self._block_tokens.pop(bid, None)
+
+    # -- admission -----------------------------------------------------------
+    def admission_check(self, req: Request, prefill_rows: int) -> None:
+        """Reject requests that can NEVER fit even unshared — queued
+        forever at the FIFO head they would livelock admission."""
+        nb = self._worst_blocks(req, prefill_rows)
+        if nb > self.pool.n_allocatable \
+                or nb * self.pool.block_bytes > self.ledger.budget:
+            raise ValueError(
+                f"request needs {nb} KV blocks "
+                f"({nb * self.pool.block_bytes} B) but the engine can "
+                f"never admit more than {self.pool.n_allocatable} "
+                f"blocks / {self.ledger.budget} B — raise the KV "
+                "budget or lower max_new_tokens")
+
+    def reserve(self, req: Request, prefill_rows: int) -> bool:
+        nb_worst = self._worst_blocks(req, prefill_rows)
+        aliased, boundary = self._match_prefix(req.prompt)
+        # fully shared aligned blocks are never written by this request
+        # (its first decode row lands past them), so only unshared blocks
+        # are charged; an aliased boundary block still charges one block —
+        # its copy-on-write copy at the first decode write
+        need = nb_worst - len(aliased)
+        if self._committed_blocks + need > self.pool.n_allocatable:
+            return False
+        if not self.budget.reserve(need):
+            return False
+        req.reserved_blocks = need
+        self._committed_blocks += need
+        lane = self._lane_free.pop()
+        nb0 = self._prefill_width(prefill_rows) // self.block_size
+        owned = self.pool.alloc(nb0 - len(aliased) - bool(boundary))
+        blocks = [self.pool.incref(b) for b in aliased]
+        if boundary is not None:
+            blocks.append(self.pool.incref(boundary))
+        self.shared_block_hits += len(blocks)
+        req.shared_blocks = len(blocks)
+        blocks.extend(owned)
+        self._lane_blocks[lane] = blocks
+        self._lane_owned[lane] = set(owned)
+        self._tables[lane, :] = BlockPool.GARBAGE
+        self._tables[lane, :nb0] = blocks
+        self._lengths[lane] = 0
+        req.peak_blocks = nb0
+        req.slot = lane
+        self._register_prefix(req, len(aliased), boundary is not None)
+        return True
+
+    # -- retirement ----------------------------------------------------------
+    def _drop_alias(self, bid: int) -> None:
+        """Drop a non-owned reference; if that frees the block, settle the
+        orphan charge its dead owner left behind."""
+        if self.pool.decref(bid) == 0:
+            self._unindex(bid)
+            if bid in self._orphans:
+                self._orphans.discard(bid)
+                self.budget.release(1)
+                self._committed_blocks -= 1
+
+    def release(self, req: Request) -> None:
+        lane = req.slot
+        blocks = self._lane_blocks.pop(lane)
+        owned = self._lane_owned.pop(lane)
+        orphaned = 0
+        for bid in blocks:
+            if bid in owned:
+                if self.pool.decref(bid) == 0:
+                    self._unindex(bid)
+                else:
+                    # still aliased by a live sharer: keep the block's
+                    # charge alive as an engine-held orphan until the
+                    # last reference drops
+                    self._orphans.add(bid)
+                    orphaned += 1
+            else:
+                self._drop_alias(bid)
+        self.budget.release(req.reserved_blocks - orphaned)
+        self._committed_blocks -= req.reserved_blocks - orphaned
+        self._tables[lane, :] = BlockPool.GARBAGE
+        self._lengths[lane] = 0
+        self._lane_free.append(lane)
+
+    # -- prefill -------------------------------------------------------------
+    def fresh_states(self, n: int, prefill_rows: int):
+        """Transient block-aligned-width states — just wide enough for the
+        prompt group; the rows are scattered into pages and the temporary
+        is dropped, so peak transient bytes stay O(prompt)."""
+        width = self._prefill_width(prefill_rows)
+        tmpl = self._fresh_by_width.get(width)
+        if tmpl is None:
+            tmpl = api.init_decode_state(self.cfg, 1, width)
+            self._fresh_by_width[width] = tmpl
+        return stack_trees([tmpl] * n)
+
+    def write_prefill(self, group: Sequence[Request], states) -> None:
+        """Scatter a prefilled contiguous group into the block pool pages.
+        Aliased blocks are redirected to the garbage block: their owner
+        already wrote identical rows (same tokens, same positions)."""
+        ids = np.concatenate([
+            [bid if bid in self._lane_owned[r.slot] else BlockPool.GARBAGE
+             for bid in self._lane_blocks[r.slot]]
+            for r in group]).astype(np.int32)
+        kp, vp = self._page_scatter(
+            self.pool.pages["k"], self.pool.pages["v"],
+            states["kv"]["k"], states["kv"]["v"], jnp.asarray(ids))
+        self.pool.pages = {"k": kp, "v": vp}
+        for r in group:
+            self._lengths[r.slot] = r.prompt_len
+
+    # -- decode --------------------------------------------------------------
+    def _prepare_lanes(self, active: dict) -> None:
+        """Make every active lane's next write row safe: allocate the block
+        it lands in (the admission reservation guarantees this can never
+        fail), and copy-on-write any aliased block about to be written —
+        the write would otherwise clobber rows other lanes are reading."""
+        for lane, req in active.items():
+            j = int(self._lengths[lane]) // self.block_size
+            blocks = self._lane_blocks[lane]
+            owned = self._lane_owned[lane]
+            while len(blocks) <= j:
+                (bid,) = self.pool.alloc(1)
+                self._tables[lane, len(blocks)] = bid
+                blocks.append(bid)
+                owned.add(bid)
+            if blocks[j] not in owned:
+                (dst,) = self.pool.alloc(1)
+                src = blocks[j]
+                kp, vp = self._page_copy(
+                    self.pool.pages["k"], self.pool.pages["v"], src, dst)
+                self.pool.pages = {"k": kp, "v": vp}
+                self._tables[lane, j] = dst
+                blocks[j] = dst
+                owned.add(dst)
+                self.cow_copies += 1
+                self._drop_alias(src)
+            req.peak_blocks = max(req.peak_blocks or 0, len(blocks))
+
+    def decode(self, params, tokens: np.ndarray, active: dict) -> np.ndarray:
+        self._prepare_lanes(active)
+        ntoks, self.pool.pages = self._decode(
+            params, self.pool.pages, jnp.asarray(self._tables),
+            jnp.asarray(self._lengths), jnp.asarray(tokens[:, 0, :]))
+        return np.array(jax.block_until_ready(ntoks), np.int32)[:, None, :]
+
+    def advance(self, lane: int) -> None:
+        self._lengths[lane] += 1
+
+    def summary(self) -> dict:
+        return {
+            "block_size": self.block_size,
+            "block_bytes": self.pool.block_bytes,
+            "n_blocks": self.pool.n_blocks,
+            "kv_page_peak_bytes": self.pool.peak_bytes(),
+            "kv_block_allocs": self.pool.total_allocs,
+            "paged_impl": self.paged_impl,
+            "prefix_share": self.prefix_share,
+            "shared_block_hits": self.shared_block_hits,
+            "cow_copies": self.cow_copies,
+        }
+
+
+BACKENDS = {"slot": SlotBackend, "paged": PagedBackend}
+
+
+def make_backend(name: str, cfg, capacity: int, max_seq: int, **kw):
+    """Construct a backend by name, dropping kwargs it does not take."""
+    if name not in BACKENDS:
+        raise ValueError(f"unknown decode backend {name!r} "
+                         f"(have {sorted(BACKENDS)})")
+    if name == "slot":
+        kw = {k: v for k, v in kw.items()
+              if k in ("window", "kv_budget_bytes", "ledger")}
+    return BACKENDS[name](cfg, capacity, max_seq, **kw)

@@ -1,68 +1,58 @@
-"""Continuous-batching inference engine: fixed slot pool or paged KV cache.
+"""Continuous-batching inference engine over a pluggable DecodeBackend.
 
 One engine serves one loaded model.  Per tick (``step()``):
 
-  1. retire finished requests (free slot/blocks, release KV budget),
-  2. admit queued requests while the KV budget allows — each admission
-     group is prefilled in ONE jitted call (``make_prefill_into_cache``
-     vmapped over same-length prompts) and scattered into the pool,
+  1. retire finished requests (backend releases lanes + KV reservation),
+  2. admit queued requests while the backend's byte budget allows — each
+     admission group is prefilled in ONE jitted call
+     (``make_prefill_into_cache`` vmapped over same-length prompts) and
+     handed to the backend (``write_prefill``),
   3. run ONE pooled decode step so every active request advances a token.
 
 Requests therefore join and leave between decode steps without ever
 retracing or perturbing in-flight lanes; outputs are token-identical to
 running each request alone (tests/test_serving.py).
 
-Two decode-state layouts share this lifecycle:
-
-* **Slot pool** (default): every request owns a ``max_seq``-sized stacked
-  decode state; admission charges a constant ``slot_bytes``.  Works for
-  every servable family.
-* **Paged** (``paged=True``, dense/vlm): K/V lives in a ``BlockPool`` of
-  fixed-size blocks; admission reserves only the blocks the request's
-  actual prompt + decode budget can touch (against a ``DeviceMemory``
-  ledger — shareable with SHARP training), prefill scatters into pages,
-  and the decode step reads K/V through per-lane block tables
-  (``kernels/paged_attention.py`` on TPU, pure-jnp gather elsewhere).
-  Short-prompt workloads admit strictly more concurrency under the same
-  byte budget.  Families the paged step cannot cover token-identically
-  (recurrent: O(1) state, nothing to page; moe: expert capacity couples
-  lanes) silently keep the slot pool, mirroring the bucketing fallback.
+Where decode state lives — and what a request's residency costs — is the
+**backend's** concern (``serving/backends.py``): ``SlotBackend`` (default;
+every servable family) or ``PagedBackend`` (block-granular admission with
+copy-on-write prefix sharing; families whose ``FamilySpec`` declares
+``paging``).  The engine selects the backend once at construction — from
+the family's declared capabilities — and never branches on layout again.
+Requesting a backend the family cannot support falls back to the slot
+backend with a structured ``CapabilityFallbackWarning`` (mirrored by the
+bucketing fallback), and the effective backend is recorded in
+``summary()`` / plan metadata / ``session.poll()``.
 """
 
 from __future__ import annotations
 
 import time
+import warnings
 from functools import lru_cache
-from typing import Optional, Sequence
+from typing import Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.models import api
-from repro.serving.paging import (BlockPool, blocks_for_rows,
-                                  default_n_blocks)
-from repro.serving.queue import KVBudget, PagedKVBudget, RequestQueue
+from repro.models.registry import CapabilityFallbackWarning
+from repro.models.registry import spec as family_spec
+from repro.serving.backends import DecodeBackend, make_backend
+from repro.serving.queue import RequestQueue
 from repro.serving.request import Request, Status
-from repro.serving.slots import SlotPool, stack_trees, write_slots
-from repro.training.train_loop import (make_decode_step,
-                                       make_paged_decode_step,
-                                       make_padded_prefill_into_cache,
+from repro.training.train_loop import (make_padded_prefill_into_cache,
                                        make_prefill_into_cache)
 
 
 @lru_cache(maxsize=None)
-def _compiled_steps(cfg, window):
-    """Per-(cfg, window) jitted programs, shared across engine instances so
+def _compiled_prefill(cfg, window):
+    """Per-(cfg, window) jitted prefill, shared across engine instances so
     a fresh engine for an already-loaded model never recompiles.  The state
-    argument is donated: the pre-step pool state is dead after each call,
-    and donation lets XLA update the KV cache in place instead of copying
-    the whole pool every tick."""
-    decode = jax.jit(jax.vmap(make_decode_step(cfg, window=window),
-                              in_axes=(None, 0, 0)), donate_argnums=(1,))
-    prefill = jax.jit(jax.vmap(make_prefill_into_cache(cfg, window=window),
-                               in_axes=(None, 0, 0)), donate_argnums=(1,))
-    return decode, prefill
+    argument is donated: the pre-prefill fresh states are dead after each
+    call, letting XLA write the prompt rows in place."""
+    return jax.jit(jax.vmap(make_prefill_into_cache(cfg, window=window),
+                            in_axes=(None, 0, 0)), donate_argnums=(1,))
 
 
 @lru_cache(maxsize=None)
@@ -71,36 +61,6 @@ def _compiled_padded_prefill(cfg, window):
     lengths passed alongside.  Retraces per (n, bucket), not per (n, plen)."""
     return jax.jit(jax.vmap(make_padded_prefill_into_cache(cfg, window=window),
                             in_axes=(None, 0, 0, 0)), donate_argnums=(1,))
-
-
-@lru_cache(maxsize=None)
-def _compiled_paged_decode(cfg, window, impl):
-    """One-token decode through block tables, pages donated in place."""
-    return jax.jit(make_paged_decode_step(cfg, window=window, impl=impl),
-                   donate_argnums=(1,))
-
-
-@lru_cache(maxsize=None)
-def _compiled_page_scatter(block_size):
-    """Scatter freshly prefilled contiguous KV rows into physical blocks.
-
-    k/v_new: (n, L, 1, W, nkv, hd) stacked prefill output, W a multiple of
-    ``block_size``; ids: (n * W/bs,) physical block per logical block, all
-    requests concatenated.  Pages are donated — the scatter updates the
-    pool in place instead of copying every page per admission."""
-    def scatter(kp, vp, k_new, v_new, ids):
-        n, L, _, W, nkv, hd = k_new.shape
-        nb = W // block_size
-
-        def resh(a):
-            a = a[:, :, 0].transpose(1, 0, 2, 3, 4)        # (L, n, W, kv, hd)
-            return a.reshape(L, n * nb, block_size, nkv, hd)
-
-        kp = kp.at[:, ids].set(resh(k_new).astype(kp.dtype))
-        vp = vp.at[:, ids].set(resh(v_new).astype(vp.dtype))
-        return kp, vp
-
-    return jax.jit(scatter, donate_argnums=(0, 1))
 
 
 def pow2_buckets(max_seq: int) -> tuple[int, ...]:
@@ -119,17 +79,20 @@ class InferenceEngine:
                  window: Optional[int] = None,
                  model_name: Optional[str] = None,
                  bucket_sizes: Optional[Sequence[int]] = None,
+                 backend: Union[str, DecodeBackend, None] = None,
                  paged: bool = False, block_size: int = 16,
                  n_blocks: Optional[int] = None, ledger=None,
                  paged_impl: Optional[str] = None,
+                 prefix_share: bool = True,
                  clock=time.perf_counter):
-        if cfg.is_encoder_decoder:
-            # encdec decode states need real encoder output; init_decode_state
-            # with enc_out=None zero-fills the cross-attn cache and every
-            # generated token would silently condition on nothing
+        spec = family_spec(cfg)
+        if not spec.servable:
+            # e.g. encoder-decoder decode states need real encoder output:
+            # init_decode_state(enc_out=None) zero-fills the cross-attn
+            # cache and every generated token would condition on nothing
             raise ValueError(
-                f"{cfg.name}: encoder-decoder families are not servable "
-                "through InferenceEngine (no encoder-output path yet)")
+                f"{cfg.name} ({cfg.family}): not servable through "
+                f"InferenceEngine — {spec.why_not('servable')}")
         if capacity < 1:
             raise ValueError("capacity must be >= 1")
         self.cfg = cfg
@@ -139,24 +102,57 @@ class InferenceEngine:
         self.capacity = capacity
         self.max_seq = max_seq
         self.queue = RequestQueue(clock=clock)
-        self.slot_bytes = api.decode_state_bytes(cfg, 1, max_seq)
-        self._decode, self._prefill = _compiled_steps(cfg, window)
-        # families whose decode state is not a pure lane-independent KV
-        # cache silently keep the slot pool (mirrors the bucketing fallback)
-        self.paged = bool(paged) and api.supports_paging(cfg)
-        if self.paged:
-            self._init_paged(kv_budget_bytes, block_size, n_blocks, ledger,
-                             paged_impl, window)
+        self.slot_bytes = spec.decode_state_bytes(cfg, 1, max_seq)
+        self._prefill = _compiled_prefill(cfg, window)
+        # -- backend selection: once, from declared capabilities ------------
+        if paged and isinstance(backend, str) and backend != "paged":
+            raise ValueError(
+                f"conflicting arguments: paged=True but backend="
+                f"{backend!r}; drop one of them")
+        requested = backend if backend is not None else \
+            ("paged" if paged else "slot")
+        if isinstance(requested, str):
+            self.requested_backend = requested
+            effective = requested
+            if requested == "paged" and not spec.paging:
+                warnings.warn(
+                    f"{cfg.name} ({cfg.family}): paged backend requested "
+                    f"but the family does not declare paging "
+                    f"({spec.why_not('paging')}); falling back to the "
+                    "slot backend", CapabilityFallbackWarning, stacklevel=2)
+                effective = "slot"
+            self.backend: DecodeBackend = make_backend(
+                effective, cfg, capacity, max_seq, window=window,
+                kv_budget_bytes=kv_budget_bytes, ledger=ledger,
+                block_size=block_size, n_blocks=n_blocks,
+                paged_impl=paged_impl, prefix_share=prefix_share)
         else:
-            self.pool = SlotPool(cfg, capacity, max_seq)
-            self.budget = KVBudget(kv_budget_bytes, self.slot_bytes)
-            self.ledger = None
+            if paged and requested.name != "paged":
+                raise ValueError(
+                    "conflicting arguments: paged=True but the injected "
+                    f"backend is {requested.name!r}; drop one of them")
+            for attr in ("capacity", "max_seq"):
+                if getattr(requested, attr, None) != getattr(self, attr):
+                    raise ValueError(
+                        f"injected {requested.name!r} backend has "
+                        f"{attr}={getattr(requested, attr, None)} but the "
+                        f"engine was built with {attr}="
+                        f"{getattr(self, attr)}; they must match — the "
+                        "engine sizes its token buffer and admission "
+                        "checks from its own values")
+            self.backend = requested
+            self.requested_backend = requested.name
         # length-bucketed admission: pad prompt groups to the next bucket so
         # prefill retraces are bounded per (n, bucket) instead of per
         # (n, plen).  Families whose padded prefill is not token-identical
-        # (recurrent: no rewind; moe: pad tokens steal expert capacity)
-        # silently keep exact-length groups.
-        if bucket_sizes is not None and not api.supports_padded_prefill(cfg):
+        # fall back to exact-length groups, with a structured warning.
+        if bucket_sizes is not None and not spec.padded_prefill:
+            warnings.warn(
+                f"{cfg.name} ({cfg.family}): bucket_sizes requested but "
+                f"the family does not declare padded_prefill "
+                f"({spec.why_not('padded_prefill')}); falling back to "
+                "exact-length admission groups", CapabilityFallbackWarning,
+                stacklevel=2)
             bucket_sizes = None
         if bucket_sizes is not None:
             # a bucket cannot outsize the cache; overlong prompts fall back
@@ -179,46 +175,30 @@ class InferenceEngine:
         self.peak_concurrency = 0
         self._tok_s_ema: Optional[float] = None     # per-token decode seconds
 
-    def _init_paged(self, kv_budget_bytes, block_size, n_blocks, ledger,
-                    paged_impl, window) -> None:
-        from repro.core.spilling import DeviceMemory
-        from repro.kernels import ops as kops
-        if ledger is not None and kv_budget_bytes is not None:
-            raise ValueError(
-                "pass either a shared DeviceMemory ledger or a private "
-                "kv_budget_bytes, not both")
-        self.block_size = block_size
-        self.max_blocks = blocks_for_rows(self.max_seq, block_size)
-        block_bytes = api.kv_block_bytes(self.cfg, block_size)
-        worst = default_n_blocks(self.capacity, self.max_seq, block_size,
-                                 n_blocks)
-        if ledger is None:
-            budget = (kv_budget_bytes if kv_budget_bytes is not None
-                      else (worst - 1) * block_bytes)
-            if budget < block_bytes:
-                raise ValueError(
-                    f"KV budget {budget} B below one block "
-                    f"({block_bytes} B): nothing could ever be admitted")
-            ledger = DeviceMemory(-1, budget)
-        self.ledger = ledger
-        if n_blocks is None:
-            # never materialize pages the byte budget can't admit anyway:
-            # cap the physical pool at the budget's worth of blocks
-            worst = max(2, min(worst,
-                               int(ledger.budget) // block_bytes + 1))
-        self.pool = BlockPool(self.cfg, worst, block_size)
-        self.budget = PagedKVBudget(ledger, self.pool.block_bytes)
-        self.paged_impl = paged_impl or kops.default_paged_impl()
-        self._paged_decode = _compiled_paged_decode(self.cfg, window,
-                                                    self.paged_impl)
-        self._page_scatter = _compiled_page_scatter(block_size)
-        self._tables = np.full((self.capacity, self.max_blocks),
-                               BlockPool.GARBAGE, np.int32)
-        self._lengths = np.zeros((self.capacity,), np.int32)
-        self._lane_free = list(range(self.capacity - 1, -1, -1))
-        self._lane_blocks: dict[int, list[int]] = {}
-        self._committed_blocks = 0   # sum of active reservations, in blocks
-        self._fresh_by_width: dict[int, object] = {}
+    # -- backend introspection (compat delegates) ----------------------------
+    @property
+    def paged(self) -> bool:
+        return self.backend.name == "paged"
+
+    @property
+    def pool(self):
+        return self.backend.pool
+
+    @property
+    def budget(self):
+        return self.backend.budget
+
+    @property
+    def ledger(self):
+        return getattr(self.backend, "ledger", None)
+
+    @property
+    def block_size(self):
+        return getattr(self.backend, "block_size", None)
+
+    @property
+    def paged_impl(self):
+        return getattr(self.backend, "paged_impl", None)
 
     # -- submission ---------------------------------------------------------
     def submit(self, prompt, max_new_tokens: int, *,
@@ -232,18 +212,9 @@ class InferenceEngine:
         if req.prompt_len + req.max_new_tokens - 1 > self.max_seq:
             raise ValueError(
                 f"prompt+generation exceeds engine max_seq={self.max_seq}")
-        if self.paged:
-            # a reservation that can NEVER fit would sit at the head of the
-            # FIFO forever and livelock admission — reject it up front
-            nb = self._blocks_for(req)
-            if nb > self.pool.n_allocatable \
-                    or nb * self.pool.block_bytes > self.ledger.budget:
-                raise ValueError(
-                    f"request needs {nb} KV blocks "
-                    f"({nb * self.pool.block_bytes} B) but the engine can "
-                    f"never admit more than {self.pool.n_allocatable} "
-                    f"blocks / {self.ledger.budget} B — raise the KV "
-                    "budget or lower max_new_tokens")
+        # a request that can NEVER fit would sit at the head of the FIFO
+        # forever and livelock admission — the backend rejects it up front
+        self.backend.admission_check(req, self._bucket(req.prompt_len))
         return self.queue.push(req)
 
     # -- introspection ------------------------------------------------------
@@ -258,7 +229,7 @@ class InferenceEngine:
 
     @property
     def n_free_lanes(self) -> int:
-        return len(self._lane_free) if self.paged else self.pool.n_free
+        return self.backend.free_lanes
 
     def tok_seconds_estimate(self) -> float:
         """Measured per-token decode seconds (EMA); cost-model prior until
@@ -280,17 +251,8 @@ class InferenceEngine:
             if req.done:
                 req.status = Status.FINISHED
                 req.finish_time = self.clock()
+                self.backend.release(req)
                 req.slot = None
-                if self.paged:
-                    self.pool.free(self._lane_blocks.pop(lane))
-                    self._tables[lane, :] = BlockPool.GARBAGE
-                    self._lengths[lane] = 0
-                    self.budget.release(req.reserved_blocks)
-                    self._committed_blocks -= req.reserved_blocks
-                    self._lane_free.append(lane)
-                else:
-                    self.pool.free(lane)
-                    self.budget.release()
                 del self._active[lane]
                 self.completed.append(req)
 
@@ -303,51 +265,13 @@ class InferenceEngine:
                     return b
         return plen
 
-    # -- paged admission sizing ---------------------------------------------
-    def _prefill_rows(self, plen: int) -> int:
-        """Contiguous rows the prefill writes, rounded up to whole blocks
-        (the scatter moves whole blocks; the round-up tail is masked)."""
-        return blocks_for_rows(self._bucket(plen),
-                               self.block_size) * self.block_size
-
-    def _blocks_for(self, req: Request) -> int:
-        """Reservation: blocks for the WORST CASE this request can touch —
-        its prefill footprint or its full decode extent, whichever is
-        larger.  Reserved up front so lazy growth can never fail; pages are
-        only physically allocated as decode crosses block boundaries."""
-        rows = max(self._prefill_rows(req.prompt_len),
-                   req.prompt_len + req.max_new_tokens - 1)
-        return blocks_for_rows(rows, self.block_size)
-
     def _admit(self) -> list[Request]:
         admitted: list[Request] = []
-        while self.queue and self.n_free_lanes:
-            if self.paged:
-                req = self.queue.peek()
-                nb = self._blocks_for(req)
-                # both guarantees up front: ledger bytes AND physical
-                # blocks, so mid-flight growth can never fail
-                if self._committed_blocks + nb > self.pool.n_allocatable:
-                    break
-                if not self.budget.reserve(nb):
-                    break
-                self.queue.pop()
-                req.reserved_blocks = nb
-                self._committed_blocks += nb
-                lane = self._lane_free.pop()
-                nb0 = self._prefill_rows(req.prompt_len) // self.block_size
-                ids = self.pool.alloc(nb0)
-                self._lane_blocks[lane] = ids
-                self._tables[lane, :] = BlockPool.GARBAGE
-                self._tables[lane, :nb0] = ids
-                self._lengths[lane] = 0
-                req.peak_blocks = nb0
-                req.slot = lane
-            else:
-                if not self.budget.reserve():
-                    break
-                req = self.queue.pop()
-                req.slot = self.pool.alloc(req.request_id)
+        while self.queue and self.backend.free_lanes:
+            req = self.queue.peek()
+            if not self.backend.reserve(req, self._bucket(req.prompt_len)):
+                break
+            self.queue.pop()
             req.admit_time = self.clock()
             req.status = Status.RUNNING
             admitted.append(req)
@@ -360,7 +284,7 @@ class InferenceEngine:
         for req in admitted:
             by_len.setdefault(self._bucket(req.prompt_len), []).append(req)
         for plen, group in sorted(by_len.items()):
-            states = self._fresh_states(len(group), plen)
+            states = self.backend.fresh_states(len(group), plen)
             t0 = self.clock()
             if self.bucket_sizes:
                 tokens = jnp.asarray(np.stack(
@@ -379,11 +303,7 @@ class InferenceEngine:
             # true prompt tokens, not the padded bucket width — keeps
             # prefill_tok_per_s comparable between bucketed and exact modes
             self.prefill_tokens += sum(r.prompt_len for r in group)
-            if self.paged:
-                self._scatter_prefill(group, states)
-            else:
-                slots = [r.slot for r in group]
-                self.pool.state = write_slots(self.pool.state, states, slots)
+            self.backend.write_prefill(group, states)
             first = np.asarray(jnp.argmax(logits, axis=-1), np.int32)  # (n, 1)
             now = self.clock()
             for i, req in enumerate(group):
@@ -392,47 +312,7 @@ class InferenceEngine:
                 req.first_token_time = now
                 self._tokens[req.slot, 0, 0] = tok
                 self._active[req.slot] = req
-                if self.paged:
-                    self._lengths[req.slot] = req.prompt_len
         return admitted
-
-    def _fresh_states(self, n: int, width_key: int):
-        """Stacked zero states for ``n`` requests about to be prefilled.
-
-        Slot mode: full ``max_seq``-wide slots (scattered into the pool).
-        Paged mode: transient block-aligned width — just wide enough for
-        the prompt group; the rows are scattered into pages and the
-        temporary is dropped, so peak transient bytes stay O(prompt)."""
-        if not self.paged:
-            return self.pool.fresh_states(n)
-        width = blocks_for_rows(width_key, self.block_size) * self.block_size
-        tmpl = self._fresh_by_width.get(width)
-        if tmpl is None:
-            tmpl = api.init_decode_state(self.cfg, 1, width)
-            self._fresh_by_width[width] = tmpl
-        return stack_trees([tmpl] * n)
-
-    def _scatter_prefill(self, group, states) -> None:
-        """Move a prefilled contiguous group into the block pool pages."""
-        ids = np.concatenate([self._lane_blocks[r.slot] for r in group])
-        kp, vp = self._page_scatter(
-            self.pool.pages["k"], self.pool.pages["v"],
-            states["kv"]["k"], states["kv"]["v"],
-            jnp.asarray(ids, jnp.int32))
-        self.pool.pages = {"k": kp, "v": vp}
-
-    def _grow_tables(self) -> None:
-        """Allocate the block the next decode row lands in, lane by lane —
-        the admission reservation guarantees this can never fail."""
-        for lane in self._active:
-            need = int(self._lengths[lane]) // self.block_size + 1
-            blocks = self._lane_blocks[lane]
-            while len(blocks) < need:
-                (bid,) = self.pool.alloc(1)
-                self._tables[lane, len(blocks)] = bid
-                blocks.append(bid)
-                req = self._active[lane]
-                req.peak_blocks = max(req.peak_blocks or 0, len(blocks))
 
     def step(self) -> bool:
         """One engine tick; returns True while there is work left."""
@@ -442,22 +322,8 @@ class InferenceEngine:
         self.peak_concurrency = max(self.peak_concurrency, len(self._active))
         if self._active:
             t0 = self.clock()
-            if self.paged:
-                self._grow_tables()
-                ntoks, self.pool.pages = self._paged_decode(
-                    self.params, self.pool.pages,
-                    jnp.asarray(self._tables), jnp.asarray(self._lengths),
-                    jnp.asarray(self._tokens[:, 0, :]))
-                ntoks = np.array(jax.block_until_ready(ntoks),
-                                 np.int32)[:, None, :]
-            else:
-                toks = jnp.asarray(self._tokens)
-                ntoks, self.pool.state = self._decode(self.params,
-                                                      self.pool.state, toks)
-                # np.array (copy): asarray of a jax array is a read-only
-                # view, and admission writes freshly prefilled tokens into
-                # this buffer
-                ntoks = np.array(jax.block_until_ready(ntoks), np.int32)
+            ntoks = self.backend.decode(self.params, self._tokens,
+                                        self._active)
             dt = self.clock() - t0
             self.decode_s += dt
             self.decode_steps += 1
@@ -468,8 +334,7 @@ class InferenceEngine:
             self._tokens = ntoks
             for lane, req in self._active.items():
                 req.generated.append(int(ntoks[lane, 0, 0]))
-                if self.paged:
-                    self._lengths[lane] += 1
+                self.backend.advance(lane)
         return self.has_work()
 
     def run(self, max_steps: Optional[int] = None) -> list[Request]:
@@ -489,12 +354,14 @@ class InferenceEngine:
             "model": self.model_name,
             "capacity": self.capacity,
             "max_seq": self.max_seq,
+            "backend": self.backend.name,
+            "requested_backend": self.requested_backend,
             "paged": self.paged,
             "bucket_sizes": list(self.bucket_sizes)
                 if self.bucket_sizes else None,
             "slot_bytes": self.slot_bytes,
-            "kv_budget_bytes": self.budget.budget_bytes,
-            "kv_peak_bytes": self.budget.peak_bytes,
+            "kv_budget_bytes": self.backend.budget.budget_bytes,
+            "kv_peak_bytes": self.backend.budget.peak_bytes,
             "peak_concurrency": self.peak_concurrency,
             "n_completed": len(self.completed),
             "decode_steps": self.decode_steps,
@@ -505,13 +372,5 @@ class InferenceEngine:
             "decode_tok_per_s": round(self.decode_tokens / self.decode_s, 1)
                 if self.decode_s else None,
         }
-        if self.paged:
-            out.update(
-                block_size=self.block_size,
-                block_bytes=self.pool.block_bytes,
-                n_blocks=self.pool.n_blocks,
-                kv_page_peak_bytes=self.pool.peak_bytes(),
-                kv_block_allocs=self.pool.total_allocs,
-                paged_impl=self.paged_impl,
-            )
+        out.update(self.backend.summary())
         return out

@@ -14,6 +14,12 @@ valid physical index (the Pallas kernel's scalar-prefetch index map needs
 no clamping) and the lane-batched KV write scatter has a harmless target.
 Attention masks rows past each lane's length, so garbage contents are
 mathematically invisible.
+
+Blocks are **refcounted**: ``alloc`` hands a block out at refcount 1, and
+``incref``/``decref`` let several decode lanes alias one physical block —
+the mechanism copy-on-write prefix sharing builds on (requests with a
+common block-aligned prompt prefix read the same pages).  A block returns
+to the free list only when its last reference drops.
 """
 
 from __future__ import annotations
@@ -24,7 +30,7 @@ from repro.models import api
 
 
 class BlockPool:
-    """Free-list of physical KV blocks + the pages pytree itself."""
+    """Free-list of refcounted physical KV blocks + the pages pytree."""
 
     GARBAGE = 0          # reserved physical block; never allocated
 
@@ -41,7 +47,7 @@ class BlockPool:
         self.pages = api.init_kv_pages(cfg, n_blocks, block_size)
         # low ids handed out first (stable layouts in tests); 0 is reserved
         self._free = list(range(n_blocks - 1, 0, -1))
-        self._allocated: set[int] = set()
+        self._ref: dict[int, int] = {}          # allocated block -> refcount
         self.total_allocs = 0        # lifetime blocks handed out (reuse stat)
         self.peak_used = 0
 
@@ -55,7 +61,7 @@ class BlockPool:
 
     @property
     def n_used(self) -> int:
-        return len(self._allocated)
+        return len(self._ref)
 
     def used_bytes(self) -> int:
         return self.n_used * self.block_bytes
@@ -72,19 +78,44 @@ class BlockPool:
                 f"{self.block_bytes} B each) — raise n_blocks or lower "
                 "concurrency")
         ids = [self._free.pop() for _ in range(n)]
-        self._allocated.update(ids)
+        for b in ids:
+            self._ref[b] = 1
         self.total_allocs += n
         self.peak_used = max(self.peak_used, self.n_used)
         return ids
 
+    def ref(self, bid: int) -> int:
+        """Current refcount (0 when not allocated)."""
+        return self._ref.get(bid, 0)
+
+    def incref(self, bid: int) -> int:
+        """Alias an allocated block (prefix sharing); returns the block id
+        so table-building code can write ``incref(bid)`` in place."""
+        if bid not in self._ref:
+            raise RuntimeError(
+                f"BlockPool.incref({bid}): block is not allocated "
+                "(cannot alias a free or garbage block)")
+        self._ref[bid] += 1
+        return bid
+
+    def decref(self, bid: int) -> int:
+        """Drop one reference; frees the block when the last one goes.
+        Returns the remaining refcount."""
+        if bid not in self._ref:
+            raise RuntimeError(
+                f"BlockPool.decref({bid}): block is not allocated "
+                "(double free, or the reserved garbage block)")
+        self._ref[bid] -= 1
+        if self._ref[bid] == 0:
+            del self._ref[bid]
+            self._free.append(bid)
+            return 0
+        return self._ref[bid]
+
     def free(self, ids) -> None:
+        """Drop one reference per id (the sole-owner fast path)."""
         for b in ids:
-            if b not in self._allocated:
-                raise RuntimeError(
-                    f"BlockPool.free({b}): block is not allocated "
-                    "(double free, or the reserved garbage block)")
-            self._allocated.discard(b)
-            self._free.append(b)
+            self.decref(b)
 
 
 def blocks_for_rows(rows: int, block_size: int) -> int:

@@ -1,15 +1,20 @@
 """FIFO request queue (arrival-stamped) + KV-budget admission control.
 
-Two admission granularities share this module:
+Two admission granularities share this module (each ``DecodeBackend`` in
+``serving/backends.py`` owns one):
 
 * ``KVBudget`` — slot-granular: every running request owns one slot of the
   fixed-capacity pool at a constant ``slot_bytes`` residency (computed via
-  ``api.decode_state_bytes`` — no allocation).
-* ``PagedKVBudget`` — page-granular: a request reserves only the KV blocks
-  its actual prompt plus decode budget can touch, charged against a shared
+  the family spec's ``decode_state_bytes`` cost fn — no allocation).
+* ``PagedKVBudget`` — ledger-unit-granular: a request reserves only the
+  units (KV blocks, or whole slots when ``SlotBackend`` is handed a
+  ledger) its actual extent can touch, charged against a shared
   ``core.spilling.DeviceMemory`` ledger — the SAME ledger SHARP shard
-  promotions charge, so train double-buffers and serve pages split one
-  device byte budget.
+  promotions charge, so train double-buffers and serve reservations split
+  one device byte budget.  With prefix sharing, a request's reservation
+  covers only its UNSHARED blocks; blocks whose owner retired while still
+  aliased stay charged by the backend as orphans until the last reference
+  drops.
 
 Both enforce ``reserved <= budget`` as an invariant: a request is admitted
 only if its reservation fits, so concurrency degrades gracefully when the

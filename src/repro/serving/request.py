@@ -44,10 +44,12 @@ class Request:
     status: Status = Status.QUEUED
     slot: Optional[int] = None               # pool slot / decode lane
     generated: list[int] = field(default_factory=list)
-    # paged engines only: blocks reserved at admission (the byte guarantee)
-    # and the high-water mark of blocks actually allocated while running
+    # paged engines only: blocks reserved at admission (the byte guarantee),
+    # the high-water mark of blocks actually allocated while running, and
+    # how many physical blocks were aliased from a prompt-prefix donor
     reserved_blocks: Optional[int] = None
     peak_blocks: Optional[int] = None
+    shared_blocks: Optional[int] = None
 
     def __post_init__(self):
         self.prompt = np.asarray(self.prompt, np.int32).reshape(-1)
@@ -88,6 +90,7 @@ class Request:
         if self.reserved_blocks is not None:
             out["kv_reserved_blocks"] = self.reserved_blocks
             out["kv_peak_blocks"] = self.peak_blocks
+            out["kv_shared_blocks"] = self.shared_blocks
         out["queue_wait_s"] = dur(self.arrival_time, self.admit_time)
         out["ttft_s"] = dur(self.arrival_time, self.first_token_time)
         out["e2e_s"] = dur(self.arrival_time, self.finish_time)

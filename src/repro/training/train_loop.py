@@ -15,7 +15,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.models import api
+from repro.models import api, registry
 from repro.models import moe as moe_mod
 from repro.models import layers as nn
 from repro.optim import optimizers as opt
@@ -169,7 +169,7 @@ def make_prefill_into_cache(cfg, *, window: Optional[int] = None):
 
     Returns ``prefill(params, state, tokens) -> (last_logits (b, V), state)``.
     """
-    if api.is_attention_family(cfg):
+    if registry.spec(cfg).batched_prefill:
         def prefill(params, state, tokens):
             logits, state = api.decode_step(cfg, params, state, tokens,
                                             window=window)
@@ -209,11 +209,12 @@ def make_padded_prefill_into_cache(cfg, *, window: Optional[int] = None):
     and capacity-bounded MoE routing couples tokens — pad tokens consume
     expert capacity and displace real tokens' routes, changing logits.
     """
-    if not api.supports_padded_prefill(cfg):
+    if not registry.spec(cfg).padded_prefill:
         raise ValueError(
             f"{cfg.name} ({cfg.family}): padded prefill needs a rewindable "
-            "KV cache and per-token-independent mixing; recurrent/hybrid/"
-            "enc-dec/moe families must prefill at exact length")
+            "KV cache and per-token-independent mixing "
+            f"({registry.spec(cfg).why_not('padded_prefill')}); this "
+            "family must prefill at exact length")
 
     def rewind(path, leaf, delta):
         key = getattr(path[-1], "key", None) if path else None

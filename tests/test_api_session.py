@@ -543,3 +543,65 @@ def test_paged_serve_private_budget_keeps_own_ledger():
     eng = session.engine(sv)
     assert eng.ledger is not session.devices[0]
     assert eng.budget.budget_bytes == budget
+
+
+# ---------------------------------------------------------------------------
+# backend selection + capability fallbacks surface in plan meta and poll
+# ---------------------------------------------------------------------------
+
+def test_plan_meta_records_effective_backend_and_capabilities():
+    cfg = _cfg()
+    session = Session(_hc())
+    sv = session.submit(ServeJob(cfg, seed=1, capacity=2, max_seq=32,
+                                 backend="paged", block_size=8))
+    meta = session.plan().job(sv).meta
+    assert meta["backend"] == meta["requested_backend"] == "paged"
+    assert meta["capabilities"]["paging"] is True
+    assert meta["capability_fallbacks"] == {}
+    assert meta["prefix_share"] is True
+    st = session.poll(sv)
+    assert st["backend"] == "paged"
+    assert st["capabilities"]["padded_prefill"] is True
+
+
+def test_plan_meta_records_backend_fallback_with_reason():
+    """ServeJob(paged=True) on a recurrent family is no longer a silent
+    degrade: the plan meta and poll() both carry the effective backend
+    and the reason, and engine construction warns once."""
+    from repro.serving import CapabilityFallbackWarning
+    cfg = get_config("xlstm-350m", smoke=True)
+    session = Session(_hc())
+    sv = session.submit(ServeJob(cfg, seed=1, capacity=2, max_seq=32,
+                                 paged=True, bucket_sizes=(8, 16)))
+    meta = session.plan().job(sv).meta
+    assert meta["requested_backend"] == "paged"
+    assert meta["backend"] == "slot" and not meta["paged"]
+    assert "nothing to page" in meta["capability_fallbacks"]["backend"]
+    assert "rewound" in meta["capability_fallbacks"]["bucket_sizes"]
+    assert meta["bucket_sizes"] is None
+    assert meta["capabilities"]["paging"] is False
+    st = session.poll(sv)
+    assert st["backend"] == "slot" and st["requested_backend"] == "paged"
+    with pytest.warns(CapabilityFallbackWarning):
+        session.engine(sv)
+    assert session.poll(sv)["backend"] == "slot"
+
+
+def test_bad_backend_name_fails_at_submit():
+    session = Session(_hc())
+    with pytest.raises(ValueError, match="known decode backends"):
+        session.submit(ServeJob(_cfg(), backend="mmap"))
+    with pytest.raises(ValueError, match="conflicting spec"):
+        session.submit(ServeJob(_cfg(), backend="slot", paged=True))
+    assert session.jobs() == {}              # nothing half-registered
+
+
+def test_prefix_share_disabled_via_job_spec():
+    cfg = _cfg()
+    session = Session(_hc())
+    sv = session.submit(ServeJob(cfg, seed=1, capacity=2, max_seq=32,
+                                 backend="paged", block_size=8,
+                                 prefix_share=False))
+    assert session.plan().job(sv).meta["prefix_share"] is False
+    eng = session.engine(sv)
+    assert eng.summary()["prefix_share"] is False

@@ -1,0 +1,298 @@
+"""Copy-on-write prefix sharing in the paged decode backend.
+
+The load-bearing properties:
+
+* requests with a common block-aligned prompt prefix ALIAS the donor's
+  physical blocks (refcounted in ``BlockPool``) instead of allocating and
+  re-writing their own copies — admission charges only unshared blocks,
+  so a common-prefix workload admits strictly more concurrency under the
+  same byte budget than unshared paging;
+* the first write past the shared extent triggers COPY-ON-WRITE: the
+  boundary block is copied before the lane's decode row lands in it, so
+  aliasing never perturbs the donor — outputs stay token-identical to
+  unshared paged decode and to sequential per-request decode;
+* the pool never double-frees: blocks freed only when the LAST reference
+  drops, donor-first and sharer-first retirement orders both settle the
+  engine-held orphan charge, and a drained engine returns every block to
+  the free list with the ledger back at zero.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.spilling import DeviceMemory
+from repro.models import api
+from repro.serving import (BlockPool, InferenceEngine, PagedBackend,
+                           blocks_for_rows)
+from repro.training.train_loop import make_decode_step, make_prefill_into_cache
+
+MAX_SEQ = 48
+BS = 4
+
+
+@pytest.fixture(scope="module")
+def dense():
+    cfg = get_config("qwen3-0.6b", smoke=True)
+    return cfg, api.init_params(cfg, jax.random.PRNGKey(0))
+
+
+def _prompt(cfg, seed, plen):
+    return np.asarray(jax.random.randint(
+        jax.random.PRNGKey(seed), (plen,), 0, cfg.vocab_size, jnp.int32))
+
+
+@functools.lru_cache(maxsize=None)
+def _ref_steps(cfg):
+    return (jax.jit(make_prefill_into_cache(cfg)),
+            jax.jit(make_decode_step(cfg)))
+
+
+def _reference(cfg, params, prompt, gen, max_seq=MAX_SEQ):
+    prefill, decode = _ref_steps(cfg)
+    state = api.init_decode_state(cfg, 1, max_seq)
+    logits, state = prefill(params, state, jnp.asarray(prompt)[None, :])
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+    out = [int(tok[0, 0])]
+    for _ in range(gen - 1):
+        tok, state = decode(params, state, tok)
+        out.append(int(tok[0, 0]))
+    return out
+
+
+def _engine(cfg, params, *, share, capacity=4, **kw):
+    return InferenceEngine(cfg, params, capacity=capacity, max_seq=MAX_SEQ,
+                           paged=True, block_size=BS, prefix_share=share,
+                           **kw)
+
+
+# ---------------------------------------------------------------------------
+# aliasing + refcounts
+# ---------------------------------------------------------------------------
+
+def test_common_prefix_aliases_blocks_and_stays_token_identical(dense):
+    """Four requests sharing a 2-block prefix + distinct tails: the full
+    prefix blocks are aliased (refcounted), only tails allocate, and every
+    stream equals its solo reference."""
+    cfg, params = dense
+    prefix = _prompt(cfg, 600, 2 * BS)
+    prompts = [np.concatenate([prefix, _prompt(cfg, 610 + i, BS)])
+               for i in range(4)]
+    shared = _engine(cfg, params, share=True)
+    reqs = [shared.submit(p, 5) for p in prompts]
+    # admitted together: the first request owns the prefix, the rest alias
+    shared.step()
+    be = shared.backend
+    assert be.shared_block_hits == 3 * 2       # 3 sharers x 2 prefix blocks
+    owner_prefix = be._lane_blocks[reqs[0].slot][:2]
+    for r in reqs[1:]:
+        assert be._lane_blocks[r.slot][:2] == owner_prefix
+        assert r.shared_blocks == 2
+    assert all(shared.pool.ref(b) == 4 for b in owner_prefix)
+    shared.run()
+    for p, r in zip(prompts, reqs):
+        assert r.generated == _reference(cfg, params, p, 5)
+    assert shared.pool.n_free == shared.pool.n_allocatable
+    assert shared.budget.reserved_bytes == 0
+
+
+def test_admission_charges_only_unshared_blocks(dense):
+    cfg, params = dense
+    prefix = _prompt(cfg, 620, 2 * BS)
+    p1 = np.concatenate([prefix, _prompt(cfg, 621, BS)])
+    p2 = np.concatenate([prefix, _prompt(cfg, 622, BS)])
+    eng = _engine(cfg, params, share=True)
+    r1 = eng.submit(p1, 4)
+    r2 = eng.submit(p2, 4)
+    eng.step()
+    worst = blocks_for_rows(3 * BS + 4 - 1, BS)
+    assert r1.reserved_blocks == worst          # owner pays in full
+    assert r2.reserved_blocks == worst - 2      # sharer skips the 2 aliased
+    eng.run()
+
+
+def test_cow_fires_on_boundary_write_and_preserves_tokens(dense):
+    """Identical prompts with a partial tail block: sharers alias the
+    donor's boundary block too, and the first decode write copies it
+    (COW) instead of clobbering rows the donor is still reading."""
+    cfg, params = dense
+    p = _prompt(cfg, 630, 2 * BS + 2)           # 2 full blocks + 2-row tail
+    unshared = _engine(cfg, params, share=False)
+    shared = _engine(cfg, params, share=True)
+    ru = [unshared.submit(p, 6) for _ in range(3)]
+    rs = [shared.submit(p, 6) for _ in range(3)]
+    unshared.run()
+    shared.run()
+    assert shared.backend.cow_copies == 2       # one copy per sharer
+    assert unshared.backend.cow_copies == 0
+    for a, b in zip(ru, rs):
+        assert a.generated == b.generated \
+            == _reference(cfg, params, p, 6)
+    # unshared wrote 3 copies of everything; shared allocated strictly less
+    assert shared.pool.total_allocs < unshared.pool.total_allocs
+
+
+def test_prefix_share_admits_more_under_fixed_budget(dense):
+    """The acceptance bar: under ONE byte budget, a common-prefix workload
+    admits strictly more concurrent requests with prefix sharing than
+    paged admission alone."""
+    cfg, params = dense
+    n, tail_gen = 6, 4
+    prefix = _prompt(cfg, 640, 8 * BS)          # 8 shared blocks
+    prompts = [np.concatenate([prefix, _prompt(cfg, 650 + i, 2)])
+               for i in range(n)]
+    worst = blocks_for_rows(len(prompts[0]) + tail_gen - 1, BS)
+    budget = 2 * worst * api.kv_block_bytes(cfg, BS)   # 2 unshared requests
+    done = {}
+    for share in (False, True):
+        eng = _engine(cfg, params, share=share, capacity=n,
+                      kv_budget_bytes=budget)
+        reqs = [eng.submit(p, tail_gen) for p in prompts]
+        eng.run()
+        assert eng.budget.peak_bytes <= budget
+        assert eng.pool.peak_bytes() <= budget
+        done[share] = (eng.peak_concurrency,
+                       [r.generated for r in reqs])
+    assert done[True][0] > done[False][0], \
+        f"sharing admitted {done[True][0]} <= unshared {done[False][0]}"
+    assert done[True][1] == done[False][1]      # token-identical throughout
+
+
+def test_late_arrival_aliases_running_donor(dense):
+    """A request that arrives AFTER the donor started decoding still
+    aliases the donor's prefix blocks, mid-flight, without perturbing
+    either stream."""
+    cfg, params = dense
+    prefix = _prompt(cfg, 660, 2 * BS)
+    pa = np.concatenate([prefix, _prompt(cfg, 661, 3)])
+    pb = np.concatenate([prefix, _prompt(cfg, 662, 5)])
+    eng = _engine(cfg, params, share=True)
+    ra = eng.submit(pa, 8)
+    eng.step()
+    eng.step()                                  # donor mid-decode
+    rb = eng.submit(pb, 6)
+    eng.run()
+    assert rb.shared_blocks == 2
+    assert ra.generated == _reference(cfg, params, pa, 8)
+    assert rb.generated == _reference(cfg, params, pb, 6)
+
+
+# ---------------------------------------------------------------------------
+# lifetime / accounting: never double-free, orphan charges settle
+# ---------------------------------------------------------------------------
+
+def test_donor_retires_first_orphan_charge_settles(dense):
+    """Donor finishes while a sharer still reads its prefix blocks: the
+    blocks stay alive (refcount), their bytes stay charged (engine-held
+    orphan), and everything frees exactly once when the sharer retires."""
+    cfg, params = dense
+    ledger = DeviceMemory(-1, budget_bytes=10**9)
+    eng = _engine(cfg, params, share=True, ledger=ledger)
+    prefix = _prompt(cfg, 670, 2 * BS)
+    donor = eng.submit(np.concatenate([prefix, _prompt(cfg, 671, 1)]), 2)
+    sharer = eng.submit(np.concatenate([prefix, _prompt(cfg, 672, 1)]), 12)
+    while not donor.done:
+        eng.step()
+        assert eng.pool.used_bytes() <= eng.budget.reserved_bytes
+    eng.step()                                  # donor retires here
+    assert donor.status.value == "finished" and not sharer.done
+    prefix_blocks = eng.backend._lane_blocks[sharer.slot][:2]
+    assert all(eng.pool.ref(b) == 1 for b in prefix_blocks)
+    assert eng.backend._orphans == set(prefix_blocks)
+    assert eng.pool.used_bytes() <= eng.budget.reserved_bytes
+    eng.run()
+    assert sharer.generated == _reference(
+        cfg, params,
+        np.concatenate([prefix, _prompt(cfg, 672, 1)]), 12)
+    assert eng.pool.n_free == eng.pool.n_allocatable
+    assert eng.budget.reserved_bytes == 0
+    assert ledger.kv_reserved_bytes == 0
+    assert not eng.backend._orphans
+
+
+def test_orphaned_prefix_is_still_sharable(dense):
+    """After the donor dies, a NEW arrival can still alias the orphaned
+    prefix blocks (the index keeps them while references last)."""
+    cfg, params = dense
+    eng = _engine(cfg, params, share=True)
+    prefix = _prompt(cfg, 680, 2 * BS)
+    donor = eng.submit(np.concatenate([prefix, _prompt(cfg, 681, 1)]), 2)
+    holder = eng.submit(np.concatenate([prefix, _prompt(cfg, 682, 1)]), 10)
+    while not donor.done:
+        eng.step()
+    eng.step()                                  # donor gone, holder running
+    late = eng.submit(np.concatenate([prefix, _prompt(cfg, 683, 2)]), 4)
+    eng.run()
+    assert late.shared_blocks == 2
+    assert late.generated == _reference(
+        cfg, params, np.concatenate([prefix, _prompt(cfg, 683, 2)]), 4)
+    assert eng.pool.n_free == eng.pool.n_allocatable
+    assert eng.budget.reserved_bytes == 0
+
+
+def test_block_pool_refcounts_never_double_free(dense):
+    cfg, _ = dense
+    pool = BlockPool(cfg, n_blocks=4, block_size=BS)
+    (a,) = pool.alloc(1)
+    assert pool.ref(a) == 1
+    pool.incref(a)
+    assert pool.ref(a) == 2
+    assert pool.decref(a) == 1                  # still held
+    assert pool.n_free == 2                     # not freed yet
+    assert pool.decref(a) == 0                  # last ref frees
+    assert pool.n_free == 3
+    with pytest.raises(RuntimeError, match="not allocated"):
+        pool.decref(a)                          # double free
+    with pytest.raises(RuntimeError, match="cannot alias"):
+        pool.incref(a)                          # alias a free block
+    with pytest.raises(RuntimeError, match="cannot alias"):
+        pool.incref(BlockPool.GARBAGE)
+
+
+def test_sharing_disabled_never_aliases(dense):
+    cfg, params = dense
+    eng = _engine(cfg, params, share=False)
+    p = _prompt(cfg, 690, 2 * BS + 1)
+    reqs = [eng.submit(p, 4) for _ in range(3)]
+    eng.run()
+    assert eng.backend.shared_block_hits == 0
+    assert eng.backend.cow_copies == 0
+    assert all(r.shared_blocks in (None, 0) for r in reqs)
+    assert eng.summary()["prefix_share"] is False
+
+
+def test_bucketed_prefill_composes_with_sharing(dense):
+    """Length buckets pad the prefill; shared blocks are skipped by the
+    page scatter, so bucketing + sharing still decode token-identically."""
+    cfg, params = dense
+    prefix = _prompt(cfg, 700, 2 * BS)
+    prompts = [np.concatenate([prefix, _prompt(cfg, 701 + i, 1 + i)])
+               for i in range(3)]
+    eng = _engine(cfg, params, share=True, bucket_sizes=(4, 8, 16, 32))
+    reqs = [eng.submit(p, 5) for p in prompts]
+    eng.run()
+    assert eng.backend.shared_block_hits > 0
+    for p, r in zip(prompts, reqs):
+        assert r.generated == _reference(cfg, params, p, 5)
+    assert eng.pool.n_free == eng.pool.n_allocatable
+
+
+def test_shared_summary_reports_reuse(dense):
+    cfg, params = dense
+    eng = _engine(cfg, params, share=True)
+    p = _prompt(cfg, 710, 3 * BS)
+    reqs = [eng.submit(p, 3) for _ in range(4)]
+    eng.run()
+    s = eng.summary()
+    assert s["prefix_share"] and s["shared_block_hits"] == 3 * 3
+    # block-reuse ratio: logical blocks referenced / physical allocated
+    ratio = (s["shared_block_hits"] + s["kv_block_allocs"]) \
+        / s["kv_block_allocs"]
+    assert ratio > 1
+    for r in reqs:
+        assert r.generated == _reference(cfg, params, p, 3)
+        assert r.metrics()["kv_shared_blocks"] == r.shared_blocks

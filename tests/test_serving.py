@@ -16,8 +16,8 @@ import pytest
 from repro.configs import get_config
 from repro.core.scheduler import sharded_lrtf
 from repro.models import api
-from repro.serving import (InferenceEngine, KVBudget, MultiModelServer,
-                           Request, Status)
+from repro.serving import (CapabilityFallbackWarning, InferenceEngine,
+                           KVBudget, MultiModelServer, Request, Status)
 from repro.training.train_loop import make_decode_step, make_prefill_into_cache
 
 MAX_SEQ = 64
@@ -85,7 +85,7 @@ def test_batched_prefill_matches_per_token_loop(dense):
 
 def test_prefill_scan_fallback_matches_loop(ssm):
     cfg, params = ssm
-    assert not api.is_attention_family(cfg)
+    assert not api.family_spec(cfg).batched_prefill
     tokens = jax.random.randint(jax.random.PRNGKey(6), (2, 10), 0,
                                 cfg.vocab_size, jnp.int32)
     state = api.init_decode_state(cfg, 2, MAX_SEQ)
@@ -404,15 +404,67 @@ def test_paged_with_buckets_token_identical(dense):
 
 def test_paged_falls_back_on_recurrent_and_moe(ssm):
     cfg, params = ssm
-    eng = InferenceEngine(cfg, params, capacity=2, max_seq=MAX_SEQ,
-                          paged=True)
+    with pytest.warns(CapabilityFallbackWarning, match="paged backend"):
+        eng = InferenceEngine(cfg, params, capacity=2, max_seq=MAX_SEQ,
+                              paged=True)
     assert not eng.paged                     # O(1) state: nothing to page
+    assert eng.backend.name == "slot"
+    assert eng.summary()["requested_backend"] == "paged"
     req = eng.submit(_prompt(cfg, 95, 6), 4)
     eng.run()
     assert req.generated == _reference(cfg, params, _prompt(cfg, 95, 6), 4)
     moe = get_config("mixtral-8x22b", smoke=True)
-    eng = InferenceEngine(moe, None, capacity=1, max_seq=16, paged=True)
+    with pytest.warns(CapabilityFallbackWarning):
+        eng = InferenceEngine(moe, None, capacity=1, max_seq=16, paged=True)
     assert not eng.paged                     # expert capacity couples lanes
+
+
+def test_backend_selected_by_name_and_unknown_rejected(dense):
+    cfg, params = dense
+    eng = InferenceEngine(cfg, params, capacity=2, max_seq=MAX_SEQ,
+                          backend="paged", block_size=8)
+    assert eng.paged and eng.backend.name == "paged"
+    eng = InferenceEngine(cfg, params, capacity=2, max_seq=MAX_SEQ,
+                          backend="slot")
+    assert not eng.paged and eng.backend.name == "slot"
+    with pytest.raises(ValueError, match="unknown decode backend"):
+        InferenceEngine(cfg, params, capacity=2, max_seq=MAX_SEQ,
+                        backend="mmap")
+    with pytest.raises(ValueError, match="conflicting"):
+        InferenceEngine(cfg, params, capacity=2, max_seq=MAX_SEQ,
+                        backend="slot", paged=True)
+
+
+def test_backend_instance_can_be_injected(dense):
+    """The engine accepts a pre-built DecodeBackend object — the session
+    selects a backend once and hands it over, no per-call branching."""
+    from repro.serving import SlotBackend
+    cfg, params = dense
+    be = SlotBackend(cfg, capacity=2, max_seq=MAX_SEQ)
+    eng = InferenceEngine(cfg, params, capacity=2, max_seq=MAX_SEQ,
+                          backend=be)
+    assert eng.backend is be
+    req = eng.submit(_prompt(cfg, 97, 8), 4)
+    eng.run()
+    assert req.generated == _reference(cfg, params, _prompt(cfg, 97, 8), 4)
+    # a mis-sized injected backend would desync the engine's token buffer
+    # and admission checks — rejected at construction
+    with pytest.raises(ValueError, match="must match"):
+        InferenceEngine(cfg, params, capacity=4, max_seq=MAX_SEQ,
+                        backend=SlotBackend(cfg, capacity=2,
+                                            max_seq=MAX_SEQ))
+    with pytest.raises(ValueError, match="conflicting"):
+        InferenceEngine(cfg, params, capacity=2, max_seq=MAX_SEQ,
+                        backend=SlotBackend(cfg, capacity=2,
+                                            max_seq=MAX_SEQ), paged=True)
+
+
+def test_bucket_fallback_warns_structured(ssm):
+    cfg, params = ssm
+    with pytest.warns(CapabilityFallbackWarning, match="bucket_sizes"):
+        eng = InferenceEngine(cfg, params, capacity=2, max_seq=MAX_SEQ,
+                              bucket_sizes=(8, 16))
+    assert eng.bucket_sizes is None
 
 
 def test_paged_summary_reports_page_stats(dense):
