@@ -9,12 +9,19 @@
 #                        copy-on-write prefix-share workload (self-asserting:
 #                        token identity, block-reuse ratio > 1, and strictly
 #                        more admitted concurrency than unshared paging)
+#   make spec-smoke  - speculative decode vs plain decode on both inner
+#                      backends (self-asserting: token identity, accept
+#                      rate, target steps strictly < generated tokens)
+#   make docs-check  - docs lint: relative links + [[refs]] resolve and
+#                      fenced python blocks compile (docs/*.md, README.md)
+#   make examples-smoke - run all four examples/*.py on their tiny configs
 
 PY ?= python
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export PYTHONPATH
 
-.PHONY: test test-fast bench-smoke plan-smoke paged-smoke backend-smoke
+.PHONY: test test-fast bench-smoke plan-smoke paged-smoke backend-smoke \
+    spec-smoke docs-check examples-smoke
 
 test:
 	$(PY) -m pytest -x -q
@@ -37,3 +44,15 @@ paged-smoke:
 
 backend-smoke:
 	$(PY) -m benchmarks.bench_serving --backend-smoke
+
+spec-smoke:
+	$(PY) -m benchmarks.bench_serving --spec
+
+docs-check:
+	$(PY) scripts/docs_check.py
+
+examples-smoke:
+	$(PY) examples/quickstart.py
+	$(PY) examples/large_model_single_device.py
+	$(PY) examples/model_selection.py
+	$(PY) examples/serve_batched.py

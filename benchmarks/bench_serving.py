@@ -263,6 +263,78 @@ def bench_prefix_share(arch="qwen3-0.6b", n_requests=6, prefix_blocks=8,
             "tokens_identical": share_toks == base_toks}
 
 
+def bench_spec(arch="qwen3-0.6b", draft_arch=None, n_requests=6,
+               plen=12, gen=16, max_seq=64, draft_k=4,
+               block_size=8) -> dict:
+    """Speculative decode vs plain decode on BOTH inner backends, one
+    workload.
+
+    The draft defaults to the target's own weights (*self-draft*): greedy
+    drafting then agrees with the target at every position, so every
+    verify forward accepts all k drafts — the mechanical upper bound that
+    makes the smoke assertions deterministic: outputs token-identical to
+    the non-spec baseline, accept-rate reported, and per-lane target
+    verify steps strictly fewer than generated tokens (``make
+    spec-smoke``; CI re-asserts from the JSON).  Pass a real smaller
+    ``draft_arch`` to measure true accept rates.
+    """
+    cfg = get_config(arch, smoke=True)
+    params = api.init_params(cfg, jax.random.PRNGKey(0))
+    if draft_arch is None or draft_arch == arch:
+        draft_cfg, draft_params = cfg, params
+        draft_name = f"{arch} (self-draft)"
+    else:
+        draft_cfg = get_config(draft_arch, smoke=True)
+        draft_params = api.init_params(draft_cfg, jax.random.PRNGKey(1))
+        draft_name = draft_arch
+    prompts = [np.asarray(jax.random.randint(
+        jax.random.PRNGKey(90 + i), (plen,), 0, cfg.vocab_size, jnp.int32))
+        for i in range(n_requests)]
+    gens = [gen - (i % 3) for i in range(n_requests)]
+
+    def drive(backend, **kw):
+        eng = InferenceEngine(cfg, params, capacity=4, max_seq=max_seq,
+                              backend=backend, block_size=block_size,
+                              model_name=arch, **kw)
+        reqs = [eng.submit(p, g) for p, g in zip(prompts, gens)]
+        t0 = time.perf_counter()
+        eng.run()
+        wall = time.perf_counter() - t0
+        toks = [r.generated for r in reqs]
+        return eng.summary(), toks, sum(map(len, toks)) / wall
+
+    out = {"arch": arch, "draft_model": draft_name, "draft_k": draft_k,
+           "n_requests": n_requests, "prompt_len": plen, "gen": gen}
+    for inner in ("slot", "paged"):
+        base_sum, base_toks, base_tps = drive(inner)
+        spec_sum, spec_toks, spec_tps = drive(
+            "spec", spec_inner=inner, draft_cfg=draft_cfg,
+            draft_params=draft_params, draft_k=draft_k)
+        assert spec_toks == base_toks, \
+            f"spec decode over {inner} diverged from plain {inner} decode"
+        n_gen = sum(map(len, spec_toks))
+        assert spec_sum["target_steps"] < spec_sum["spec_tokens"], \
+            (f"{inner}: {spec_sum['target_steps']} target steps for "
+             f"{spec_sum['spec_tokens']} spec tokens — speculation saved "
+             "nothing")
+        emit(f"serve_spec_{inner}_{arch}", 0.0,
+             f"{spec_sum['accepted_tokens_per_target_step']}tok/step")
+        out[inner] = {
+            "tokens_identical": spec_toks == base_toks,
+            "n_generated": n_gen,
+            "target_steps": spec_sum["target_steps"],
+            "spec_rounds": spec_sum["spec_rounds"],
+            "accept_rate": spec_sum["accepted_tokens_per_target_step"],
+            "draft_accept_rate": spec_sum["draft_accept_rate"],
+            "target_steps_lt_tokens":
+                spec_sum["target_steps"] < spec_sum["spec_tokens"],
+            "baseline_tok_per_s": round(base_tps, 1),
+            "spec_tok_per_s": round(spec_tps, 1),
+            "baseline_decode_steps": base_sum["decode_steps"],
+        }
+    return out
+
+
 # one servable arch per family the backend smoke exercises (encoder-decoder
 # families are not servable; vlm shares the transformer paths with dense)
 _SMOKE_FAMILY_ARCHS = {"dense": "qwen3-0.6b", "ssm": "xlstm-350m",
@@ -314,6 +386,7 @@ def run() -> None:
     bench_continuous()
     bench_paged()
     bench_prefix_share()
+    bench_spec()
 
 
 def main():
@@ -329,9 +402,21 @@ def main():
                     help="both decode backends per supporting family + the "
                     "prefix-share workload (self-asserting; make "
                     "backend-smoke)")
+    ap.add_argument("--spec", action="store_true",
+                    help="speculative decode vs plain decode on both inner "
+                    "backends (self-asserting: token-identical, accept "
+                    "rate, target steps < generated tokens; make "
+                    "spec-smoke)")
+    ap.add_argument("--draft-model", default=None,
+                    help="draft arch for --spec (default: self-draft)")
+    ap.add_argument("--draft-k", type=int, default=4)
     ap.add_argument("--arch", default="qwen3-0.6b")
     args = ap.parse_args()
-    if args.backend_smoke:
+    if args.spec:
+        print(json.dumps({"spec": bench_spec(
+            arch=args.arch, draft_arch=args.draft_model,
+            draft_k=args.draft_k)}))
+    elif args.backend_smoke:
         out = {"backends": bench_backends(),
                "prefix_share": bench_prefix_share(arch=args.arch)}
         print(json.dumps(out))

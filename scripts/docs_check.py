@@ -1,0 +1,125 @@
+#!/usr/bin/env python
+"""Docs lint (``make docs-check``): keep the doc set from rotting.
+
+Checks, over ``docs/*.md`` + ``README.md``:
+
+1. every relative markdown link ``[text](path)`` points at a file that
+   exists (http/https/mailto links are skipped);
+2. every ``#fragment`` on a relative link to a markdown file names a real
+   heading in the target (GitHub-style slugs), including same-file
+   ``(#fragment)`` links;
+3. every wiki-style cross-reference ``[[name]]`` resolves to
+   ``docs/<name>.md``;
+4. every fenced ```` ```python ```` block at least compiles
+   (``compile(..., "exec")``) — snippets with typos or stale syntax fail
+   here instead of in a reader's shell.
+
+Exit code 0 and a one-line summary when clean; one line per problem and
+exit code 1 otherwise.  No dependencies beyond the stdlib.
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+WIKI_RE = re.compile(r"\[\[([^\]#|]+)(?:#[^\]|]*)?(?:\|[^\]]*)?\]\]")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+FENCE_RE = re.compile(r"^```(\w*)[^\n]*\n(.*?)^```", re.MULTILINE | re.DOTALL)
+
+
+def doc_files() -> list[Path]:
+    files = sorted((ROOT / "docs").glob("*.md"))
+    readme = ROOT / "README.md"
+    if readme.exists():
+        files.append(readme)
+    return files
+
+
+def slugify(heading: str) -> str:
+    """GitHub-style anchor slug: lowercase, drop punctuation (inline code
+    ticks included), each whitespace char becomes one hyphen."""
+    heading = heading.strip().lower().replace("`", "")
+    heading = re.sub(r"[^\w\s-]", "", heading)
+    return re.sub(r"\s", "-", heading)
+
+
+def anchors_of(path: Path, cache: dict) -> set:
+    if path not in cache:
+        text = path.read_text(encoding="utf-8")
+        cache[path] = {slugify(h) for h in HEADING_RE.findall(text)}
+    return cache[path]
+
+
+def strip_fences(text: str) -> str:
+    """Remove fenced code blocks so links inside them are not checked."""
+    return re.sub(r"^```.*?^```", "", text, flags=re.MULTILINE | re.DOTALL)
+
+
+def check_links(path: Path, text: str, cache: dict) -> list[str]:
+    problems = []
+    for target in LINK_RE.findall(strip_fences(text)):
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        ref, _, frag = target.partition("#")
+        dest = path if not ref else (path.parent / ref).resolve()
+        if not dest.exists():
+            problems.append(f"{path.relative_to(ROOT)}: broken link "
+                            f"({target}) — {ref} does not exist")
+            continue
+        if frag and dest.suffix == ".md":
+            if slugify(frag) not in anchors_of(dest, cache):
+                problems.append(
+                    f"{path.relative_to(ROOT)}: broken anchor ({target}) — "
+                    f"no heading slugs to #{frag} in "
+                    f"{dest.relative_to(ROOT)}")
+    for name in WIKI_RE.findall(strip_fences(text)):
+        dest = ROOT / "docs" / f"{name.strip()}.md"
+        if not dest.exists():
+            problems.append(f"{path.relative_to(ROOT)}: broken wiki ref "
+                            f"[[{name}]] — docs/{name.strip()}.md "
+                            "does not exist")
+    return problems
+
+
+def check_python_blocks(path: Path, text: str) -> list[str]:
+    problems = []
+    for i, (lang, code) in enumerate(FENCE_RE.findall(text)):
+        if lang != "python":
+            continue
+        try:
+            compile(code, f"{path.name}:block{i}", "exec")
+        except SyntaxError as e:
+            problems.append(f"{path.relative_to(ROOT)}: python block {i} "
+                            f"does not compile — {e.msg} (line {e.lineno})")
+    return problems
+
+
+def main() -> int:
+    problems: list[str] = []
+    cache: dict = {}
+    files = doc_files()
+    n_blocks = 0
+    for path in files:
+        text = path.read_text(encoding="utf-8")
+        problems += check_links(path, text, cache)
+        problems += check_python_blocks(path, text)
+        n_blocks += sum(1 for lang, _ in FENCE_RE.findall(text)
+                        if lang == "python")
+    for p in problems:
+        print(p, file=sys.stderr)
+    if problems:
+        print(f"docs-check: {len(problems)} problem(s) in "
+              f"{len(files)} file(s)", file=sys.stderr)
+        return 1
+    print(f"docs-check: {len(files)} files clean "
+          f"({n_blocks} python blocks compiled)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

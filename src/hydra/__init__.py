@@ -12,9 +12,10 @@ session API under that name so examples read like the paper:
 
 The capability registry and decode-backend surface are re-exported too:
 ``hydra.family_spec(cfg)`` answers what a model family can do
-(``batched_prefill`` / ``padded_prefill`` / ``paging`` / ...), and
-``hydra.SlotBackend`` / ``hydra.PagedBackend`` are the two decode-state
-layouts serving engines select between (see docs/api.md).
+(``batched_prefill`` / ``padded_prefill`` / ``paging`` /
+``spec_draftable`` / ...), and ``hydra.SlotBackend`` /
+``hydra.PagedBackend`` / ``hydra.SpecDecodeBackend`` are the
+decode-state layouts serving engines select between (see docs/api.md).
 
 Everything here is a re-export; the implementation lives in ``repro``.
 """
@@ -26,7 +27,7 @@ from repro.models.api import family_spec
 from repro.models.registry import (CapabilityFallbackWarning, FamilySpec,
                                    families_with, registered_families)
 from repro.serving import (DecodeBackend, InferenceEngine, PagedBackend,
-                           SlotBackend)
+                           SlotBackend, SpecDecodeBackend)
 
 __all__ = ["Session", "SessionReport", "AsyncRun", "JobState",
            "JobSpec", "TrainJob", "ServeJob", "EvalJob", "SpmdTrainJob",
@@ -34,4 +35,4 @@ __all__ = ["Session", "SessionReport", "AsyncRun", "JobState",
            "FamilySpec", "family_spec", "families_with",
            "registered_families", "CapabilityFallbackWarning",
            "DecodeBackend", "SlotBackend", "PagedBackend",
-           "InferenceEngine"]
+           "SpecDecodeBackend", "InferenceEngine"]

@@ -78,9 +78,16 @@ class ServeJob(JobSpec):
     only when the first request arrives (shards promoted through
     ``core/spilling.py``, bytes accounted in the serve report).
 
-    ``backend`` selects the decode backend by name — ``"slot"`` (default)
-    or ``"paged"`` (``paged=True`` is the legacy spelling of the same
-    request).  The paged backend keeps K/V in the block-granular paged
+    ``backend`` selects the decode backend by name — ``"slot"`` (default),
+    ``"paged"`` (``paged=True`` is the legacy spelling of the same
+    request), or ``"spec"`` (speculative decode: a small ``draft_model``
+    member drafts ``draft_k`` tokens per round and the target verifies
+    them in one batched forward over a ``spec_inner`` slot or paged
+    backend — token-identical to plain greedy decode, strictly fewer
+    target forwards than generated tokens; admission additionally
+    reserves the k-row verify headroom plus, on any byte-ledger-backed
+    job, the draft model's decode state).  The paged backend keeps K/V
+    in the block-granular paged
     cache (``block_size`` rows per block): admission reserves blocks for
     the request's actual prompt + decode budget instead of a ``max_seq``
     slot, and ``prefix_share`` (default on) lets requests with a common
@@ -103,34 +110,89 @@ class ServeJob(JobSpec):
     window: Optional[int] = None
     bucket_sizes: Optional[Any] = None          # Sequence[int] | "pow2" | None
     cold: bool = False
-    backend: Optional[str] = None               # "slot" | "paged" | None
+    backend: Optional[str] = None               # "slot"|"paged"|"spec"|None
     paged: bool = False                         # legacy alias: backend="paged"
     block_size: int = 16                        # KV rows per physical block
     prefix_share: bool = True                   # COW prefix sharing (paged)
+    draft_model: Optional[Any] = None           # ArchConfig (backend="spec")
+    draft_params: Optional[Any] = None          # init'd from draft_seed if None
+    draft_seed: int = 0
+    draft_k: int = 4                            # draft tokens per spec round
+    spec_inner: Optional[str] = None            # "slot" (default) | "paged"
     kind: str = field(default="serve", init=False)
 
     def requested_backend(self) -> str:
         """The backend this spec asks for, before capability fallback."""
         if self.backend is not None:
-            if self.backend not in ("slot", "paged"):
+            if self.backend not in ("slot", "paged", "spec"):
                 raise ValueError(
                     f"backend={self.backend!r}: known decode backends are "
-                    "'slot' and 'paged'")
+                    "'slot', 'paged', and 'spec'")
             if self.paged and self.backend != "paged":
                 raise ValueError(
                     "conflicting spec: paged=True but backend="
-                    f"{self.backend!r}; drop one of them")
+                    f"{self.backend!r}; drop one of them (spec over pages "
+                    "is spelled backend='spec', spec_inner='paged')")
+            if self.backend == "spec":
+                self._validate_draft()
             return self.backend
         return "paged" if self.paged else "slot"
+
+    def _validate_draft(self) -> None:
+        """Fail at submit/plan time — not mid-run in the backend ctor —
+        when the draft side of a spec job can never execute.  (The TARGET
+        lacking ``spec_draftable`` is a planned fallback, not an error;
+        a bad DRAFT is a configuration mistake with no fallback.)"""
+        if self.draft_model is None:
+            raise ValueError(
+                "backend='spec' needs a draft member model: pass "
+                "draft_model=<ArchConfig> (and optionally "
+                "draft_params/draft_seed, draft_k, spec_inner)")
+        from repro.models.registry import spec as family_spec
+        dspec = family_spec(self.draft_model)
+        if not dspec.spec_draftable:
+            raise ValueError(
+                f"draft {self.draft_model.name} "
+                f"({self.draft_model.family}): "
+                f"{dspec.why_not('spec_draftable')} — pick a "
+                "spec_draftable draft family")
+        if self.draft_model.vocab_size != self.cfg.vocab_size:
+            raise ValueError(
+                f"draft vocab {self.draft_model.vocab_size} != target "
+                f"vocab {self.cfg.vocab_size}: greedy-exact acceptance "
+                "compares token ids, so the models must share a tokenizer")
+
+    def resolved_spec_inner(self) -> str:
+        """The inner backend a spec job wraps, before capability checks."""
+        if self.spec_inner is None:
+            return "slot"
+        if self.spec_inner not in ("slot", "paged"):
+            raise ValueError(f"spec_inner={self.spec_inner!r}: the spec "
+                             "backend wraps 'slot' or 'paged'")
+        return self.spec_inner
 
     def effective_backend(self) -> str:
         """The backend the engine will actually run, after checking the
         family's declared capabilities (mirrors the engine's fallback)."""
         from repro.models.registry import spec as family_spec
         req = self.requested_backend()
-        if req == "paged" and not family_spec(self.cfg).paging:
+        spec = family_spec(self.cfg)
+        if req == "spec" and not spec.spec_draftable:
+            req = self.resolved_spec_inner()
+        if req == "paged" and not spec.paging:
             return "slot"
         return req
+
+    def effective_spec_inner(self) -> Optional[str]:
+        """For an effective spec backend: the inner backend after the
+        paging capability check; None when the job is not spec."""
+        if self.effective_backend() != "spec":
+            return None
+        from repro.models.registry import spec as family_spec
+        inner = self.resolved_spec_inner()
+        if inner == "paged" and not family_spec(self.cfg).paging:
+            return "slot"
+        return inner
 
     def resolved_buckets(self) -> Optional[Sequence[int]]:
         if self.bucket_sizes is None:

@@ -272,7 +272,9 @@ class Session:
         backend = job.effective_backend()
         fallbacks = {}
         if job.requested_backend() != backend:
-            fallbacks["backend"] = spec.why_not("paging")
+            cap = ("spec_draftable" if job.requested_backend() == "spec"
+                   else "paging")
+            fallbacks["backend"] = spec.why_not(cap)
         if job.bucket_sizes is not None and not spec.padded_prefill:
             fallbacks["bucket_sizes"] = spec.why_not("padded_prefill")
         meta = {"capacity": job.capacity, "max_seq": job.max_seq,
@@ -298,6 +300,17 @@ class Session:
                 # plan's memory split charges against the device budget
                 kv_page_cap_bytes=job.capacity * per_req * block_bytes,
                 prefix_share=job.prefix_share,
+                shared_ledger=job.kv_budget_bytes is None)
+        if backend == "spec":
+            draft_spec = family_spec(job.draft_model)
+            meta.update(
+                spec_inner=job.effective_spec_inner(),
+                draft_model=job.draft_model.name,
+                draft_k=job.draft_k,
+                # draft state rides the same ledger as the target's KV
+                # (sized for max_seq + the k-row verify headroom)
+                draft_state_bytes=draft_spec.decode_state_bytes(
+                    job.draft_model, 1, job.max_seq + job.draft_k),
                 shared_ledger=job.kv_budget_bytes is None)
         return meta
 
@@ -325,20 +338,38 @@ class Session:
                 "memory": self._memory_split()}
 
     def _serve_kv_cap(self) -> int:
-        """Worst-case bytes the session's shared-ledger paged serve jobs
-        can reserve (every lane pinned at max_seq) — the slice of the
-        device budget the partitioner must leave for KV pages."""
+        """Worst-case bytes the session's shared-ledger serve jobs can
+        reserve — paged KV pages (every lane pinned at max_seq) plus, for
+        speculative jobs, the draft model's decode state and the k-row
+        verify headroom — the slice of the device budget the partitioner
+        must leave for decode state."""
         from repro.models.registry import spec as family_spec
         from repro.serving import blocks_for_rows
         cap = 0
         for jid in self._active(ServeJob):
             job = self._jobs[jid]
-            if job.effective_backend() == "paged" \
-                    and job.kv_budget_bytes is None:
+            if job.kv_budget_bytes is not None:
+                continue                 # private ledger, not this budget
+            backend = job.effective_backend()
+            if backend == "paged":
                 cap += (job.capacity
                         * blocks_for_rows(job.max_seq, job.block_size)
                         * family_spec(job.cfg).kv_block_bytes(
                             job.cfg, job.block_size))
+            elif backend == "spec":
+                rows = job.max_seq + job.draft_k
+                if job.effective_spec_inner() == "paged":
+                    target = (job.capacity
+                              * blocks_for_rows(rows, job.block_size)
+                              * family_spec(job.cfg).kv_block_bytes(
+                                  job.cfg, job.block_size))
+                else:
+                    target = job.capacity * family_spec(
+                        job.cfg).decode_state_bytes(job.cfg, 1, rows)
+                draft = job.capacity * family_spec(
+                    job.draft_model).decode_state_bytes(
+                        job.draft_model, 1, rows)
+                cap += target + draft
         return cap
 
     def _memory_split(self) -> dict:
@@ -531,7 +562,26 @@ class Session:
         backend choice — no capability branches at call sites."""
         from repro.serving import InferenceEngine
         kw: dict[str, Any] = {}
-        if job.effective_backend() == "paged":
+        effective = job.effective_backend()
+        if effective == "spec":
+            from repro.models import api as mapi
+            draft_params = job.draft_params
+            if draft_params is None:
+                draft_params = mapi.init_params(
+                    job.draft_model, jax.random.PRNGKey(job.draft_seed))
+            kw.update(draft_cfg=job.draft_model, draft_params=draft_params,
+                      draft_k=job.draft_k,
+                      spec_inner=job.resolved_spec_inner(),
+                      block_size=job.block_size,
+                      prefix_share=job.prefix_share)
+            if job.kv_budget_bytes is None:
+                # target KV (incl. verify headroom) AND draft state charge
+                # the session's device-0 ledger — the budget SHARP
+                # promotions charge
+                kw.update(ledger=self.devices[0])
+            else:
+                kw.update(kv_budget_bytes=job.kv_budget_bytes)
+        elif effective == "paged":
             kw.update(block_size=job.block_size,
                       prefix_share=job.prefix_share)
             if job.kv_budget_bytes is None:

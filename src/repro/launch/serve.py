@@ -8,10 +8,12 @@ comma-separated ``--arch`` list serves several models at once with the
 session's scheduling policy picking which model steps next, ``--buckets``
 pads prompt groups to power-of-two length buckets, ``--cold`` starts
 models spilled in the host store (promoted on the first request), and
-``--backend slot|paged`` picks the decode backend once (``--paged`` is
-the legacy spelling; ``--no-prefix-share`` disables copy-on-write
-prompt-prefix page sharing).  Prints per-request latency/throughput
-metrics plus engine summaries as JSON.
+``--backend slot|paged|spec`` picks the decode backend once (``--paged``
+is the legacy spelling of ``--backend paged``; ``--no-prefix-share``
+disables copy-on-write prompt-prefix page sharing; ``--backend spec``
+takes ``--draft-model ARCH --draft-k N [--spec-inner slot|paged]`` for
+speculative decoding with a draft member model).  Prints per-request
+latency/throughput metrics plus engine summaries as JSON.
 
   python -m repro.launch.serve --arch qwen3-0.6b --smoke \
       --batch 4 --prompt-len 32 --gen 16
@@ -36,6 +38,7 @@ def build_serve_job(arch: str, args) -> ServeJob:
     cfg = get_config(arch, smoke=args.smoke)
     max_seq = args.max_seq or (args.prompt_len + args.gen + 8)
     budget = int(args.kv_budget_mb * 2**20) if args.kv_budget_mb else None
+    draft = getattr(args, "draft_model", None)
     # pass both spellings through: ServeJob.requested_backend() resolves
     # the legacy --paged flag and rejects a conflicting --backend slot
     return ServeJob(cfg, seed=args.seed, name=arch, capacity=args.capacity,
@@ -46,7 +49,12 @@ def build_serve_job(arch: str, args) -> ServeJob:
                     backend=getattr(args, "backend", None),
                     paged=getattr(args, "paged", False),
                     block_size=getattr(args, "block_size", 16),
-                    prefix_share=not getattr(args, "no_prefix_share", False))
+                    prefix_share=not getattr(args, "no_prefix_share", False),
+                    draft_model=get_config(draft, smoke=args.smoke)
+                    if draft else None,
+                    draft_seed=args.seed,
+                    draft_k=getattr(args, "draft_k", 4),
+                    spec_inner=getattr(args, "spec_inner", None))
 
 
 def synth_prompts(cfg, n: int, prompt_len: int, seed: int):
@@ -108,10 +116,20 @@ def main():
                     help="pad prompt groups to power-of-two length buckets")
     ap.add_argument("--cold", action="store_true",
                     help="start models spilled; promote on first request")
-    ap.add_argument("--backend", default=None, choices=["slot", "paged"],
+    ap.add_argument("--backend", default=None,
+                    choices=["slot", "paged", "spec"],
                     help="decode backend (default: slot; families whose "
                     "FamilySpec lacks a capability fall back with a "
                     "warning)")
+    ap.add_argument("--draft-model", default=None,
+                    help="draft member model for --backend spec (arch id; "
+                    "must share the target's vocab)")
+    ap.add_argument("--draft-k", type=int, default=4,
+                    help="draft tokens per speculative round")
+    ap.add_argument("--spec-inner", default=None,
+                    choices=["slot", "paged"],
+                    help="inner backend the spec backend wraps "
+                    "(default slot)")
     ap.add_argument("--paged", action="store_true",
                     help="legacy spelling of --backend paged")
     ap.add_argument("--block-size", type=int, default=16,

@@ -95,6 +95,46 @@ def paged_decode_step(cfg, params, pages, tables, lengths, tokens, *,
         window=window, impl=impl)
 
 
+def _require_spec_draftable(cfg) -> registry.FamilySpec:
+    spec = registry.spec(cfg)
+    if not spec.spec_draftable:
+        raise ValueError(
+            f"{cfg.name} ({cfg.family}): {spec.why_not('spec_draftable')}; "
+            "serve this family without speculative decoding")
+    return spec
+
+
+def verify_step(cfg, params, state, tokens, *, window: Optional[int] = None):
+    """Multi-token speculative verify: score k draft positions against the
+    contiguous decode cache in ONE forward.  tokens ``(b, k)`` -> ``(logits
+    (b, k, V), new state)`` with the cache advanced k rows; the caller
+    rolls back past the accept point (``rollback_decode_state``)."""
+    spec = _require_spec_draftable(cfg)
+    return spec.module.verify_step(cfg, params, state, tokens,
+                                   window=window)
+
+
+def rollback_decode_state(cfg, state, delta):
+    """Rewind a decode state's write index by ``delta`` rows (scalar or
+    per-batch) — the KV-rollback half of speculative decoding."""
+    spec = _require_spec_draftable(cfg)
+    return spec.module.rollback_decode_state(cfg, state, delta)
+
+
+def paged_verify_step(cfg, params, pages, tables, lengths, tokens, *,
+                      window: Optional[int] = None, impl: str = "jnp"):
+    """Speculative verify reading K/V through per-lane block tables:
+    tokens ``(n, k)`` -> ``(logits (n, k, V), new pages)``."""
+    spec = _require_spec_draftable(cfg)
+    if not spec.paging:
+        raise ValueError(
+            f"{cfg.name} ({cfg.family}): {spec.why_not('paging')}; verify "
+            "through the slot backend instead")
+    return spec.module.paged_verify_step(
+        cfg, params, pages, tables, lengths, tokens, window=window,
+        impl=impl)
+
+
 def decode_state_spec(cfg, batch: int, max_seq: int):
     """ShapeDtypeStruct tree of the decode state — zero allocation."""
     return jax.eval_shape(lambda: init_decode_state(cfg, batch, max_seq))

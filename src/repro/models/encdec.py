@@ -222,6 +222,8 @@ def _register():
                              "attention caches",
             "token_stream_data": "audio batches carry encoder frame "
                                  "embeddings alongside tokens",
+            "spec_draftable": "not servable through InferenceEngine, so "
+                              "there is no decode path to speculate on",
         }))
 
 

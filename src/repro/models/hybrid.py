@@ -185,6 +185,8 @@ def _register():
                       "attention KV slots — not a pure pageable KV cache",
             "pure_kv_state": "decode state mixes mamba recurrences with a "
                              "KV cache",
+            "spec_draftable": "mamba sub-states cannot be rolled back past "
+                              "rejected draft tokens",
         }))
 
 

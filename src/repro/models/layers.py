@@ -297,6 +297,52 @@ def paged_attention_decode(params: Params, x: jnp.ndarray, cfg, *,
     return out @ params["wo"].astype(x.dtype), (k_pages, v_pages)
 
 
+def paged_attention_verify(params: Params, x: jnp.ndarray, cfg, *,
+                           k_pages: jnp.ndarray, v_pages: jnp.ndarray,
+                           tables: jnp.ndarray, lengths: jnp.ndarray,
+                           window: Optional[int] = None):
+    """k-token attention block over a paged KV cache (speculative verify).
+
+    The multi-token twin of ``paged_attention_decode``: x is ``(n, k, d)``
+    *normed* hidden states — the last committed token followed by k-1 draft
+    tokens per lane.  Writes all k K/V rows through the block table in one
+    scatter (rows ``lengths + [0, k)``; lanes whose table names only the
+    garbage block park their rows there harmlessly), then attends each of
+    the k query positions to its own causal prefix ``[0, lengths + i]``
+    through a gathered view of the table.  k is small (the draft depth), so
+    the gather is cheap relative to the k decode steps it replaces; a
+    Mosaic multi-query kernel is a follow-on.  Returns
+    ``(out, (k_pages, v_pages))``.
+    """
+    n, kk, _ = x.shape
+    nh, nkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q, k, v = _project_qkv(params, x, x, cfg)
+    positions = lengths[:, None] + jnp.arange(kk)[None, :]        # (n, k)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    bs = k_pages.shape[1]
+    blk = jnp.take_along_axis(tables, positions // bs, axis=1)    # (n, k)
+    off = positions % bs
+    k_pages = k_pages.at[blk, off].set(k.astype(k_pages.dtype))
+    v_pages = v_pages.at[blk, off].set(v.astype(v_pages.dtype))
+    nb = tables.shape[1]
+    kg = k_pages[tables].reshape(n, nb * bs, nkv, hd)
+    vg = v_pages[tables].reshape(n, nb * bs, nkv, hd)
+    groups = nh // nkv
+    qg = q.reshape(n, kk, nkv, groups, hd).astype(jnp.float32)
+    logits = jnp.einsum("nqkgh,nskh->nkgqs", qg,
+                        kg.astype(jnp.float32)) / math.sqrt(hd)
+    kv_pos = jnp.arange(nb * bs)[None, None, :]
+    mask = kv_pos <= positions[:, :, None]                        # (n, k, s)
+    if window is not None:
+        mask &= kv_pos > positions[:, :, None] - window
+    logits = jnp.where(mask[:, None, None, :, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("nkgqs,nskh->nqkgh", probs, vg.astype(jnp.float32))
+    out = out.reshape(n, kk, nh * hd).astype(x.dtype)
+    return out @ params["wo"].astype(x.dtype), (k_pages, v_pages)
+
+
 def init_kv_cache(cfg, batch: int, max_seq: int, n_layers: Optional[int] = None,
                   dtype=None) -> dict:
     """Stacked (layers-first) KV cache for decode.

@@ -389,6 +389,9 @@ def _register():
             "paging": "expert capacity is a function of the token batch, "
                       "coupling decode lanes: a batched paged step would "
                       "not be token-identical to per-lane decode",
+            "spec_draftable": "capacity-bounded routing couples the k "
+                              "verified tokens: a multi-token verify would "
+                              "route differently than token-by-token decode",
         }))
 
 

@@ -68,6 +68,8 @@ class FamilySpec:
     pure_kv_state: bool = False     # decode state is a pure KV cache
     servable: bool = True           # InferenceEngine can serve this family
     token_stream_data: bool = True  # train/eval batches are {tokens, labels}
+    spec_draftable: bool = False    # multi-token verify + KV rollback work:
+    #   the family can be the target (or draft) of speculative decoding
     # capability -> one-line reason it is absent (warnings / plan meta)
     notes: dict = field(default_factory=dict)
     # -- cost fns (admission control charges these against the ledger) ------
@@ -93,7 +95,8 @@ class FamilySpec:
                 "padded_prefill": self.padded_prefill,
                 "paging": self.paging,
                 "pure_kv_state": self.pure_kv_state,
-                "servable": self.servable}
+                "servable": self.servable,
+                "spec_draftable": self.spec_draftable}
 
     def why_not(self, capability: str) -> str:
         return self.notes.get(capability, "not declared by the family spec")

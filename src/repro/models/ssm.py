@@ -509,6 +509,8 @@ def _register():
             "paging": "O(1) recurrent state — nothing to page",
             "pure_kv_state": "decode state is conv/ssd recurrences, not a "
                              "KV cache",
+            "spec_draftable": "recurrent state cannot be rolled back past "
+                              "rejected draft tokens",
         }))
 
 

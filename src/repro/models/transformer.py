@@ -178,6 +178,63 @@ def decode_step(cfg, params, state, tokens, *, window=None):
 
 
 # ---------------------------------------------------------------------------
+# speculative verify (k tokens scored against cached state in one forward)
+# ---------------------------------------------------------------------------
+
+def verify_step(cfg, params, state, tokens, *, window=None):
+    """Score k draft positions against the contiguous KV cache in ONE
+    forward: tokens ``(b, k)`` (last committed token + k-1 drafts) ->
+    ``(logits (b, k, V), new state)`` with the cache index advanced by k.
+
+    This is exactly the batched-prefill mechanism pointed at mid-decode:
+    the causal chunk mask keeps intra-chunk attention correct, so position
+    ``i``'s logits equal what i single-token decode steps would produce.
+    The caller rolls the state back past the accept point with
+    ``rollback_decode_state`` — rejected rows are never read again (decode
+    masks keys at ``kvpos > qpos``) and are overwritten as decode resumes.
+    """
+    return decode_step(cfg, params, state, tokens, window=window)
+
+
+def rollback_decode_state(cfg, state, delta):
+    """Rewind the cache write index by ``delta`` rows (per-batch array or
+    scalar).  Rows past the rewound index are stale but invisible: decode
+    attention masks ``kvpos > qpos`` and later writes overwrite in place."""
+    kv = state["kv"]
+    return {"kv": {"k": kv["k"], "v": kv["v"],
+                   "index": kv["index"] - delta}}
+
+
+def paged_verify_step(cfg, params, pages, tables, lengths, tokens, *,
+                      window=None, impl="jnp"):
+    """The paged twin of ``verify_step``: score k positions per lane
+    through per-lane block tables.  tokens ``(n, k)``; returns
+    ``(logits (n, k, V), new pages)``.  The caller owns rollback: advance
+    ``lengths`` by only the accepted rows and free/rewind tail blocks —
+    rows past a lane's length are masked to zero weight, so rejected
+    draft rows never perturb later decode."""
+    del impl        # verify always uses the gathered multi-query path
+    x = nn.embed(params["embed"], tokens, cfg.dtype)
+
+    def body(h, xs):
+        lp, kp, vp = xs
+        a, (nkp, nvp) = nn.paged_attention_verify(
+            lp["attn"], _norm(cfg, lp["attn_norm"], h), cfg,
+            k_pages=kp, v_pages=vp, tables=tables, lengths=lengths,
+            window=window if window is not None else cfg.window)
+        h = h + a
+        hn = _norm(cfg, lp["mlp_norm"], h)
+        m = (nn.swiglu(lp["mlp"], hn) if cfg.mlp == "swiglu"
+             else nn.gelu_mlp(lp["mlp"], hn))
+        return h + m, (nkp, nvp)
+
+    x, (nk, nv) = jax.lax.scan(body, x,
+                               (params["layers"], pages["k"], pages["v"]))
+    x = _norm(cfg, params["final_norm"], x)
+    return nn.unembed(params["embed"], x), {"k": nk, "v": nv}
+
+
+# ---------------------------------------------------------------------------
 # registry
 # ---------------------------------------------------------------------------
 
@@ -208,7 +265,7 @@ def _register():
         registry.register(registry.FamilySpec(
             family=family, module=mod,
             batched_prefill=True, padded_prefill=True, paging=True,
-            pure_kv_state=True, servable=True,
+            pure_kv_state=True, servable=True, spec_draftable=True,
             token_stream_data=tokens_only,
             notes={} if tokens_only else {
                 "token_stream_data": "VLM batches carry fused patch+text "

@@ -2,7 +2,8 @@
 
 from repro.models.registry import CapabilityFallbackWarning
 from repro.serving.backends import (BACKENDS, DecodeBackend, PagedBackend,
-                                    SlotBackend, make_backend)
+                                    SlotBackend, SpecDecodeBackend,
+                                    make_backend)
 from repro.serving.engine import InferenceEngine, pow2_buckets
 from repro.serving.multi import MultiModelServer
 from repro.serving.paging import BlockPool, blocks_for_rows, default_n_blocks
@@ -14,5 +15,5 @@ __all__ = ["InferenceEngine", "MultiModelServer", "KVBudget", "PagedKVBudget",
            "RequestQueue", "Request", "Status", "SlotPool", "BlockPool",
            "blocks_for_rows", "default_n_blocks", "stack_trees",
            "write_slots", "pow2_buckets", "DecodeBackend", "SlotBackend",
-           "PagedBackend", "BACKENDS", "make_backend",
+           "PagedBackend", "SpecDecodeBackend", "BACKENDS", "make_backend",
            "CapabilityFallbackWarning"]

@@ -16,11 +16,17 @@ one) touches no engine call sites.  The protocol:
     advance(lane)                   -> post-token bookkeeping
     summary()                       -> backend-specific metric extras
 
-Two implementations:
+Three implementations:
 
 * ``SlotBackend`` — every request owns a ``max_seq``-sized slot of a
   stacked decode-state pool; admission charges a constant ``slot_bytes``.
   Works for every servable family.
+* ``SpecDecodeBackend`` — speculative decoding over an inner slot or
+  paged backend: a draft member model proposes ``draft_k`` tokens per
+  round, the target verifies all of them in ONE batched forward, and
+  greedy-exact acceptance keeps outputs token-identical to plain decode
+  while target forwards per token drop toward 1/k (docs/serving.md).
+  ``spec_draftable`` families only (dense/vlm), target and draft both.
 * ``PagedBackend`` — K/V lives in a refcounted ``BlockPool`` of fixed-size
   blocks; admission reserves only the blocks the request's actual
   prompt + decode extent can touch, charged against a ``DeviceMemory``
@@ -41,6 +47,7 @@ shard promotions.
 from __future__ import annotations
 
 import hashlib
+from collections import deque
 from functools import lru_cache
 from typing import Optional, Protocol, Sequence, runtime_checkable
 
@@ -55,7 +62,11 @@ from repro.serving.paging import (BlockPool, blocks_for_rows,
 from repro.serving.queue import KVBudget, PagedKVBudget
 from repro.serving.request import Request
 from repro.serving.slots import SlotPool, stack_trees, write_slots
-from repro.training.train_loop import make_decode_step, make_paged_decode_step
+from repro.training.train_loop import (make_decode_step,
+                                       make_paged_decode_step,
+                                       make_paged_verify_step,
+                                       make_prefill_into_cache,
+                                       make_verify_step)
 
 
 @runtime_checkable
@@ -108,6 +119,64 @@ def _compiled_paged_decode(cfg, window, impl):
 
 
 @lru_cache(maxsize=None)
+def _compiled_verify(cfg, window):
+    """Slot speculative verify vmapped over the slot axis: k draft
+    positions scored in ONE target forward per lane, pool donated."""
+    return jax.jit(jax.vmap(make_verify_step(cfg, window=window),
+                            in_axes=(None, 0, 0)), donate_argnums=(1,))
+
+
+@lru_cache(maxsize=None)
+def _compiled_paged_verify(cfg, window, impl):
+    """Paged speculative verify: k rows written + scored through block
+    tables in one forward, pages donated in place."""
+    return jax.jit(make_paged_verify_step(cfg, window=window, impl=impl),
+                   donate_argnums=(1,))
+
+
+@lru_cache(maxsize=None)
+def _compiled_rollback(cfg):
+    """Per-lane KV index rewind (the slot-side speculative rollback);
+    the state is donated — only the index leaf changes."""
+    from repro.models import api as mapi
+
+    def roll(state, delta):
+        return mapi.rollback_decode_state(cfg, state, delta)
+
+    return jax.jit(roll, donate_argnums=(0,))
+
+
+@lru_cache(maxsize=None)
+def _compiled_draft_chain(cfg, window, k):
+    """k sequential greedy draft steps fused into ONE jitted program
+    (``lax.scan`` over the vmapped decode step): one dispatch and one
+    device sync per round instead of k — the draft chain has no host
+    decision between steps.  Returns ``(drafts (k, S, 1, 1), state)``."""
+    vstep = jax.vmap(make_decode_step(cfg, window=window),
+                     in_axes=(None, 0, 0))
+
+    def chain(params, state, toks):
+        def body(carry, _):
+            toks, state = carry
+            ntoks, state = vstep(params, state, toks)
+            return (ntoks, state), ntoks
+
+        (_, state), drafts = jax.lax.scan(body, (toks, state), None,
+                                          length=k)
+        return drafts, state
+
+    return jax.jit(chain, donate_argnums=(1,))
+
+
+@lru_cache(maxsize=None)
+def _compiled_draft_prefill(cfg, window):
+    """Draft-model prefill (vmapped over batch=1 groups), states donated.
+    Mirrors the engine's compiled prefill, cached per draft config."""
+    return jax.jit(jax.vmap(make_prefill_into_cache(cfg, window=window),
+                            in_axes=(None, 0, 0)), donate_argnums=(1,))
+
+
+@lru_cache(maxsize=None)
 def _compiled_page_scatter(block_size):
     """Scatter freshly prefilled contiguous KV rows into physical blocks.
 
@@ -156,12 +225,17 @@ class SlotBackend:
 
     def __init__(self, cfg, capacity: int, max_seq: int, *,
                  window: Optional[int] = None,
-                 kv_budget_bytes: Optional[int] = None, ledger=None):
+                 kv_budget_bytes: Optional[int] = None, ledger=None,
+                 verify_headroom: int = 0):
         self.cfg = cfg
         self.capacity = capacity
         self.max_seq = max_seq
-        self.slot_bytes = family_spec(cfg).decode_state_bytes(cfg, 1, max_seq)
-        self.pool = SlotPool(cfg, capacity, max_seq)
+        # verify_headroom: extra rows per slot for a wrapping speculative
+        # backend's k-token verify writes (rows past the accept point are
+        # rewound, but the buffer must exist); charged honestly
+        self.slot_bytes = family_spec(cfg).decode_state_bytes(
+            cfg, 1, max_seq + verify_headroom)
+        self.pool = SlotPool(cfg, capacity, max_seq + verify_headroom)
         self.ledger = ledger
         if ledger is not None:
             if kv_budget_bytes is not None:
@@ -240,7 +314,7 @@ class PagedBackend:
                  n_blocks: Optional[int] = None,
                  kv_budget_bytes: Optional[int] = None, ledger=None,
                  paged_impl: Optional[str] = None,
-                 prefix_share: bool = True):
+                 prefix_share: bool = True, verify_headroom: int = 0):
         from repro.core.spilling import DeviceMemory
         from repro.kernels import ops as kops
         if ledger is not None and kv_budget_bytes is not None:
@@ -252,9 +326,15 @@ class PagedBackend:
         self.max_seq = max_seq
         self.block_size = block_size
         self.prefix_share = bool(prefix_share)
-        self.max_blocks = blocks_for_rows(max_seq, block_size)
+        # extra rows per lane a wrapping speculative backend's k-token
+        # verify may transiently write past the decode extent; folded into
+        # every worst-case reservation so verify allocation can never fail
+        self.verify_headroom = verify_headroom
+        self.max_blocks = blocks_for_rows(max_seq + verify_headroom,
+                                          block_size)
         block_bytes = family_spec(cfg).kv_block_bytes(cfg, block_size)
-        worst = default_n_blocks(capacity, max_seq, block_size, n_blocks)
+        worst = default_n_blocks(capacity, max_seq + verify_headroom,
+                                 block_size, n_blocks)
         if ledger is None:
             budget = (kv_budget_bytes if kv_budget_bytes is not None
                       else (worst - 1) * block_bytes)
@@ -302,9 +382,11 @@ class PagedBackend:
 
     def _worst_blocks(self, req: Request, prefill_rows: int) -> int:
         """Blocks for the WORST CASE this request can touch — its prefill
-        footprint or its full decode extent, whichever is larger."""
+        footprint or its full decode extent (plus any speculative verify
+        headroom), whichever is larger."""
         rows = max(self._prefill_width(prefill_rows),
-                   req.prompt_len + req.max_new_tokens - 1)
+                   req.prompt_len + req.max_new_tokens - 1
+                   + self.verify_headroom)
         return blocks_for_rows(rows, self.block_size)
 
     @property
@@ -511,32 +593,58 @@ class PagedBackend:
             self._lengths[r.slot] = r.prompt_len
 
     # -- decode --------------------------------------------------------------
-    def _prepare_lanes(self, active: dict) -> None:
-        """Make every active lane's next write row safe: allocate the block
-        it lands in (the admission reservation guarantees this can never
+    def _prepare_lanes(self, active: dict, n_rows: int = 1) -> None:
+        """Make every active lane's next ``n_rows`` write rows safe:
+        allocate the blocks they land in (the admission reservation —
+        which includes ``verify_headroom`` — guarantees this can never
         fail), and copy-on-write any aliased block about to be written —
         the write would otherwise clobber rows other lanes are reading."""
         for lane, req in active.items():
-            j = int(self._lengths[lane]) // self.block_size
+            lo = int(self._lengths[lane]) // self.block_size
+            hi = (int(self._lengths[lane]) + n_rows - 1) // self.block_size
             blocks = self._lane_blocks[lane]
             owned = self._lane_owned[lane]
-            while len(blocks) <= j:
-                (bid,) = self.pool.alloc(1)
-                self._tables[lane, len(blocks)] = bid
-                blocks.append(bid)
-                owned.add(bid)
-            if blocks[j] not in owned:
-                (dst,) = self.pool.alloc(1)
-                src = blocks[j]
-                kp, vp = self._page_copy(
-                    self.pool.pages["k"], self.pool.pages["v"], src, dst)
-                self.pool.pages = {"k": kp, "v": vp}
-                self._tables[lane, j] = dst
-                blocks[j] = dst
-                owned.add(dst)
-                self.cow_copies += 1
-                self._drop_alias(src)
+            for j in range(lo, hi + 1):
+                while len(blocks) <= j:
+                    (bid,) = self.pool.alloc(1)
+                    self._tables[lane, len(blocks)] = bid
+                    blocks.append(bid)
+                    owned.add(bid)
+                if blocks[j] not in owned:
+                    (dst,) = self.pool.alloc(1)
+                    src = blocks[j]
+                    kp, vp = self._page_copy(
+                        self.pool.pages["k"], self.pool.pages["v"], src, dst)
+                    self.pool.pages = {"k": kp, "v": vp}
+                    self._tables[lane, j] = dst
+                    blocks[j] = dst
+                    owned.add(dst)
+                    self.cow_copies += 1
+                    self._drop_alias(src)
             req.peak_blocks = max(req.peak_blocks or 0, len(blocks))
+
+    def _rewind_lane(self, lane: int) -> int:
+        """Free owned tail blocks past the lane's committed rows — the
+        speculative-decode rollback: verify wrote up to k rows past the
+        accept point, and any whole blocks holding only rejected rows go
+        back to the pool (rejected rows inside a kept block are masked and
+        overwritten as decode resumes).  Returns blocks freed."""
+        needed = max(1, blocks_for_rows(int(self._lengths[lane]),
+                                        self.block_size))
+        blocks = self._lane_blocks[lane]
+        owned = self._lane_owned[lane]
+        freed = 0
+        while len(blocks) > needed:
+            bid = blocks[-1]
+            if bid not in owned or self.pool.ref(bid) != 1 \
+                    or bid in self._rev:
+                break       # shared or indexed blocks are never speculative
+            blocks.pop()
+            self._tables[lane, len(blocks)] = BlockPool.GARBAGE
+            owned.discard(bid)
+            self.pool.decref(bid)
+            freed += 1
+        return freed
 
     def decode(self, params, tokens: np.ndarray, active: dict) -> np.ndarray:
         self._prepare_lanes(active)
@@ -562,7 +670,312 @@ class PagedBackend:
         }
 
 
-BACKENDS = {"slot": SlotBackend, "paged": PagedBackend}
+# ---------------------------------------------------------------------------
+# speculative-decode backend (draft member model + batched target verify)
+# ---------------------------------------------------------------------------
+
+class SpecDecodeBackend:
+    """Speculative decode over an inner slot or paged backend.
+
+    Per round, a small *draft* member model proposes ``draft_k`` greedy
+    tokens ahead of the target, then the target scores all k positions in
+    ONE batched verify forward (``models/api.verify_step``; the paged
+    variant reads K/V through block tables).  Acceptance is greedy-exact:
+    the longest prefix where the draft matches the target's own argmax is
+    kept, plus the target's correction token — so emitted tokens are
+    **token-identical** to target-only greedy decode, and each verify
+    forward yields between 1 and k tokens (``accepted_tokens_per_
+    target_step`` in ``summary()``).
+
+    Rollback past the accept point: the slot inner rewinds per-lane cache
+    indices (rejected rows are masked and overwritten); the paged inner
+    advances lane lengths by only the accepted rows and frees whole tail
+    blocks holding nothing but rejected rows back to the refcounted
+    ``BlockPool``.
+
+    Memory: the inner backend is built with ``verify_headroom=draft_k``
+    (k transient verify rows per lane beyond the decode extent), and when
+    a shared ``DeviceMemory`` ledger is given, each admission additionally
+    reserves the draft model's decode-state bytes — so one session budget
+    arbitrates target KV, verify headroom, AND draft state exactly like
+    SHARP shard promotions.
+
+    The engine contract is unchanged (one token per active lane per
+    ``decode()`` call): rounds run only for lanes whose emitted-token
+    buffer ran dry, and every call pops one buffered token per lane.
+    Lanes not in the round still ride through the batched draft/verify
+    programs (fixed shapes — no retracing) with their writes parked in
+    the garbage block / rewound, outputs discarded.
+    """
+
+    name = "spec"
+
+    def __init__(self, cfg, capacity: int, max_seq: int, *,
+                 draft_cfg=None, draft_params=None, draft_k: int = 4,
+                 inner: str = "slot", window: Optional[int] = None,
+                 kv_budget_bytes: Optional[int] = None, ledger=None,
+                 block_size: int = 16, n_blocks: Optional[int] = None,
+                 paged_impl: Optional[str] = None,
+                 prefix_share: bool = True):
+        if draft_cfg is None or draft_params is None:
+            raise ValueError(
+                "the spec backend needs a draft member model: pass "
+                "draft_cfg and draft_params (ServeJob: draft_model=...)")
+        tspec, dspec = family_spec(cfg), family_spec(draft_cfg)
+        if not tspec.spec_draftable:
+            raise ValueError(
+                f"{cfg.name} ({cfg.family}): "
+                f"{tspec.why_not('spec_draftable')}")
+        if not dspec.spec_draftable:
+            raise ValueError(
+                f"draft {draft_cfg.name} ({draft_cfg.family}): "
+                f"{dspec.why_not('spec_draftable')} — the draft must run "
+                "the same rollback-able batched decode surface")
+        if draft_cfg.vocab_size != cfg.vocab_size:
+            raise ValueError(
+                f"draft vocab {draft_cfg.vocab_size} != target vocab "
+                f"{cfg.vocab_size}: greedy-exact acceptance compares "
+                "token ids, so the models must share a tokenizer")
+        if draft_k < 1:
+            raise ValueError("draft_k must be >= 1")
+        if inner not in ("slot", "paged"):
+            raise ValueError(f"spec inner backend {inner!r}: "
+                             "expected 'slot' or 'paged'")
+        self.cfg = cfg
+        self.capacity = capacity
+        self.max_seq = max_seq
+        self.draft_cfg = draft_cfg
+        self.draft_params = draft_params
+        self.draft_k = draft_k
+        inner_kw: dict = dict(window=window, verify_headroom=draft_k,
+                              kv_budget_bytes=kv_budget_bytes,
+                              ledger=ledger)
+        if inner == "paged":
+            inner_kw.update(block_size=block_size, n_blocks=n_blocks,
+                            paged_impl=paged_impl,
+                            prefix_share=prefix_share)
+        self.inner = BACKENDS[inner](cfg, capacity, max_seq, **inner_kw)
+        # draft decode state: one stacked pool over the same lane ids the
+        # inner backend assigns; k extra rows absorb the round's writes.
+        # Its bytes reserve against whatever byte ledger backs the job —
+        # the shared session ledger, or the paged inner's private one; a
+        # slot inner with a private kv_budget_bytes has no byte ledger,
+        # so that budget bounds target slots only.
+        self._charge_ledger = (ledger if ledger is not None
+                               else getattr(self.inner, "ledger", None))
+        self.draft_slot_bytes = dspec.decode_state_bytes(
+            draft_cfg, 1, max_seq + draft_k)
+        self._draft_fresh = api.init_decode_state(draft_cfg, 1,
+                                                  max_seq + draft_k)
+        self._draft_state = stack_trees([self._draft_fresh] * capacity)
+        self._draft_chain = _compiled_draft_chain(draft_cfg, None, draft_k)
+        self._draft_prefill = _compiled_draft_prefill(draft_cfg, None)
+        self._draft_rollback = _compiled_rollback(draft_cfg)
+        self._rollback = _compiled_rollback(cfg)
+        if inner == "slot":
+            self._verify = _compiled_verify(cfg, window)
+        else:
+            self._verify = _compiled_paged_verify(cfg, window,
+                                                  self.inner.paged_impl)
+        self._pending: dict[int, deque] = {}    # lane -> emitted tokens
+        # round stats (summary / bench --spec)
+        self.spec_rounds = 0        # batched verify forwards
+        self.target_steps = 0       # per-lane verify participations
+        self.draft_steps = 0        # per-lane draft tokens proposed
+        self.spec_tokens = 0        # tokens emitted by spec rounds
+        self.drafts_accepted = 0    # proposed drafts that matched target
+
+    # -- introspection delegates (engine compat properties read these) -------
+    @property
+    def pool(self):
+        return self.inner.pool
+
+    @property
+    def budget(self):
+        return self.inner.budget
+
+    @property
+    def ledger(self):
+        return getattr(self.inner, "ledger", None)
+
+    @property
+    def block_size(self):
+        return getattr(self.inner, "block_size", None)
+
+    @property
+    def paged_impl(self):
+        return getattr(self.inner, "paged_impl", None)
+
+    @property
+    def free_lanes(self) -> int:
+        return self.inner.free_lanes
+
+    # -- admission ------------------------------------------------------------
+    def _worst_target_bytes(self, req: Request, prefill_rows: int) -> int:
+        if isinstance(self.inner, PagedBackend):
+            return self.inner._worst_blocks(req, prefill_rows) \
+                * self.inner.pool.block_bytes
+        return self.inner.slot_bytes
+
+    def admission_check(self, req: Request, prefill_rows: int) -> None:
+        self.inner.admission_check(req, prefill_rows)
+        if self._charge_ledger is not None:
+            need = self.draft_slot_bytes \
+                + self._worst_target_bytes(req, prefill_rows)
+            if need > self._charge_ledger.budget:
+                raise ValueError(
+                    f"speculative decode needs {need} B (draft state "
+                    f"{self.draft_slot_bytes} B + target KV incl. "
+                    f"{self.draft_k}-token verify headroom) but the ledger "
+                    f"budget is {self._charge_ledger.budget} B — the "
+                    "engine can never admit this request")
+
+    def reserve(self, req: Request, prefill_rows: int) -> bool:
+        if self._charge_ledger is not None \
+                and not self._charge_ledger.reserve_kv(self.draft_slot_bytes):
+            return False
+        if not self.inner.reserve(req, prefill_rows):
+            if self._charge_ledger is not None:
+                self._charge_ledger.release_kv(self.draft_slot_bytes)
+            return False
+        self._pending[req.slot] = deque()
+        return True
+
+    def release(self, req: Request) -> None:
+        # unconsumed pending tokens (overshoot past max_new_tokens / eos)
+        # are discarded with the lane
+        self._pending.pop(req.slot, None)
+        self.inner.release(req)
+        if self._charge_ledger is not None:
+            self._charge_ledger.release_kv(self.draft_slot_bytes)
+
+    # -- prefill --------------------------------------------------------------
+    def fresh_states(self, n: int, prefill_rows: int):
+        return self.inner.fresh_states(n, prefill_rows)
+
+    def write_prefill(self, group: Sequence[Request], states) -> None:
+        self.inner.write_prefill(group, states)
+        # the draft model prefills the same prompts into its own pool at
+        # exact lengths (one vmapped call per same-length subgroup); its
+        # prefill logits are unused — the first token is the target's
+        by_len: dict[int, list[Request]] = {}
+        for r in group:
+            by_len.setdefault(r.prompt_len, []).append(r)
+        for plen, reqs in sorted(by_len.items()):
+            toks = jnp.asarray(
+                np.stack([r.prompt for r in reqs])[:, None, :])
+            fresh = stack_trees([self._draft_fresh] * len(reqs))
+            _, dstates = self._draft_prefill(self.draft_params, fresh, toks)
+            self._draft_state = write_slots(self._draft_state, dstates,
+                                            [r.slot for r in reqs])
+
+    # -- decode ---------------------------------------------------------------
+    def decode(self, params, tokens: np.ndarray, active: dict) -> np.ndarray:
+        todo = {lane: req for lane, req in active.items()
+                if not self._pending[lane]}
+        if todo:
+            self._spec_round(params, tokens, todo)
+        out = np.zeros_like(tokens)
+        for lane in active:
+            out[lane, 0, 0] = self._pending[lane].popleft()
+        return out
+
+    def _spec_round(self, params, tokens: np.ndarray, todo: dict) -> None:
+        """One draft+verify round for the lanes whose buffers ran dry."""
+        k = self.draft_k
+        cap = self.capacity
+        t_last = tokens[:, 0, 0].astype(np.int32)           # (cap,)
+        # 1. draft k greedy tokens per lane — ONE fused scan dispatch and
+        #    one device sync (full lane width, fixed shapes;
+        #    non-participants are rolled back below)
+        drafts, self._draft_state = self._draft_chain(
+            self.draft_params, self._draft_state,
+            jnp.asarray(t_last[:, None, None]))
+        dr = np.asarray(drafts)[:, :, 0, 0].T.copy()        # (cap, k)
+        # 2. verify all k positions in ONE batched target forward: feed
+        #    [t_last, d_1 .. d_{k-1}]; position i's argmax is the target's
+        #    own next token after t_last, d_1 .. d_i
+        V = np.concatenate([t_last[:, None], dr[:, :k - 1]], axis=1)
+        if isinstance(self.inner, PagedBackend):
+            # make the k write rows safe for participants (alloc + CoW —
+            # the admission reservation includes the verify headroom) and
+            # park non-participants' writes in the garbage block
+            self.inner._prepare_lanes(todo, n_rows=k)
+            tables = np.array(self.inner._tables)
+            outside = np.ones(cap, bool)
+            outside[list(todo)] = False
+            tables[outside, :] = BlockPool.GARBAGE
+            g, self.inner.pool.pages = self._verify(
+                params, self.inner.pool.pages, jnp.asarray(tables),
+                jnp.asarray(self.inner._lengths), jnp.asarray(V))
+            g = np.asarray(g)                               # (cap, k)
+        else:
+            g, self.inner.pool.state = self._verify(
+                params, self.inner.pool.state, jnp.asarray(V[:, None, :]))
+            g = np.asarray(g)[:, 0, :]                      # (cap, k)
+        # 3. greedy-exact acceptance: longest matching prefix + the
+        #    target's correction (or the free k-th draft on a clean sweep)
+        m = np.cumprod(dr == g, axis=1).sum(axis=1)         # leading matches
+        accept = np.zeros(cap, np.int64)
+        for lane in todo:
+            accept[lane] = m[lane] + 1 if m[lane] < k else k
+        for lane in todo:
+            self._pending[lane].extend(
+                int(t) for t in g[lane, :accept[lane]])
+        # 4. roll both models back past the accept point
+        delta = jnp.asarray((k - accept).astype(np.int32))
+        self._draft_state = self._draft_rollback(self._draft_state, delta)
+        if isinstance(self.inner, PagedBackend):
+            for lane in todo:
+                self.inner._lengths[lane] += int(accept[lane])
+                self.inner._rewind_lane(lane)
+        else:
+            self.inner.pool.state = self._rollback(self.inner.pool.state,
+                                                   delta)
+        # 5. stats
+        self.spec_rounds += 1
+        self.target_steps += len(todo)
+        self.draft_steps += len(todo) * k
+        self.spec_tokens += int(accept.sum())
+        self.drafts_accepted += int(m[list(todo)].sum())
+
+    def advance(self, lane: int) -> None:
+        pass        # rounds advance lengths/indices at the accept point
+
+    def summary(self) -> dict:
+        out = {
+            "inner_backend": self.inner.name,
+            "draft_model": self.draft_cfg.name,
+            "draft_k": self.draft_k,
+            "draft_slot_bytes": self.draft_slot_bytes,
+            "spec_rounds": self.spec_rounds,
+            "target_steps": self.target_steps,
+            "draft_steps": self.draft_steps,
+            "spec_tokens": self.spec_tokens,
+            "accepted_tokens_per_target_step":
+                round(self.spec_tokens / self.target_steps, 3)
+                if self.target_steps else None,
+            "draft_accept_rate":
+                round(self.drafts_accepted / self.draft_steps, 3)
+                if self.draft_steps else None,
+        }
+        out.update(self.inner.summary())
+        return out
+
+
+BACKENDS = {"slot": SlotBackend, "paged": PagedBackend,
+            "spec": SpecDecodeBackend}
+
+# kwargs each backend constructor understands (make_backend drops the rest
+# so one engine call site can carry the union)
+_BACKEND_KWARGS = {
+    "slot": ("window", "kv_budget_bytes", "ledger", "verify_headroom"),
+    "paged": ("window", "kv_budget_bytes", "ledger", "block_size",
+              "n_blocks", "paged_impl", "prefix_share", "verify_headroom"),
+    "spec": ("window", "kv_budget_bytes", "ledger", "block_size",
+             "n_blocks", "paged_impl", "prefix_share", "draft_cfg",
+             "draft_params", "draft_k", "inner"),
+}
 
 
 def make_backend(name: str, cfg, capacity: int, max_seq: int, **kw):
@@ -570,7 +983,5 @@ def make_backend(name: str, cfg, capacity: int, max_seq: int, **kw):
     if name not in BACKENDS:
         raise ValueError(f"unknown decode backend {name!r} "
                          f"(have {sorted(BACKENDS)})")
-    if name == "slot":
-        kw = {k: v for k, v in kw.items()
-              if k in ("window", "kv_budget_bytes", "ledger")}
+    kw = {k: v for k, v in kw.items() if k in _BACKEND_KWARGS[name]}
     return BACKENDS[name](cfg, capacity, max_seq, **kw)

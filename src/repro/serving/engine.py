@@ -15,14 +15,16 @@ running each request alone (tests/test_serving.py).
 
 Where decode state lives — and what a request's residency costs — is the
 **backend's** concern (``serving/backends.py``): ``SlotBackend`` (default;
-every servable family) or ``PagedBackend`` (block-granular admission with
+every servable family), ``PagedBackend`` (block-granular admission with
 copy-on-write prefix sharing; families whose ``FamilySpec`` declares
-``paging``).  The engine selects the backend once at construction — from
-the family's declared capabilities — and never branches on layout again.
-Requesting a backend the family cannot support falls back to the slot
-backend with a structured ``CapabilityFallbackWarning`` (mirrored by the
-bucketing fallback), and the effective backend is recorded in
-``summary()`` / plan metadata / ``session.poll()``.
+``paging``), or ``SpecDecodeBackend`` (speculative decoding with a draft
+member model over either inner; ``spec_draftable`` families).  The engine
+selects the backend once at construction — from the family's declared
+capabilities — and never branches on layout again.  Requesting a backend
+the family cannot support falls back (spec -> its inner -> slot) with a
+structured ``CapabilityFallbackWarning`` (mirrored by the bucketing
+fallback), and the effective backend is recorded in ``summary()`` / plan
+metadata / ``session.poll()``.
 """
 
 from __future__ import annotations
@@ -84,6 +86,8 @@ class InferenceEngine:
                  n_blocks: Optional[int] = None, ledger=None,
                  paged_impl: Optional[str] = None,
                  prefix_share: bool = True,
+                 draft_cfg=None, draft_params=None, draft_k: int = 4,
+                 spec_inner: Optional[str] = None,
                  clock=time.perf_counter):
         spec = family_spec(cfg)
         if not spec.servable:
@@ -114,18 +118,36 @@ class InferenceEngine:
         if isinstance(requested, str):
             self.requested_backend = requested
             effective = requested
-            if requested == "paged" and not spec.paging:
+            spec_inner = spec_inner or "slot"
+            if spec_inner not in ("slot", "paged"):
+                raise ValueError(f"spec_inner={spec_inner!r}: the spec "
+                                 "backend wraps 'slot' or 'paged'")
+            if requested == "spec" and not spec.spec_draftable:
                 warnings.warn(
-                    f"{cfg.name} ({cfg.family}): paged backend requested "
-                    f"but the family does not declare paging "
-                    f"({spec.why_not('paging')}); falling back to the "
-                    "slot backend", CapabilityFallbackWarning, stacklevel=2)
-                effective = "slot"
+                    f"{cfg.name} ({cfg.family}): speculative decode "
+                    f"requested but the family does not declare "
+                    f"spec_draftable ({spec.why_not('spec_draftable')}); "
+                    f"falling back to the {spec_inner!r} backend",
+                    CapabilityFallbackWarning, stacklevel=2)
+                effective = spec_inner
+            if effective in ("paged",) or \
+                    (effective == "spec" and spec_inner == "paged"):
+                if not spec.paging:
+                    warnings.warn(
+                        f"{cfg.name} ({cfg.family}): paged backend "
+                        f"requested but the family does not declare paging "
+                        f"({spec.why_not('paging')}); falling back to the "
+                        "slot backend", CapabilityFallbackWarning,
+                        stacklevel=2)
+                    effective = "slot" if effective == "paged" else effective
+                    spec_inner = "slot"
             self.backend: DecodeBackend = make_backend(
                 effective, cfg, capacity, max_seq, window=window,
                 kv_budget_bytes=kv_budget_bytes, ledger=ledger,
                 block_size=block_size, n_blocks=n_blocks,
-                paged_impl=paged_impl, prefix_share=prefix_share)
+                paged_impl=paged_impl, prefix_share=prefix_share,
+                draft_cfg=draft_cfg, draft_params=draft_params,
+                draft_k=draft_k, inner=spec_inner)
         else:
             if paged and requested.name != "paged":
                 raise ValueError(

@@ -14,7 +14,13 @@ Two admission granularities share this module (each ``DecodeBackend`` in
   one device byte budget.  With prefix sharing, a request's reservation
   covers only its UNSHARED blocks; blocks whose owner retired while still
   aliased stay charged by the backend as orphans until the last reference
-  drops.
+  drops.  Under speculative decoding the same reservation grows to cover
+  draft + target + the k-token verify headroom: the inner backend's
+  worst-case sizing folds in ``verify_headroom`` rows, and the spec
+  backend reserves the draft model's decode-state bytes on whatever byte
+  ledger backs the job (the session's shared one, or the paged inner's
+  private ledger; a slot inner with a private ``kv_budget_bytes`` has no
+  byte ledger, so that budget bounds target slots only).
 
 Both enforce ``reserved <= budget`` as an invariant: a request is admitted
 only if its reservation fits, so concurrency degrades gracefully when the

@@ -264,6 +264,36 @@ def make_paged_decode_step(cfg, *, window: Optional[int] = None,
     return paged_step
 
 
+def make_verify_step(cfg, *, window: Optional[int] = None):
+    """Speculative verify over the contiguous cache: tokens ``(b, k)`` (the
+    last committed token + k-1 drafts) -> ``(greedy (b, k) int32, state)``,
+    the target's greedy continuation at every draft position in ONE
+    forward.  The cache advances k rows; the caller rewinds past the
+    accept point (``api.rollback_decode_state``)."""
+
+    def verify(params, state, tokens):
+        logits, state = api.verify_step(cfg, params, state, tokens,
+                                        window=window)
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), state
+
+    return verify
+
+
+def make_paged_verify_step(cfg, *, window: Optional[int] = None,
+                           impl: str = "jnp"):
+    """The paged twin of ``make_verify_step``: k positions per lane scored
+    through block tables.  Returns ``step(params, pages, tables, lengths,
+    tokens (n, k)) -> (greedy (n, k) int32, new pages)``."""
+
+    def verify(params, pages, tables, lengths, tokens):
+        logits, pages = api.paged_verify_step(
+            cfg, params, pages, tables, lengths, tokens,
+            window=window, impl=impl)
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), pages
+
+    return verify
+
+
 def decode_window_for(cfg, shape) -> Optional[int]:
     """Policy: long_500k on full-attention archs uses the SWA fallback."""
     if shape.name != "long_500k":
