@@ -12,6 +12,10 @@
 #   make spec-smoke  - speculative decode vs plain decode on both inner
 #                      backends (self-asserting: token identity, accept
 #                      rate, target steps strictly < generated tokens)
+#   make http-smoke  - live HTTP/SSE front-end (self-asserting: streamed
+#                      tokens byte-identical to offline decode, mid-decode
+#                      /v1/cancel frees lane+KV within one tick, open-loop
+#                      Poisson run reports TTFT/TPOT/goodput percentiles)
 #   make docs-check  - docs lint: relative links + [[refs]] resolve and
 #                      fenced python blocks compile (docs/*.md, README.md)
 #   make examples-smoke - run all four examples/*.py on their tiny configs
@@ -21,7 +25,7 @@ PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export PYTHONPATH
 
 .PHONY: test test-fast bench-smoke plan-smoke paged-smoke backend-smoke \
-    spec-smoke docs-check examples-smoke
+    spec-smoke http-smoke docs-check examples-smoke
 
 test:
 	$(PY) -m pytest -x -q
@@ -47,6 +51,9 @@ backend-smoke:
 
 spec-smoke:
 	$(PY) -m benchmarks.bench_serving --spec
+
+http-smoke:
+	$(PY) -m benchmarks.bench_load --smoke
 
 docs-check:
 	$(PY) scripts/docs_check.py

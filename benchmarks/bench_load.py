@@ -1,0 +1,385 @@
+"""Open-loop load generator against the live HTTP serving front-end.
+
+Requests arrive on a SEEDED open-loop schedule — arrival times are drawn
+up front and each request fires at its scheduled instant regardless of
+how the server is doing (closed-loop generators hide queueing collapse by
+slowing down with the server; open-loop ones expose it).  Three arrival
+mixes:
+
+* ``poisson``       — iid exponential inter-arrivals at ``--rate`` req/s,
+  iid random prompts.
+* ``bursty``        — the same offered rate delivered in simultaneous
+  bursts of ``--burst`` requests (worst-case admission pressure).
+* ``prefix-heavy``  — Poisson arrivals whose prompts share a long common
+  prefix (the copy-on-write prefix-sharing fast path on paged backends).
+
+Every request streams over SSE and is timed CLIENT-side: TTFT (send to
+first token chunk), TPOT (mean inter-token gap after the first), and
+end-to-end latency, reported as p50/p95/p99, plus goodput — completions
+that met BOTH SLOs (``--slo-ttft``, ``--slo-tpot``) per second of wall
+time, the serving metric that throughput alone overstates.
+
+By default the bench self-hosts an in-process ``HydraHTTPServer`` on an
+ephemeral port (``--arch``/``--smoke`` pick the model); ``--url`` points
+it at an already-running ``python -m repro.launch.serve --http`` instead.
+
+``--smoke`` is the self-asserting CI mode (``make http-smoke``): it
+checks that a streamed completion is token-identical to the same prompt
+decoded offline, that a mid-decode ``/v1/cancel`` frees the lane and KV
+reservation within one tick (engine back to baseline), and that an
+open-loop Poisson run completes with sane percentiles — then prints one
+JSON line for the workflow to re-assert.
+"""
+
+from __future__ import annotations
+
+import argparse
+import http.client
+import json
+import threading
+import time
+from typing import Any, Optional
+from urllib.parse import urlparse
+
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# minimal stdlib HTTP + SSE client (timed reads; no external deps)
+# ---------------------------------------------------------------------------
+
+class Client:
+    def __init__(self, url: str, timeout: float = 120.0):
+        p = urlparse(url)
+        self.host, self.port = p.hostname, p.port
+        self.timeout = timeout
+
+    def _conn(self) -> http.client.HTTPConnection:
+        return http.client.HTTPConnection(self.host, self.port,
+                                          timeout=self.timeout)
+
+    def json(self, method: str, path: str,
+             body: Optional[dict] = None) -> tuple[int, dict]:
+        conn = self._conn()
+        try:
+            payload = json.dumps(body) if body is not None else None
+            conn.request(method, path, payload,
+                         {"Content-Type": "application/json"})
+            resp = conn.getresponse()
+            return resp.status, json.loads(resp.read().decode())
+        finally:
+            conn.close()
+
+    def stream(self, path: str, body: dict, *,
+               stop_after: Optional[int] = None,
+               on_chunk=None) -> dict:
+        """POST an SSE completion and time every chunk.  ``stop_after``
+        closes the socket after N token chunks (the disconnect probe);
+        ``on_chunk(i, event)`` runs per token chunk (the cancel probe)."""
+        conn = self._conn()
+        t_send = time.perf_counter()
+        out: dict[str, Any] = {"tokens": [], "chunk_times": [],
+                               "final": None, "disconnected": False}
+        try:
+            conn.request("POST", path, json.dumps(body),
+                         {"Content-Type": "application/json"})
+            resp = conn.getresponse()
+            if resp.status != 200:
+                raise RuntimeError(f"HTTP {resp.status}: {resp.read()!r}")
+            while True:
+                line = resp.readline()
+                if not line:
+                    break
+                line = line.strip()
+                if not line or line.startswith(b":"):   # keep-alive ping
+                    continue
+                if not line.startswith(b"data: "):
+                    continue
+                data = line[len(b"data: "):]
+                if data == b"[DONE]":
+                    break
+                event = json.loads(data)
+                choice = event["choices"][0]
+                if "token_id" in choice:
+                    out["tokens"].append(choice["token_id"])
+                    out["chunk_times"].append(time.perf_counter())
+                    n = len(out["tokens"])
+                    if on_chunk is not None:
+                        on_chunk(n, event)
+                    if stop_after is not None and n >= stop_after:
+                        out["disconnected"] = True
+                        return out          # socket closes in finally
+                else:                       # terminal chunk (finish_reason)
+                    out["final"] = event
+        finally:
+            conn.close()
+        out["t_send"] = t_send
+        if out["chunk_times"]:
+            out["ttft_s"] = out["chunk_times"][0] - t_send
+            gaps = np.diff(out["chunk_times"])
+            out["tpot_s"] = float(np.mean(gaps)) if len(gaps) else 0.0
+            out["e2e_s"] = out["chunk_times"][-1] - t_send
+        return out
+
+
+# ---------------------------------------------------------------------------
+# arrival schedules + prompt mixes (seeded, drawn up front)
+# ---------------------------------------------------------------------------
+
+def make_schedule(mix: str, n: int, rate: float, burst: int,
+                  rng: np.random.Generator) -> np.ndarray:
+    """Arrival offsets (seconds from start), non-decreasing, length n."""
+    if mix == "bursty":
+        n_bursts = max(1, (n + burst - 1) // burst)
+        burst_times = np.cumsum(rng.exponential(burst / rate, n_bursts))
+        return np.repeat(burst_times, burst)[:n]
+    # poisson and prefix-heavy share the arrival process
+    return np.cumsum(rng.exponential(1.0 / rate, n))
+
+
+def make_prompts(mix: str, n: int, plen: int, vocab: int,
+                 rng: np.random.Generator) -> list[list[int]]:
+    if mix == "prefix-heavy":
+        # one long shared prefix + a short unique tail: block-aligned
+        # prefixes alias physical pages copy-on-write on paged backends
+        cut = max(1, (3 * plen) // 4)
+        prefix = rng.integers(0, vocab, cut).tolist()
+        return [prefix + rng.integers(0, vocab, plen - cut).tolist()
+                for _ in range(n)]
+    return [rng.integers(0, vocab, plen).tolist() for _ in range(n)]
+
+
+def percentiles(xs: list[float]) -> Optional[dict]:
+    if not xs:
+        return None
+    return {f"p{p}": round(float(np.percentile(xs, p)), 4)
+            for p in (50, 95, 99)}
+
+
+# ---------------------------------------------------------------------------
+# the open-loop run
+# ---------------------------------------------------------------------------
+
+def run_load(client: Client, model: str, args,
+             rng: np.random.Generator) -> dict:
+    _, models = client.json("GET", "/v1/models")
+    vocab_probe = client.json("GET", "/v1/metrics")[1]
+    del vocab_probe                                   # liveness check only
+    schedule = make_schedule(args.mix, args.n, args.rate, args.burst, rng)
+    prompts = make_prompts(args.mix, args.n, args.prompt_len,
+                           args.vocab_size, rng)
+    results: list[Optional[dict]] = [None] * args.n
+    errors: list[str] = []
+    start = time.perf_counter() + 0.05
+
+    def fire(i: int) -> None:
+        delay = start + schedule[i] - time.perf_counter()
+        if delay > 0:
+            time.sleep(delay)
+        try:
+            results[i] = client.stream(
+                "/v1/completions",
+                {"model": model, "prompt": prompts[i],
+                 "max_tokens": args.gen, "stream": True,
+                 "request_id": f"load-{args.seed}-{i}"})
+        except Exception as e:           # one failed request must not
+            errors.append(f"{i}: {e}")   # strand the whole run
+    threads = [threading.Thread(target=fire, args=(i,), daemon=True)
+               for i in range(args.n)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=args.timeout)
+    wall = time.perf_counter() - start
+
+    done = [r for r in results if r is not None and r.get("final")]
+    ttft = [r["ttft_s"] for r in done if "ttft_s" in r]
+    tpot = [r["tpot_s"] for r in done if "tpot_s" in r and r["tpot_s"] > 0]
+    e2e = [r["e2e_s"] for r in done if "e2e_s" in r]
+    slo_ok = [r for r in done
+              if r.get("ttft_s", 1e9) <= args.slo_ttft
+              and r.get("tpot_s", 0.0) <= args.slo_tpot]
+    n_tokens = sum(len(r["tokens"]) for r in done)
+    return {
+        "mix": args.mix, "n": args.n, "rate_rps": args.rate,
+        "seed": args.seed, "completed": len(done), "errors": errors,
+        "wall_s": round(wall, 3),
+        "offered_rps": round(args.n / max(schedule[-1], 1e-9), 3),
+        "throughput_tok_per_s": round(n_tokens / wall, 1) if wall else None,
+        "ttft_s": percentiles(ttft),
+        "tpot_s": percentiles(tpot),
+        "e2e_s": percentiles(e2e),
+        "slo": {"ttft_s": args.slo_ttft, "tpot_s": args.slo_tpot},
+        "slo_attained": len(slo_ok),
+        "goodput_rps": round(len(slo_ok) / wall, 3) if wall else None,
+        "models_served": [m["id"] for m in models["data"]],
+    }
+
+
+# ---------------------------------------------------------------------------
+# self-hosted server (in-process, ephemeral port) + the smoke checks
+# ---------------------------------------------------------------------------
+
+def self_host(args):
+    """Build the model in-process and serve it on an ephemeral port.
+    Returns (http_server, reference_engine) — the reference engine shares
+    params with the served one, for offline token-identity checks."""
+    import jax
+
+    from repro.configs import get_config
+    from repro.models import api as mapi
+    from repro.serving import (HydraHTTPServer, InferenceEngine,
+                               MultiModelServer)
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    params = mapi.init_params(cfg, jax.random.PRNGKey(args.seed))
+    # the smoke's cancel probe runs a 64-token request so there is decode
+    # left to cancel — size the cache for it, not just --gen
+    max_seq = args.prompt_len + max(args.gen, 64) + 8
+
+    def make_engine():
+        return InferenceEngine(cfg, params, capacity=args.capacity,
+                               max_seq=max_seq, backend=args.backend,
+                               model_name=args.arch)
+    server = MultiModelServer({args.arch: make_engine()})
+    http_srv = HydraHTTPServer(server, port=args.port)
+    return http_srv, make_engine()
+
+
+def smoke(args, client: Client, ref_engine, model: str) -> dict:
+    out: dict[str, Any] = {}
+    rng = np.random.default_rng(args.seed)
+    prompt = rng.integers(0, args.vocab_size, args.prompt_len).tolist()
+
+    # 1. SSE streaming is token-identical to offline decode (same params)
+    ref = ref_engine.submit(np.asarray(prompt, np.int32), args.gen)
+    ref_engine.run()
+    streamed = client.stream("/v1/completions",
+                             {"model": model, "prompt": prompt,
+                              "max_tokens": args.gen, "stream": True})
+    out["offline_tokens"] = ref.generated
+    out["streamed_tokens"] = streamed["tokens"]
+    out["stream_tokens_match"] = streamed["tokens"] == ref.generated
+    out["stream_finish_reason"] = \
+        streamed["final"]["choices"][0]["finish_reason"]
+
+    # 2. cancel mid-decode over HTTP: the stream ends with
+    #    finish_reason=cancelled and the engine is back to baseline
+    #    (all lanes free, zero KV reserved) within one tick
+    rid = f"smoke-cancel-{args.seed}"
+    cancel_acks: list[dict] = []
+
+    def cancel_at_three(n, _event):
+        if n == 3:
+            cancel_acks.append(
+                client.json("POST", "/v1/cancel", {"request_id": rid})[1])
+    cancelled = client.stream(
+        "/v1/completions",
+        {"model": model, "prompt": prompt, "max_tokens": 64,
+         "stream": True, "request_id": rid},
+        on_chunk=cancel_at_three)
+    t_cancel = time.perf_counter()
+    reason = cancelled["final"]["choices"][0]["finish_reason"]
+    deadline = time.perf_counter() + 10.0
+    freed = None
+    while time.perf_counter() < deadline:
+        eng = client.json("GET", "/v1/metrics")[1]["engines"][model]
+        if eng["free_lanes"] == eng["capacity"] \
+                and eng["kv_reserved_bytes"] == 0:
+            freed = round(time.perf_counter() - t_cancel, 4)
+            break
+        time.sleep(0.01)
+    out["cancel"] = {
+        "acked": bool(cancel_acks and cancel_acks[0].get("cancelled")),
+        "finish_reason": reason,
+        "n_streamed_before_close": len(cancelled["tokens"]),
+        "freed_within_s": freed,
+        "tokens_saved": 64 - len(cancelled["tokens"]),
+    }
+
+    # 3. open-loop Poisson run with client-side percentiles
+    out["load"] = run_load(client, model, args, rng)
+
+    load_ok = (out["load"]["completed"] == args.n
+               and not out["load"]["errors"]
+               and out["load"]["ttft_s"] is not None
+               and out["load"]["goodput_rps"] is not None)
+    out["ok"] = bool(out["stream_tokens_match"]
+                     and out["cancel"]["acked"]
+                     and reason == "cancelled"
+                     and out["cancel"]["n_streamed_before_close"] < 64
+                     and freed is not None
+                     and load_ok)
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--url", default=None,
+                    help="attach to a running server (default: self-host "
+                    "in-process on an ephemeral port)")
+    ap.add_argument("--arch", default="qwen3-0.6b")
+    ap.add_argument("--smoke", action="store_true",
+                    help="self-asserting CI mode (token identity + cancel "
+                    "+ Poisson percentiles); prints one JSON line")
+    ap.add_argument("--backend", default="slot",
+                    choices=["slot", "paged", "spec"])
+    ap.add_argument("--mix", default="poisson",
+                    choices=["poisson", "bursty", "prefix-heavy"])
+    ap.add_argument("--n", type=int, default=8, help="total requests")
+    ap.add_argument("--rate", type=float, default=4.0,
+                    help="offered arrival rate, req/s")
+    ap.add_argument("--burst", type=int, default=4,
+                    help="burst size for --mix bursty")
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=8)
+    ap.add_argument("--capacity", type=int, default=4)
+    ap.add_argument("--vocab-size", type=int, default=0,
+                    help="prompt id range (0: read from the model config "
+                    "when self-hosting, else 1000)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--port", type=int, default=0)
+    ap.add_argument("--slo-ttft", type=float, default=5.0,
+                    help="TTFT SLO seconds (goodput counts requests "
+                    "meeting it; generous default absorbs jit compiles)")
+    ap.add_argument("--slo-tpot", type=float, default=0.5,
+                    help="per-token SLO seconds")
+    ap.add_argument("--timeout", type=float, default=300.0)
+    args = ap.parse_args()
+
+    http_srv = ref_engine = None
+    if args.url is None:
+        http_srv, ref_engine = self_host(args)
+        http_srv.start()
+        url = http_srv.url
+        if not args.vocab_size:
+            args.vocab_size = ref_engine.cfg.vocab_size
+    else:
+        url = args.url
+        if not args.vocab_size:
+            args.vocab_size = 1000
+    client = Client(url, timeout=args.timeout)
+    try:
+        if args.smoke:
+            if ref_engine is None:
+                raise SystemExit("--smoke needs the self-hosted server "
+                                 "(token identity compares against the "
+                                 "same in-process params); drop --url")
+            # warm the jit caches so measured TTFT is serving, not compile
+            client.json("POST", "/v1/completions",
+                        {"model": args.arch,
+                         "prompt": list(range(1, args.prompt_len + 1)),
+                         "max_tokens": 2})
+            out = smoke(args, client, ref_engine, args.arch)
+        else:
+            rng = np.random.default_rng(args.seed)
+            model = args.arch
+            out = run_load(client, model, args, rng)
+    finally:
+        if http_srv is not None:
+            http_srv.stop()
+    print(json.dumps(out))
+
+
+if __name__ == "__main__":
+    main()

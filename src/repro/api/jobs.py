@@ -119,7 +119,16 @@ class ServeJob(JobSpec):
     draft_seed: int = 0
     draft_k: int = 4                            # draft tokens per spec round
     spec_inner: Optional[str] = None            # "slot" (default) | "paged"
+    # HTTP front-end fields (serving/server.py): whether the model offers
+    # SSE token streaming over /v1 endpoints, and an optional extra route
+    # alias clients may pass as "model" (e.g. endpoint="prod-chat")
+    stream: bool = True
+    endpoint: Optional[str] = None
     kind: str = field(default="serve", init=False)
+
+    def http_options(self) -> dict:
+        """The per-model options dict the HTTP front-end consumes."""
+        return {"stream": bool(self.stream), "endpoint": self.endpoint}
 
     def requested_backend(self) -> str:
         """The backend this spec asks for, before capability fallback."""

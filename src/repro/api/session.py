@@ -26,6 +26,7 @@ import enum
 import itertools
 import threading
 import time
+from collections import deque
 from dataclasses import dataclass, field
 from typing import Any, Optional, Sequence
 
@@ -106,7 +107,9 @@ class Session:
         # run_async advertises live submit_request, which may lazily build
         # an engine while serve_tick is walking the engine dict
         self._engine_lock = threading.Lock()
-        self.serve_trace: list[str] = []
+        # capped ring (like MultiModelServer.schedule_trace): a session
+        # serving forever must not grow its tick trace without bound
+        self.serve_trace: deque[str] = deque(maxlen=4096)
         self.unit_trace: list[tuple] = []
 
     def __enter__(self) -> "Session":
@@ -162,10 +165,14 @@ class Session:
                        capabilities=spec.capabilities())
         if job_id in self._engines:
             eng = self._engines[job_id]
+            # retired_total, not len(completed): drain-on-read serving (the
+            # HTTP front-end) empties the retention deque, and a completed
+            # cap evicts old entries — the counter survives both
             out.update(backend=eng.backend.name,
-                       n_completed=len(eng.completed),
+                       n_completed=eng.retired_total,
                        n_active=len(eng.active_requests()),
-                       n_queued=len(eng.queued_requests()))
+                       n_queued=len(eng.queued_requests()),
+                       recent_requests=eng.recent_metrics())
         if job_id in self._cold:
             out.update(cold=True, promoted="engine" in self._cold[job_id])
         if job_id in self._eval_execs:
@@ -186,12 +193,10 @@ class Session:
         if job_id in self._train_execs:
             self._train_execs[job_id].done = True
         if job_id in self._engines:
-            from repro.serving import Status
-            eng = self._engines[job_id]
-            while eng.queue:
-                req = eng.queue.pop()
-                req.status = Status.CANCELLED    # terminal; req.done is True
-                req.finish_time = eng.clock()
+            # first-class engine cancellation: entries stay queued (FIFO
+            # order intact) and retire at the next admission pass without
+            # being reserved or prefilled; active requests finish
+            self._engines[job_id].cancel_all_queued()
 
     def _settle(self, job_id: str, *, done: bool) -> None:
         """Post-run state transition that never overwrites a cancel: done
@@ -283,6 +288,8 @@ class Session:
                                                       job.max_seq),
                 "bucket_sizes": list(buckets) if buckets else None,
                 "cold": cold,
+                "stream": job.stream,
+                "endpoint": job.endpoint,
                 "backend": backend,
                 "requested_backend": job.requested_backend(),
                 "capabilities": spec.capabilities(),
@@ -639,6 +646,19 @@ class Session:
         if self._state[jid] is JobState.CANCELLED:
             raise ValueError(f"{jid} is cancelled")
         return self.engine(jid).submit(prompt, max_new_tokens, **kw)
+
+    def cancel_request(self, request_id: str,
+                       target: Optional[str] = None) -> bool:
+        """Withdraw ONE generation request (vs. ``cancel``, which withdraws
+        a whole job).  Queued requests retire unreserved at the next
+        admission pass; a running one frees its lane and KV reservation at
+        the next tick.  ``target`` narrows the search to one serve job (id
+        or routing name); otherwise every live engine is asked."""
+        if target is not None:
+            return self.engine(target).cancel(request_id)
+        with self._engine_lock:
+            engines = list(self._engines.values())
+        return any(eng.cancel(request_id) for eng in engines)
 
     def serve_has_work(self) -> bool:
         with self._engine_lock:

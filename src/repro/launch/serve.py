@@ -15,10 +15,18 @@ takes ``--draft-model ARCH --draft-k N [--spec-inner slot|paged]`` for
 speculative decoding with a draft member model).  Prints per-request
 latency/throughput metrics plus engine summaries as JSON.
 
+With ``--http`` the CLI instead brings the models up behind the online
+HTTP front-end (``repro.serving.server``): OpenAI-compatible
+``/v1/completions`` + ``/v1/chat/completions`` with SSE token streaming,
+``/v1/cancel`` for first-class request cancellation, and ``/v1/metrics``.
+It prints ``{"url": ...}`` once the socket is bound and serves until
+interrupted.
+
   python -m repro.launch.serve --arch qwen3-0.6b --smoke \
       --batch 4 --prompt-len 32 --gen 16
   python -m repro.launch.serve --arch qwen3-0.6b,xlstm-350m --smoke \
       --batch 3 --stagger 2
+  python -m repro.launch.serve --arch qwen3-0.6b --smoke --http --port 8000
 """
 
 from __future__ import annotations
@@ -54,7 +62,9 @@ def build_serve_job(arch: str, args) -> ServeJob:
                     if draft else None,
                     draft_seed=args.seed,
                     draft_k=getattr(args, "draft_k", 4),
-                    spec_inner=getattr(args, "spec_inner", None))
+                    spec_inner=getattr(args, "spec_inner", None),
+                    stream=not getattr(args, "no_stream", False),
+                    endpoint=getattr(args, "endpoint", None))
 
 
 def synth_prompts(cfg, n: int, prompt_len: int, seed: int):
@@ -92,6 +102,33 @@ def serve(args) -> dict:
         eng = session.engine(archs[0])
         out["sample"] = eng.completed[0].generated[:8] if eng.completed else []
     return out
+
+
+def serve_http(args):
+    """Bring the models up behind the HTTP/SSE front-end and block."""
+    import time
+
+    from repro.serving import HydraHTTPServer, MultiModelServer
+
+    archs = [a.strip() for a in args.arch.split(",") if a.strip()]
+    session = Session(HydraConfig(scheduler=args.scheduler, seed=args.seed))
+    jids = {a: session.submit(build_serve_job(a, args)) for a in archs}
+    engines = {a: session.engine(a) for a in archs}   # build + promote now
+    options = {a: session.jobs()[jids[a]].http_options() for a in archs}
+    server = MultiModelServer(engines, scheduler=args.scheduler)
+    http = HydraHTTPServer(server, host=args.host, port=args.port,
+                           model_options=options)
+    http.start()
+    # machine-readable first line: benches/scripts parse the bound address
+    # (--port 0 binds an ephemeral port)
+    print(json.dumps({"url": http.url, "models": archs}), flush=True)
+    try:
+        while True:
+            time.sleep(3600)
+    except KeyboardInterrupt:
+        pass
+    finally:
+        http.stop()
 
 
 def main():
@@ -139,8 +176,23 @@ def main():
                     "(paged backend)")
     ap.add_argument("--scheduler", default="lrtf",
                     choices=["lrtf", "srtf", "fifo", "random"])
+    ap.add_argument("--http", action="store_true",
+                    help="serve over HTTP (OpenAI-compatible /v1 endpoints "
+                    "with SSE streaming) instead of a synthetic batch")
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=8000,
+                    help="HTTP port (0 binds an ephemeral port)")
+    ap.add_argument("--no-stream", action="store_true",
+                    help="disable SSE streaming on the served models "
+                    "(ServeJob.stream=False)")
+    ap.add_argument("--endpoint", default=None,
+                    help="extra route alias clients may pass as 'model' "
+                    "(ServeJob.endpoint; single-model serving)")
     args = ap.parse_args()
-    print(json.dumps(serve(args)))
+    if args.http:
+        serve_http(args)
+    else:
+        print(json.dumps(serve(args)))
 
 
 if __name__ == "__main__":

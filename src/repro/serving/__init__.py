@@ -9,11 +9,15 @@ from repro.serving.multi import MultiModelServer
 from repro.serving.paging import BlockPool, blocks_for_rows, default_n_blocks
 from repro.serving.queue import KVBudget, PagedKVBudget, RequestQueue
 from repro.serving.request import Request, Status
+from repro.serving.server import (HydraHTTPServer, ServingFrontend,
+                                  encode_prompt)
 from repro.serving.slots import SlotPool, stack_trees, write_slots
+from repro.serving.stream import TokenStream
 
 __all__ = ["InferenceEngine", "MultiModelServer", "KVBudget", "PagedKVBudget",
            "RequestQueue", "Request", "Status", "SlotPool", "BlockPool",
            "blocks_for_rows", "default_n_blocks", "stack_trees",
            "write_slots", "pow2_buckets", "DecodeBackend", "SlotBackend",
            "PagedBackend", "SpecDecodeBackend", "BACKENDS", "make_backend",
-           "CapabilityFallbackWarning"]
+           "CapabilityFallbackWarning", "TokenStream", "ServingFrontend",
+           "HydraHTTPServer", "encode_prompt"]

@@ -13,6 +13,21 @@ Requests therefore join and leave between decode steps without ever
 retracing or perturbing in-flight lanes; outputs are token-identical to
 running each request alone (tests/test_serving.py).
 
+Online-serving surface (serving/server.py sits on top of this):
+
+* ``submit(..., stream=True)`` attaches a ``TokenStream`` that receives
+  every token the moment it exists and closes with the request's
+  terminal status at retirement.
+* ``cancel(request_id)`` withdraws a request wherever it lives: a queued
+  request is skipped and retired at the next admission pass (never
+  reserved or prefilled), a running one keeps its CANCELLED status
+  through retirement while its lane and KV reservation release through
+  the normal ``backend.release`` path (paged refcounts/orphans
+  included) — both within one tick (tests/test_cancel.py).
+* ``completed`` is a deque with optional ``completed_cap`` retention and
+  ``drain_completed()`` for server loops, so a long-running engine holds
+  steady memory instead of accumulating every request ever served.
+
 Where decode state lives — and what a request's residency costs — is the
 **backend's** concern (``serving/backends.py``): ``SlotBackend`` (default;
 every servable family), ``PagedBackend`` (block-granular admission with
@@ -31,6 +46,7 @@ from __future__ import annotations
 
 import time
 import warnings
+from collections import deque
 from functools import lru_cache
 from typing import Optional, Sequence, Union
 
@@ -88,6 +104,7 @@ class InferenceEngine:
                  prefix_share: bool = True,
                  draft_cfg=None, draft_params=None, draft_k: int = 4,
                  spec_inner: Optional[str] = None,
+                 completed_cap: Optional[int] = None,
                  clock=time.perf_counter):
         spec = family_spec(cfg)
         if not spec.servable:
@@ -186,7 +203,13 @@ class InferenceEngine:
                                 if self.bucket_sizes else None)
         self._active: dict[int, Request] = {}       # lane -> request
         self._tokens = np.zeros((capacity, 1, 1), np.int32)
-        self.completed: list[Request] = []
+        # retired requests: bounded when completed_cap is set (a server
+        # surviving millions of requests must hold steady memory — the
+        # serving loop drains this every tick; the cap is the backstop)
+        self.completed: deque[Request] = deque(maxlen=completed_cap)
+        self.completed_cap = completed_cap
+        self.retired_total = 0       # monotonic, survives drains/evictions
+        self._recent_metrics: deque[dict] = deque(maxlen=32)
         # engine-level counters (JSON summary)
         self.decode_steps = 0
         self.decode_tokens = 0       # tokens from decode steps (not prefill)
@@ -225,10 +248,14 @@ class InferenceEngine:
     # -- submission ---------------------------------------------------------
     def submit(self, prompt, max_new_tokens: int, *,
                request_id: str = "", eos_id: Optional[int] = None,
-               arrival_time: Optional[float] = None) -> Request:
+               arrival_time: Optional[float] = None,
+               stream: bool = False) -> Request:
         req = Request(prompt=prompt, max_new_tokens=max_new_tokens,
                       request_id=request_id, eos_id=eos_id,
                       model=self.model_name, arrival_time=arrival_time)
+        if stream:
+            from repro.serving.stream import TokenStream
+            req.stream = TokenStream(req.request_id)
         # rows actually written: plen at prefill + one per decode step; the
         # final generated token is sampled but never fed back into the cache
         if req.prompt_len + req.max_new_tokens - 1 > self.max_seq:
@@ -238,6 +265,38 @@ class InferenceEngine:
         # forever and livelock admission — the backend rejects it up front
         self.backend.admission_check(req, self._bucket(req.prompt_len))
         return self.queue.push(req)
+
+    # -- cancellation -------------------------------------------------------
+    def cancel(self, request_id: str) -> bool:
+        """Withdraw a request by id, wherever it lives.
+
+        Queued: marked CANCELLED in place — the next admission pass skips
+        and retires it without ever reserving a lane or running its
+        prefill.  Running: marked CANCELLED so ``done`` turns true and the
+        next ``_retire_finished`` releases its lane and KV reservation
+        through the normal backend path (paged refcounts and orphan
+        charges included) while PRESERVING the cancelled status.  Returns
+        False when no live request has that id.
+        """
+        req = self.queue.find(request_id)
+        if req is not None and req.status is Status.QUEUED:
+            req.status = Status.CANCELLED
+            return True
+        for req in self._active.values():
+            if req.request_id == request_id \
+                    and req.status is Status.RUNNING:
+                req.status = Status.CANCELLED
+                return True
+        return False
+
+    def cancel_all_queued(self) -> int:
+        """Withdraw every still-queued request (job-level cancel)."""
+        n = 0
+        for req in self.queue:
+            if req.status is Status.QUEUED:
+                req.status = Status.CANCELLED
+                n += 1
+        return n
 
     # -- introspection ------------------------------------------------------
     def active_requests(self) -> Sequence[Request]:
@@ -268,15 +327,27 @@ class InferenceEngine:
         return rem * self.tok_seconds_estimate()
 
     # -- engine tick --------------------------------------------------------
+    def _finish(self, req: Request) -> None:
+        """Shared retirement bookkeeping (finished AND cancelled)."""
+        req.finish_time = self.clock()
+        self.completed.append(req)
+        self.retired_total += 1
+        self._recent_metrics.append(req.metrics())
+        if req.stream is not None:
+            req.stream.close(req.status)
+
     def _retire_finished(self) -> None:
         for lane, req in list(self._active.items()):
             if req.done:
-                req.status = Status.FINISHED
-                req.finish_time = self.clock()
+                # a cancel must survive retirement: stomping it to
+                # FINISHED here made Status.CANCELLED unreachable for
+                # running requests (the original lifecycle bug)
+                if req.status is not Status.CANCELLED:
+                    req.status = Status.FINISHED
                 self.backend.release(req)
                 req.slot = None
                 del self._active[lane]
-                self.completed.append(req)
+                self._finish(req)
 
     def _bucket(self, plen: int) -> int:
         """Admission group key: smallest bucket >= plen (exact length when
@@ -289,9 +360,17 @@ class InferenceEngine:
 
     def _admit(self) -> list[Request]:
         admitted: list[Request] = []
-        while self.queue and self.backend.free_lanes:
+        while self.queue:
             req = self.queue.peek()
-            if not self.backend.reserve(req, self._bucket(req.prompt_len)):
+            if req.status is Status.CANCELLED:
+                # withdrawn while queued: retire straight from the queue —
+                # admitting it would reserve a lane, burn a full jitted
+                # prefill, and stomp the status back to RUNNING
+                self.queue.pop()
+                self._finish(req)
+                continue
+            if not self.backend.free_lanes or \
+                    not self.backend.reserve(req, self._bucket(req.prompt_len)):
                 break
             self.queue.pop()
             req.admit_time = self.clock()
@@ -332,6 +411,8 @@ class InferenceEngine:
                 tok = int(first[i, 0])
                 req.generated.append(tok)
                 req.first_token_time = now
+                if req.stream is not None:
+                    req.stream.put(tok)
                 self._tokens[req.slot, 0, 0] = tok
                 self._active[req.slot] = req
         return admitted
@@ -355,20 +436,44 @@ class InferenceEngine:
                                else 0.8 * self._tok_s_ema + 0.2 * per_tok)
             self._tokens = ntoks
             for lane, req in self._active.items():
-                req.generated.append(int(ntoks[lane, 0, 0]))
+                tok = int(ntoks[lane, 0, 0])
+                req.generated.append(tok)
+                if req.stream is not None:
+                    req.stream.put(tok)
                 self.backend.advance(lane)
         return self.has_work()
 
     def run(self, max_steps: Optional[int] = None) -> list[Request]:
         """Drive to completion; returns requests completed during the call."""
-        done_before = len(self.completed)
+        done_before = self.retired_total
         steps = 0
         while self.step():
             steps += 1
             if max_steps is not None and steps >= max_steps:
                 break
         self._retire_finished()
-        return self.completed[done_before:]
+        return self.completed_since(done_before)
+
+    def completed_since(self, retired_before: int) -> list[Request]:
+        """Requests retired after ``retired_before`` (a ``retired_total``
+        snapshot) that are still retained in ``completed``."""
+        n = self.retired_total - retired_before
+        if n <= 0:
+            return []
+        n = min(n, len(self.completed))
+        return list(self.completed)[len(self.completed) - n:]
+
+    def drain_completed(self) -> list[Request]:
+        """Pop and return every retained completed request — the serving
+        loop's drain-on-read, so completions never accumulate forever."""
+        out = list(self.completed)
+        self.completed.clear()
+        return out
+
+    def recent_metrics(self) -> list[dict]:
+        """Per-request metrics of the most recently retired requests
+        (bounded ring; survives ``drain_completed`` for ``poll()``)."""
+        return list(self._recent_metrics)
 
     # -- metrics ------------------------------------------------------------
     def summary(self) -> dict:
@@ -383,9 +488,13 @@ class InferenceEngine:
                 if self.bucket_sizes else None,
             "slot_bytes": self.slot_bytes,
             "kv_budget_bytes": self.backend.budget.budget_bytes,
+            "kv_reserved_bytes": self.backend.budget.reserved_bytes,
             "kv_peak_bytes": self.backend.budget.peak_bytes,
+            "free_lanes": self.backend.free_lanes,
             "peak_concurrency": self.peak_concurrency,
-            "n_completed": len(self.completed),
+            # retired_total, not len(completed): drain_completed/-cap
+            # eviction must not make a long-running server report zero
+            "n_completed": self.retired_total,
             "decode_steps": self.decode_steps,
             "prefill_calls": self.prefill_calls,
             "prefill_tok_per_s": round(

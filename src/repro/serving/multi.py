@@ -12,6 +12,7 @@ paper proves out for training makespan.
 
 from __future__ import annotations
 
+from collections import deque
 from typing import Optional, Union
 
 from repro.core.scheduler import ModelProgress, SchedulerFn, get_scheduler
@@ -21,7 +22,8 @@ from repro.serving.request import Request
 
 class MultiModelServer:
     def __init__(self, engines: dict[str, InferenceEngine],
-                 scheduler: Union[str, SchedulerFn] = "lrtf"):
+                 scheduler: Union[str, SchedulerFn] = "lrtf",
+                 trace_cap: int = 4096):
         if not engines:
             raise ValueError("need at least one engine")
         self.engines = dict(engines)
@@ -29,11 +31,18 @@ class MultiModelServer:
         self.scheduler: SchedulerFn = (get_scheduler(scheduler)
                                        if isinstance(scheduler, str)
                                        else scheduler)
-        self.schedule_trace: list[str] = []   # model picked at each tick
+        # model picked at each tick — a capped ring, not an unbounded
+        # list: a server alive for millions of ticks holds steady memory
+        self.schedule_trace: deque[str] = deque(maxlen=trace_cap)
 
     def submit(self, model: str, prompt, max_new_tokens: int,
                **kw) -> Request:
         return self.engines[model].submit(prompt, max_new_tokens, **kw)
+
+    def cancel(self, request_id: str) -> bool:
+        """Withdraw a request by id from whichever engine holds it."""
+        return any(eng.cancel(request_id)
+                   for eng in self.engines.values())
 
     def has_work(self) -> bool:
         return any(e.has_work() for e in self.engines.values())
@@ -54,12 +63,24 @@ class MultiModelServer:
         return name
 
     def run(self, max_steps: Optional[int] = None) -> dict[str, list[Request]]:
+        """Drive to completion; returns only the requests completed DURING
+        this call (mirrors ``InferenceEngine.run`` — returning the full
+        ``completed`` history double-counted on repeated invocations)."""
+        before = {name: eng.retired_total
+                  for name, eng in self.engines.items()}
         steps = 0
         while self.step() is not None:
             steps += 1
             if max_steps is not None and steps >= max_steps:
                 break
-        return {name: eng.completed for name, eng in self.engines.items()}
+        return {name: eng.completed_since(before[name])
+                for name, eng in self.engines.items()}
+
+    def drain_completed(self) -> dict[str, list[Request]]:
+        """Pop every engine's retained completions (the serving loop's
+        drain-on-read; see ``InferenceEngine.drain_completed``)."""
+        return {name: eng.drain_completed()
+                for name, eng in self.engines.items()}
 
     def summary(self) -> dict:
         out = {name: eng.summary() for name, eng in self.engines.items()}

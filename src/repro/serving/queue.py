@@ -58,6 +58,14 @@ class RequestQueue:
         must size the head's reservation before deciding to admit)."""
         return self._q[0]
 
+    def find(self, request_id: str) -> Optional[Request]:
+        """Queued request by id (cancellation targets it in place — the
+        entry stays in FIFO order and admission retires it when reached)."""
+        for req in self._q:
+            if req.request_id == request_id:
+                return req
+        return None
+
     def __len__(self) -> int:
         return len(self._q)
 

@@ -1,13 +1,20 @@
-"""Request objects + per-request latency/throughput metrics.
+r"""Request objects + per-request latency/throughput metrics.
 
 Lifecycle (see docs/serving.md):
 
     QUEUED --admit--> RUNNING --last token--> FINISHED
-      |                  |
+      |    \             |        \
+      |     cancel       |         cancel (released next tick)
+      |        \         |            \
+      arrival   +--------+-------> CANCELLED
       arrival_time       admit_time / first_token_time ... finish_time
 
-All timestamps come from the engine's injectable clock so tests can freeze
-time; durations are derived lazily in ``metrics()``.
+``cancel`` is first-class (``InferenceEngine.cancel``): a queued request
+is retired at the next admission pass without ever being reserved or
+prefilled; a running one keeps CANCELLED through retirement while its
+lane and KV reservation release normally.  All timestamps come from the
+engine's injectable clock so tests can freeze time; durations are
+derived lazily in ``metrics()``.
 """
 
 from __future__ import annotations
@@ -15,7 +22,7 @@ from __future__ import annotations
 import enum
 import itertools
 from dataclasses import dataclass, field
-from typing import Optional
+from typing import Any, Optional
 
 import numpy as np
 
@@ -26,7 +33,7 @@ class Status(enum.Enum):
     QUEUED = "queued"
     RUNNING = "running"
     FINISHED = "finished"
-    CANCELLED = "cancelled"      # withdrawn while still queued
+    CANCELLED = "cancelled"      # withdrawn (queued or mid-decode)
 
 
 @dataclass
@@ -44,6 +51,9 @@ class Request:
     status: Status = Status.QUEUED
     slot: Optional[int] = None               # pool slot / decode lane
     generated: list[int] = field(default_factory=list)
+    # online serving: a TokenStream the engine feeds as tokens appear and
+    # closes (with the terminal status) at retirement; None for batch use
+    stream: Optional[Any] = None
     # paged engines only: blocks reserved at admission (the byte guarantee),
     # the high-water mark of blocks actually allocated while running, and
     # how many physical blocks were aliased from a prompt-prefix donor

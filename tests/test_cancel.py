@@ -1,0 +1,201 @@
+"""First-class request cancellation + bounded retention (repro.serving).
+
+The lifecycle bugs this locks down:
+
+* ``_retire_finished`` used to stomp ``Status.CANCELLED`` to FINISHED, so
+  a running request could never observably be cancelled — now the status
+  survives retirement while the lane and KV reservation release through
+  the normal backend path (slot, paged refcounts/orphans, spec draft
+  state all included; ledger back to baseline, no leaked blocks).
+* ``_admit`` used to admit cancelled queued requests — reserving a lane,
+  burning a jitted prefill, and flipping the status back to RUNNING.  Now
+  admission skips and retires them unreserved.
+* ``run()``/retention: ``completed`` is drain-on-read with an optional
+  cap, ``schedule_trace`` a capped ring, and repeated ``run()`` calls
+  return only newly-completed requests — a long-lived server holds
+  steady memory and never double-counts.
+"""
+
+import functools
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.spilling import DeviceMemory
+from repro.models import api
+from repro.serving import InferenceEngine, MultiModelServer, Status
+
+MAX_SEQ = 48
+
+
+@functools.lru_cache(maxsize=None)
+def _dense():
+    cfg = get_config("qwen3-0.6b", smoke=True)
+    return cfg, api.init_params(cfg, jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def dense():
+    return _dense()
+
+
+def _prompt(cfg, seed, plen=8):
+    rng = np.random.RandomState(seed)
+    return rng.randint(0, cfg.vocab_size, plen).astype(np.int32)
+
+
+def _make_engine(cfg, params, backend, ledger=None, **kw):
+    if backend == "spec":
+        kw.update(draft_cfg=cfg, draft_params=params, draft_k=2)
+    if backend == "paged":
+        kw.update(block_size=8)
+    return InferenceEngine(cfg, params, capacity=3, max_seq=MAX_SEQ,
+                           backend=backend, ledger=ledger, **kw)
+
+
+def _assert_baseline(eng, ledger):
+    """Every reservation the engine ever took has been handed back."""
+    assert eng.budget.reserved_bytes == 0
+    if ledger is not None:
+        assert ledger.kv_reserved_bytes == 0
+    if eng.pool is not None and hasattr(eng.pool, "n_blocks"):
+        assert eng.pool.n_free == eng.pool.n_allocatable   # no leaked blocks
+
+
+# ---------------------------------------------------------------------------
+# cancel mid-decode: status survives, lane + KV release on every backend
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["slot", "paged", "spec"])
+def test_cancel_mid_decode_releases_and_preserves_status(dense, backend):
+    cfg, params = dense
+    ledger = (DeviceMemory(-1, budget_bytes=10**9)
+              if backend in ("paged", "spec") else None)
+    eng = _make_engine(cfg, params, backend, ledger)
+    victim = eng.submit(_prompt(cfg, 1), 12)
+    other = eng.submit(_prompt(cfg, 2), 6)
+    for _ in range(2):
+        eng.step()                      # both admitted and decoding
+    assert victim.status is Status.RUNNING
+    lanes_before = eng.n_free_lanes
+    assert eng.cancel(victim.request_id)
+    eng.step()                          # retirement happens within one tick
+    # the original bug: this status came back FINISHED
+    assert victim.status is Status.CANCELLED
+    assert victim in eng.completed and victim.finish_time is not None
+    assert len(victim.generated) < 12   # it really stopped early
+    assert eng.n_free_lanes == lanes_before + 1
+    done = eng.run()
+    assert other in done and other.status is Status.FINISHED
+    assert len(other.generated) == 6
+    _assert_baseline(eng, ledger)
+    # the freed lane is genuinely reusable and decode state was not
+    # perturbed: replaying the surviving prompt reproduces its tokens
+    replay = eng.submit(other.prompt, 6)
+    eng.run()
+    assert replay.generated == other.generated
+    _assert_baseline(eng, ledger)
+
+
+def test_cancelled_status_counts_in_metrics(dense):
+    cfg, params = dense
+    eng = _make_engine(cfg, params, "slot")
+    req = eng.submit(_prompt(cfg, 3), 10)
+    eng.step()
+    eng.cancel(req.request_id)
+    eng.step()
+    rec = [m for m in eng.recent_metrics()
+           if m["request_id"] == req.request_id]
+    assert rec and rec[0]["status"] == "cancelled"
+    assert rec[0]["e2e_s"] is not None
+
+
+# ---------------------------------------------------------------------------
+# cancel while queued: skipped at admission, never reserved or prefilled
+# ---------------------------------------------------------------------------
+
+def test_cancel_queued_request_is_never_prefilled(dense):
+    cfg, params = dense
+    eng = InferenceEngine(cfg, params, capacity=1, max_seq=MAX_SEQ)
+    first = eng.submit(_prompt(cfg, 4), 4)
+    victim = eng.submit(_prompt(cfg, 5), 4)
+    last = eng.submit(_prompt(cfg, 6), 4)
+    eng.step()                          # capacity 1: only `first` admitted
+    assert victim.status is Status.QUEUED
+    assert eng.cancel(victim.request_id)
+    prefills_before = eng.prefill_calls
+    eng.run()
+    # the original bug: the cancelled entry was admitted anyway — a lane
+    # reserved, a jitted prefill burned, the status stomped to RUNNING
+    assert victim.status is Status.CANCELLED
+    assert victim.admit_time is None and victim.generated == []
+    assert victim in eng.completed
+    assert first.status is Status.FINISHED
+    assert last.status is Status.FINISHED
+    # exactly one more prefill group ran (for `last`), none for the victim
+    assert eng.prefill_calls == prefills_before + 1
+    assert eng.budget.reserved_bytes == 0
+
+
+def test_cancel_unknown_or_finished_returns_false(dense):
+    cfg, params = dense
+    eng = _make_engine(cfg, params, "slot")
+    req = eng.submit(_prompt(cfg, 7), 2)
+    eng.run()
+    assert req.status is Status.FINISHED
+    assert not eng.cancel(req.request_id)       # already retired
+    assert not eng.cancel("no-such-request")
+
+
+def test_cancel_all_queued_only_touches_queued(dense):
+    cfg, params = dense
+    eng = InferenceEngine(cfg, params, capacity=1, max_seq=MAX_SEQ)
+    running = eng.submit(_prompt(cfg, 8), 3)
+    queued = eng.submit(_prompt(cfg, 9), 3)
+    eng.step()
+    assert eng.cancel_all_queued() == 1
+    eng.run()
+    assert running.status is Status.FINISHED
+    assert len(running.generated) == 3
+    assert queued.status is Status.CANCELLED and queued.generated == []
+
+
+# ---------------------------------------------------------------------------
+# bounded retention + drain-on-read + no double counting
+# ---------------------------------------------------------------------------
+
+def test_completed_cap_bounds_retention_under_long_run(dense):
+    cfg, params = dense
+    eng = InferenceEngine(cfg, params, capacity=4, max_seq=MAX_SEQ,
+                          completed_cap=8)
+    server = MultiModelServer({"m": eng}, trace_cap=16)
+    n = 30
+    for i in range(n):
+        server.submit("m", _prompt(cfg, 100 + i, plen=4), 1)
+    server.run()
+    # retention stays bounded while the monotonic counters keep the truth
+    assert len(eng.completed) <= 8
+    assert len(server.schedule_trace) <= 16
+    assert eng.retired_total == n
+    assert eng.summary()["n_completed"] == n
+    drained = server.drain_completed()["m"]
+    assert 0 < len(drained) <= 8
+    assert server.drain_completed()["m"] == []      # drain-on-read: empty
+
+
+def test_repeated_run_returns_only_new_completions(dense):
+    cfg, params = dense
+    eng = InferenceEngine(cfg, params, capacity=2, max_seq=MAX_SEQ)
+    server = MultiModelServer({"m": eng})
+    a = server.submit("m", _prompt(cfg, 20), 2)
+    b = server.submit("m", _prompt(cfg, 21), 2)
+    first = server.run()["m"]
+    assert sorted(r.request_id for r in first) == \
+        sorted([a.request_id, b.request_id])
+    c = server.submit("m", _prompt(cfg, 22), 2)
+    # the original bug: the full completed history came back again here
+    second = server.run()["m"]
+    assert [r.request_id for r in second] == [c.request_id]
+    assert server.run() == {"m": []}                # idle run: nothing new

@@ -1,0 +1,278 @@
+"""HTTP + SSE online serving front-end (repro.serving.server).
+
+Load-bearing properties: SSE chunk framing carries exactly the tokens the
+engine decodes (byte-identical to a non-streaming completion AND to
+offline decode), a client that disconnects mid-stream has its request
+cancelled and its lane freed within a tick, and per-request engine
+metrics match externally-measured timings under a frozen clock.
+"""
+
+import http.client
+import json
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import api
+from repro.serving import (HydraHTTPServer, InferenceEngine,
+                           MultiModelServer, Status, TokenStream,
+                           encode_prompt)
+
+MAX_SEQ = 64
+
+
+@pytest.fixture(scope="module")
+def dense():
+    cfg = get_config("qwen3-0.6b", smoke=True)
+    return cfg, api.init_params(cfg, jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def served(dense):
+    """One live HTTP server over two engines (same params): ``m`` streams
+    and has a route alias, ``locked`` is served with streaming disabled."""
+    cfg, params = dense
+    eng = InferenceEngine(cfg, params, capacity=2, max_seq=MAX_SEQ,
+                          model_name="m")
+    locked = InferenceEngine(cfg, params, capacity=1, max_seq=MAX_SEQ,
+                             model_name="locked")
+    srv = HydraHTTPServer(
+        MultiModelServer({"m": eng, "locked": locked}),
+        model_options={"m": {"stream": True, "endpoint": "alias-m"},
+                       "locked": {"stream": False}})
+    with srv:
+        yield srv, cfg, params, eng
+
+
+def _prompt(cfg, seed, plen=8):
+    rng = np.random.RandomState(seed)
+    return rng.randint(0, cfg.vocab_size, plen).astype(np.int32)
+
+
+def _post(srv, path, body):
+    host, port = srv.address
+    conn = http.client.HTTPConnection(host, port, timeout=120)
+    try:
+        conn.request("POST", path, json.dumps(body),
+                     {"Content-Type": "application/json"})
+        resp = conn.getresponse()
+        return resp.status, json.loads(resp.read().decode())
+    finally:
+        conn.close()
+
+
+def _stream_lines(srv, path, body, *, close_after=None):
+    """POST an SSE request; returns the raw ``data:`` payload list (or a
+    truncated one when ``close_after`` token chunks, closing the socket)."""
+    host, port = srv.address
+    conn = http.client.HTTPConnection(host, port, timeout=120)
+    payloads, n_tokens = [], 0
+    try:
+        conn.request("POST", path, json.dumps(body),
+                     {"Content-Type": "application/json"})
+        resp = conn.getresponse()
+        assert resp.status == 200
+        assert resp.getheader("Content-Type") == "text/event-stream"
+        while True:
+            line = resp.readline()
+            if not line:
+                break
+            line = line.rstrip(b"\n")
+            if not line or line.startswith(b":"):
+                continue
+            assert line.startswith(b"data: ")      # SSE framing
+            data = line[len(b"data: "):]
+            if data == b"[DONE]":
+                payloads.append("[DONE]")
+                break
+            event = json.loads(data)
+            payloads.append(event)
+            if "token_id" in event["choices"][0]:
+                n_tokens += 1
+                if close_after is not None and n_tokens >= close_after:
+                    return payloads
+    finally:
+        conn.close()
+    return payloads
+
+
+# ---------------------------------------------------------------------------
+# wire surface
+# ---------------------------------------------------------------------------
+
+def test_health_models_and_errors(served):
+    srv, cfg, _, _ = served
+    host, port = srv.address
+    conn = http.client.HTTPConnection(host, port, timeout=30)
+    conn.request("GET", "/v1/models")
+    models = json.loads(conn.getresponse().read().decode())
+    conn.close()
+    assert {m["id"] for m in models["data"]} == {"m", "locked"}
+
+    status, err = _post(srv, "/v1/completions",
+                        {"model": "nope", "prompt": [1, 2], "max_tokens": 2})
+    assert status == 404 and "unknown model" in err["error"]["message"]
+    status, err = _post(srv, "/v1/completions",
+                        {"model": "m", "prompt": [], "max_tokens": 2})
+    assert status == 400
+    status, err = _post(srv, "/v1/completions",      # exceeds max_seq
+                        {"model": "m", "prompt": [1] * 8, "max_tokens": 500})
+    assert status == 400 and "max_seq" in err["error"]["message"]
+    status, err = _post(srv, "/v1/completions",
+                        {"model": "locked", "prompt": [1, 2, 3],
+                         "max_tokens": 2, "stream": True})
+    assert status == 400 and "stream" in err["error"]["message"]
+
+
+def test_sse_stream_token_identical_to_non_streaming_and_offline(served):
+    from test_serving import _reference
+    srv, cfg, params, _ = served
+    prompt = _prompt(cfg, 11)
+    gen = 6
+    body = {"model": "m", "prompt": prompt.tolist(), "max_tokens": gen}
+
+    status, full = _post(srv, "/v1/completions", body)
+    assert status == 200
+    full_ids = full["choices"][0]["token_ids"]
+
+    events = _stream_lines(srv, "/v1/completions", dict(body, stream=True))
+    assert events[-1] == "[DONE]"
+    final = events[-2]
+    chunks = [e for e in events[:-2]]
+    sse_ids = [e["choices"][0]["token_id"] for e in chunks]
+    # framing: every chunk is one token with its printable piece
+    assert all(e["object"] == "text_completion" for e in chunks)
+    assert [e["choices"][0]["text"] for e in chunks] == \
+        [f" {t}" for t in sse_ids]
+    assert final["choices"][0]["finish_reason"] == "length"
+    assert final["usage"]["completion_tokens"] == gen
+    assert final["metrics"]["status"] == "finished"
+
+    offline = _reference(cfg, params, prompt, gen)
+    assert sse_ids == full_ids == offline
+
+    # the route alias resolves to the same model, same tokens
+    status, via_alias = _post(srv, "/v1/completions",
+                              dict(body, model="alias-m"))
+    assert status == 200
+    assert via_alias["choices"][0]["token_ids"] == offline
+
+
+def test_chat_endpoint_stand_in_tokenizer_round_trip(served):
+    srv, cfg, _, _ = served
+    text = "hello"
+    ids = encode_prompt(text, cfg.vocab_size).tolist()
+    status, comp = _post(srv, "/v1/completions",
+                         {"model": "m", "prompt": text, "max_tokens": 4})
+    assert status == 200
+    events = _stream_lines(
+        srv, "/v1/chat/completions",
+        {"model": "m", "messages": [{"role": "user", "content": text}],
+         "max_tokens": 4, "stream": True})
+    chunks = [e for e in events[:-2]]
+    assert all(e["object"] == "chat.completion.chunk" for e in chunks)
+    assert [e["choices"][0]["delta"]["content"] for e in chunks] == \
+        [f" {e['choices'][0]['token_id']}" for e in chunks]
+    # chat(messages=text) and completions(prompt=text) hit the same
+    # byte-level encoding, so greedy decode gives identical tokens
+    assert [e["choices"][0]["token_id"] for e in chunks] == \
+        comp["choices"][0]["token_ids"]
+    assert comp["usage"]["prompt_tokens"] == len(ids)
+
+
+def test_cancel_endpoint_mid_decode(served):
+    srv, cfg, _, eng = served
+    rid = "http-cancel-1"
+    done = []
+
+    import threading
+
+    def consume():
+        done.append(_stream_lines(
+            srv, "/v1/completions",
+            {"model": "m", "prompt": _prompt(cfg, 12).tolist(),
+             "max_tokens": 40, "stream": True, "request_id": rid}))
+    t = threading.Thread(target=consume, daemon=True)
+    t.start()
+    deadline = time.time() + 30
+    while time.time() < deadline:       # wait until it is really decoding
+        if any(m["request_id"] == rid
+               for m in (r.metrics() for r in eng.active_requests())):
+            break
+        time.sleep(0.01)
+    status, ack = _post(srv, "/v1/cancel", {"request_id": rid})
+    assert status == 200 and ack["cancelled"]
+    t.join(timeout=30)
+    assert done, "stream never terminated after cancel"
+    events = done[0]
+    assert events[-1] == "[DONE]"
+    assert events[-2]["choices"][0]["finish_reason"] == "cancelled"
+    n_streamed = sum(1 for e in events[:-2]
+                     if "token_id" in e["choices"][0])
+    assert n_streamed < 40              # decode really stopped early
+    status, ack = _post(srv, "/v1/cancel", {"request_id": rid})
+    assert status == 404                # already retired: nothing to cancel
+
+
+def test_disconnect_mid_stream_frees_lane_within_a_tick(served):
+    srv, cfg, _, eng = served
+    rid = "http-disc-1"
+    free_before = eng.n_free_lanes
+    events = _stream_lines(
+        srv, "/v1/completions",
+        {"model": "m", "prompt": _prompt(cfg, 13).tolist(),
+         "max_tokens": 40, "stream": True, "request_id": rid},
+        close_after=2)                  # hang up after two tokens
+    assert len(events) >= 2
+    deadline = time.time() + 10
+    freed = False
+    while time.time() < deadline:
+        if eng.n_free_lanes == free_before and not any(
+                r.request_id == rid for r in eng.active_requests()):
+            freed = True
+            break
+        time.sleep(0.01)
+    assert freed, "disconnected request still holds its lane"
+    # the disconnect rode the SAME cancel path: status survived retirement
+    rec = [m for m in eng.recent_metrics() if m["request_id"] == rid]
+    assert rec and rec[0]["status"] == "cancelled"
+    assert eng.budget.reserved_bytes == 0
+
+
+# ---------------------------------------------------------------------------
+# metrics under a frozen clock match external measurement
+# ---------------------------------------------------------------------------
+
+def test_request_metrics_match_external_measurement_frozen_clock(dense):
+    cfg, params = dense
+    t = [100.0]
+    eng = InferenceEngine(cfg, params, capacity=2, max_seq=MAX_SEQ,
+                          clock=lambda: t[0])
+    req = eng.submit(_prompt(cfg, 14), 3)       # arrival stamped at t=100
+    t[0] = 102.0
+    eng.step()              # admit + prefill + first token, all at t=102
+    t[0] = 105.0
+    eng.run()               # remaining decode + retirement at t=105
+    m = req.metrics()
+    # externally-known truth: queued 100->102, first token at 102, done 105
+    assert m["queue_wait_s"] == pytest.approx(2.0)
+    assert m["ttft_s"] == pytest.approx(2.0)
+    assert m["e2e_s"] == pytest.approx(5.0)
+    assert m["decode_s"] == pytest.approx(3.0)
+    assert req.arrival_time == 100.0 and req.finish_time == 105.0
+
+
+def test_token_stream_iter_and_close_semantics():
+    s = TokenStream("r")
+    s.put(1)
+    s.put(2)
+    assert s.get(timeout=0.01) == 1
+    s.close(Status.FINISHED)
+    s.close(Status.CANCELLED)           # idempotent: first close wins
+    assert list(s) == [2]
+    assert s.status is Status.FINISHED and s.closed
+    with pytest.raises(StopIteration):
+        s.get(timeout=0.01)
