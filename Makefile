@@ -16,6 +16,11 @@
 #                      tokens byte-identical to offline decode, mid-decode
 #                      /v1/cancel frees lane+KV within one tick, open-loop
 #                      Poisson run reports TTFT/TPOT/goodput percentiles)
+#   make slo-smoke   - SLO scheduler A/B over live HTTP (self-asserting:
+#                      same seeded trace under fifo and slo policies; slo
+#                      preempts+resumes a paged request, strictly higher
+#                      deadline goodput, completions token-identical to
+#                      offline sequential decode)
 #   make docs-check  - docs lint: relative links + [[refs]] resolve and
 #                      fenced python blocks compile (docs/*.md, README.md)
 #   make examples-smoke - run all four examples/*.py on their tiny configs
@@ -25,7 +30,7 @@ PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export PYTHONPATH
 
 .PHONY: test test-fast bench-smoke plan-smoke paged-smoke backend-smoke \
-    spec-smoke http-smoke docs-check examples-smoke
+    spec-smoke http-smoke slo-smoke docs-check examples-smoke
 
 test:
 	$(PY) -m pytest -x -q
@@ -54,6 +59,9 @@ spec-smoke:
 
 http-smoke:
 	$(PY) -m benchmarks.bench_load --smoke
+
+slo-smoke:
+	$(PY) -m benchmarks.bench_load --slo-smoke
 
 docs-check:
 	$(PY) scripts/docs_check.py

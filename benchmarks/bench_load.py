@@ -29,6 +29,17 @@ decoded offline, that a mid-decode ``/v1/cancel`` frees the lane and KV
 reservation within one tick (engine back to baseline), and that an
 open-loop Poisson run completes with sane percentiles — then prints one
 JSON line for the workflow to re-assert.
+
+``--slo-smoke`` (``make slo-smoke``) is the scheduling A/B: the same
+seeded trace — two long low-priority decodes saturating a 2-lane paged
+engine, then a wave of short high-priority requests with deadlines — is
+replayed against two self-hosted servers that differ ONLY in admission
+policy (``fifo`` vs ``slo``).  The deadline is calibrated between the
+two policies' expected latencies (geometric mean), so the run asserts
+*ordering*, not absolute speed: the SLO policy must preempt the long
+requests (>= 1 preempt AND resume), meet strictly more deadlines than
+FIFO, and every completion — including the preempted-and-resumed longs —
+must stay token-identical to offline sequential decode.
 """
 
 from __future__ import annotations
@@ -172,6 +183,12 @@ def run_load(client: Client, model: str, args,
     errors: list[str] = []
     start = time.perf_counter() + 0.05
 
+    slo_fields: dict[str, Any] = {}
+    if getattr(args, "deadline_ms", None):
+        slo_fields["deadline_ms"] = args.deadline_ms
+    if getattr(args, "priority", None):
+        slo_fields["priority"] = args.priority
+
     def fire(i: int) -> None:
         delay = start + schedule[i] - time.perf_counter()
         if delay > 0:
@@ -181,7 +198,7 @@ def run_load(client: Client, model: str, args,
                 "/v1/completions",
                 {"model": model, "prompt": prompts[i],
                  "max_tokens": args.gen, "stream": True,
-                 "request_id": f"load-{args.seed}-{i}"})
+                 "request_id": f"load-{args.seed}-{i}", **slo_fields})
         except Exception as e:           # one failed request must not
             errors.append(f"{i}: {e}")   # strand the whole run
     threads = [threading.Thread(target=fire, args=(i,), daemon=True)
@@ -200,6 +217,14 @@ def run_load(client: Client, model: str, args,
               if r.get("ttft_s", 1e9) <= args.slo_ttft
               and r.get("tpot_s", 0.0) <= args.slo_tpot]
     n_tokens = sum(len(r["tokens"]) for r in done)
+    # declared-deadline attainment (client-side): requests that finished
+    # within their own deadline_ms budget — the per-request SLO the
+    # scheduler optimizes, vs. the blanket --slo-ttft/--slo-tpot goodput
+    deadline_attained = None
+    if slo_fields.get("deadline_ms"):
+        deadline_attained = sum(
+            1 for r in done
+            if r.get("e2e_s", 1e18) * 1000.0 <= slo_fields["deadline_ms"])
     return {
         "mix": args.mix, "n": args.n, "rate_rps": args.rate,
         "seed": args.seed, "completed": len(done), "errors": errors,
@@ -212,6 +237,8 @@ def run_load(client: Client, model: str, args,
         "slo": {"ttft_s": args.slo_ttft, "tpot_s": args.slo_tpot},
         "slo_attained": len(slo_ok),
         "goodput_rps": round(len(slo_ok) / wall, 3) if wall else None,
+        "deadline_ms": slo_fields.get("deadline_ms"),
+        "deadline_attained": deadline_attained,
         "models_served": [m["id"] for m in models["data"]],
     }
 
@@ -313,6 +340,174 @@ def smoke(args, client: Client, ref_engine, model: str) -> dict:
     return out
 
 
+# ---------------------------------------------------------------------------
+# --slo-smoke: same seeded trace under FIFO vs SLO admission (A/B)
+# ---------------------------------------------------------------------------
+
+def slo_smoke(args) -> dict:
+    """Replay one seeded trace against two self-hosted servers differing
+    only in admission policy; assert the SLO policy preempts, resumes,
+    meets strictly more deadlines than FIFO, and stays token-identical
+    to offline sequential decode (see module docstring)."""
+    import math
+
+    import jax
+
+    from repro.configs import get_config
+    from repro.models import api as mapi
+    from repro.serving import (HydraHTTPServer, InferenceEngine,
+                               MultiModelServer, blocks_for_rows)
+
+    cfg = get_config(args.arch, smoke=True)
+    params = mapi.init_params(cfg, jax.random.PRNGKey(args.seed))
+    n_short, gen_short = 4, args.gen
+    gen_long = 20 * gen_short       # the lane-hogging decode worth preempting
+    plen = args.prompt_len
+    max_seq = plen + gen_long + 8
+    # preemption frees the LANE, not the victim's byte reservation (its KV
+    # blocks stay charged for resume) — so the pool must hold both longs'
+    # worst case AND the shorts', or can_admit_bytes correctly vetoes the
+    # eviction as byte-blocked
+    n_blocks = (2 * blocks_for_rows(plen + gen_long, 8)
+                + n_short * blocks_for_rows(plen + gen_short, 8) + 2)
+    rng = np.random.default_rng(args.seed)
+    long_prompts = [rng.integers(0, cfg.vocab_size, plen).tolist()
+                    for _ in range(2)]
+    short_prompts = [rng.integers(0, cfg.vocab_size, plen).tolist()
+                     for _ in range(n_short)]
+    warm_prompt = rng.integers(0, cfg.vocab_size, plen).tolist()
+
+    def make_engine(policy: str) -> InferenceEngine:
+        return InferenceEngine(cfg, params, capacity=2, max_seq=max_seq,
+                               backend="paged", block_size=8,
+                               n_blocks=n_blocks,
+                               model_name=args.arch, policy=policy)
+
+    # offline token-identity oracle: each prompt decoded alone, in order
+    expected: dict[str, list[int]] = {}
+    ref = make_engine("fifo")
+    for i, p in enumerate(long_prompts):
+        r = ref.submit(np.asarray(p, np.int32), gen_long)
+        ref.run()
+        expected[f"long{i}"] = r.generated
+    for i, p in enumerate(short_prompts):
+        r = ref.submit(np.asarray(p, np.int32), gen_short)
+        ref.run()
+        expected[f"short{i}"] = r.generated
+
+    def run_policy(policy: str, deadline_ms: Optional[float]) -> dict:
+        eng = make_engine(policy)
+        srv = HydraHTTPServer(MultiModelServer({args.arch: eng}),
+                              port=args.port)
+        srv.start()
+        client = Client(srv.url, timeout=args.timeout)
+        try:
+            # warm every shape the trace hits: single + paired prefill
+            # groups and the pooled decode step — compile must not land
+            # inside a deadline window (jax caches survive per-process,
+            # but the FIRST server pays them)
+            warm: list[dict] = [{}, {}]
+
+            def probe(slot):
+                warm[slot] = client.stream(
+                    "/v1/completions",
+                    {"model": args.arch, "prompt": warm_prompt,
+                     "max_tokens": gen_short, "stream": True})
+            tw = [threading.Thread(target=probe, args=(i,), daemon=True)
+                  for i in range(2)]
+            for t in tw:
+                t.start()
+            for t in tw:
+                t.join(timeout=args.timeout)
+            if deadline_ms is None:
+                # calibrate on the warm probe: the deadline sits at the
+                # log-midpoint between the SLO policy's expected short
+                # latency (a few idle short decodes) and FIFO's (wait out
+                # most of a long decode) — asserting ordering, not speed
+                ttft = warm[0].get("ttft_s", 0.05)
+                tpot = max(warm[0].get("tpot_s", 0.01), 1e-4)
+                est_short = max(warm[0].get("e2e_s", 0.1), 1e-3)
+                est_fifo_wait = 0.85 * (ttft + (gen_long - 1) * tpot)
+                deadline_ms = 1000.0 * math.sqrt(
+                    3.0 * est_short * max(est_fifo_wait, 3.0 * est_short))
+
+            results: dict[str, dict] = {}
+            errors: list[str] = []
+            started = [threading.Event() for _ in range(2)]
+
+            def fire(rid, prompt, gen, extra, evt=None):
+                def on_chunk(n, _e):
+                    if evt is not None and n >= 3:
+                        evt.set()
+                try:
+                    results[rid] = client.stream(
+                        "/v1/completions",
+                        {"model": args.arch, "prompt": prompt,
+                         "max_tokens": gen, "stream": True,
+                         "request_id": f"{policy}-{rid}", **extra},
+                        on_chunk=on_chunk)
+                except Exception as e:
+                    errors.append(f"{rid}: {e}")
+            threads = []
+            for i in range(2):
+                t = threading.Thread(
+                    target=fire,
+                    args=(f"long{i}", long_prompts[i], gen_long,
+                          {"priority": "low"}, started[i]), daemon=True)
+                t.start()
+                threads.append(t)
+            for evt in started:     # victims must be RUNNING with >=
+                if not evt.wait(timeout=60):    # preempt_min_tokens decoded
+                    errors.append("long request never started streaming")
+            for i in range(n_short):
+                t = threading.Thread(
+                    target=fire,
+                    args=(f"short{i}", short_prompts[i], gen_short,
+                          {"priority": "high", "deadline_ms": deadline_ms}),
+                    daemon=True)
+                t.start()
+                threads.append(t)
+            for t in threads:
+                t.join(timeout=args.timeout)
+
+            metrics = client.json("GET", "/v1/metrics")[1]
+            ring = {m["request_id"]: m
+                    for m in metrics["recent_requests"][args.arch]}
+            attained = sum(
+                1 for i in range(n_short)
+                if ring.get(f"{policy}-short{i}", {}).get("deadline_met"))
+            token_ok = all(
+                results.get(rid, {}).get("tokens") == toks
+                for rid, toks in expected.items())
+            return {"policy": policy,
+                    "deadline_ms": round(deadline_ms, 1),
+                    "deadline_attained": attained,
+                    "n_short": n_short,
+                    "n_preempted": metrics["n_preempted"],
+                    "n_resumed": metrics["n_resumed"],
+                    "n_shed": metrics["n_shed"],
+                    "long_preemptions": [
+                        ring.get(f"{policy}-long{i}", {}).get("preemptions")
+                        for i in range(2)],
+                    "tokens_match_offline": token_ok,
+                    "errors": errors}
+        finally:
+            srv.stop()
+
+    fifo = run_policy("fifo", None)
+    slo = run_policy("slo", fifo["deadline_ms"])   # SAME trace, same budget
+    ok = bool(not fifo["errors"] and not slo["errors"]
+              and fifo["tokens_match_offline"]
+              and slo["tokens_match_offline"]
+              and fifo["n_preempted"] == 0
+              and slo["n_preempted"] >= 1
+              and slo["n_resumed"] >= 1
+              and slo["deadline_attained"] > fifo["deadline_attained"])
+    return {"arch": args.arch, "seed": args.seed,
+            "gen_long": gen_long, "gen_short": gen_short,
+            "fifo": fifo, "slo": slo, "ok": ok}
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--url", default=None,
@@ -322,6 +517,16 @@ def main():
     ap.add_argument("--smoke", action="store_true",
                     help="self-asserting CI mode (token identity + cancel "
                     "+ Poisson percentiles); prints one JSON line")
+    ap.add_argument("--slo-smoke", action="store_true",
+                    help="A/B the admission policies: one seeded trace "
+                    "under fifo and slo; asserts strictly higher deadline "
+                    "attainment, >=1 preempt+resume, token identity")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="attach this end-to-end deadline to every load "
+                    "request (reported as deadline_attained)")
+    ap.add_argument("--priority", default=None,
+                    choices=["high", "normal", "low"],
+                    help="attach this priority tier to every load request")
     ap.add_argument("--backend", default="slot",
                     choices=["slot", "paged", "spec"])
     ap.add_argument("--mix", default="poisson",
@@ -346,6 +551,14 @@ def main():
                     help="per-token SLO seconds")
     ap.add_argument("--timeout", type=float, default=300.0)
     args = ap.parse_args()
+
+    if args.slo_smoke:
+        if args.url is not None:
+            raise SystemExit("--slo-smoke self-hosts both policy servers "
+                             "(token identity needs in-process params); "
+                             "drop --url")
+        print(json.dumps(slo_smoke(args)))
+        return
 
     http_srv = ref_engine = None
     if args.url is None:

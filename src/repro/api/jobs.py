@@ -124,11 +124,56 @@ class ServeJob(JobSpec):
     # alias clients may pass as "model" (e.g. endpoint="prod-chat")
     stream: bool = True
     endpoint: Optional[str] = None
+    # SLO scheduling (serving/slo.py): admission policy plus per-MODEL
+    # defaults any request may override per-call.  policy="slo" degrades
+    # to FIFO order when no request carries a deadline, so it is the safe
+    # default; policy="fifo" pins the legacy arrival-order scan (no
+    # preemption, no shedding) for A/B baselines.
+    policy: str = "slo"
+    deadline_ms: Optional[float] = None         # default e2e deadline budget
+    priority: str = "normal"                    # default tier: high|normal|low
+    max_ttft_ms: Optional[float] = None         # default first-token budget
+    slo_aging_s: float = 30.0                   # starvation aging interval
+    soft_overload_s: float = float("inf")       # queued-seconds: degrade spec
+    hard_overload_s: float = float("inf")       # queued-seconds: shed/reject
     kind: str = field(default="serve", init=False)
 
     def http_options(self) -> dict:
         """The per-model options dict the HTTP front-end consumes."""
         return {"stream": bool(self.stream), "endpoint": self.endpoint}
+
+    def resolved_policy(self):
+        """Validated scheduling policy instance for this model's engine."""
+        from repro.serving.slo import POLICIES, make_policy
+        if self.policy not in POLICIES:
+            raise ValueError(
+                f"policy={self.policy!r}: known admission policies are "
+                f"{sorted(POLICIES)}")
+        if self.policy != "slo":
+            return make_policy(self.policy)
+        if self.slo_aging_s <= 0:
+            raise ValueError(
+                f"slo_aging_s={self.slo_aging_s}: the starvation-aging "
+                "interval is the seconds of waiting that promote a request "
+                "one priority tier; it must be positive")
+        if self.soft_overload_s > self.hard_overload_s:
+            raise ValueError(
+                f"soft_overload_s={self.soft_overload_s} > hard_overload_s="
+                f"{self.hard_overload_s}: shedding (hard) must not engage "
+                "before degradation (soft); order the thresholds")
+        return make_policy("slo", aging_s=self.slo_aging_s,
+                           soft_overload_s=self.soft_overload_s,
+                           hard_overload_s=self.hard_overload_s)
+
+    def default_slo(self):
+        """Validated per-model SLO defaults, or None when all unset —
+        requests merge their own fields over these (request wins)."""
+        from repro.serving.slo import SLO
+        if (self.deadline_ms is None and self.max_ttft_ms is None
+                and self.priority == "normal"):
+            return None
+        return SLO(deadline_ms=self.deadline_ms, priority=self.priority,
+                   max_ttft_ms=self.max_ttft_ms).validate()
 
     def requested_backend(self) -> str:
         """The backend this spec asks for, before capability fallback."""

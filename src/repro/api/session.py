@@ -127,6 +127,8 @@ class Session:
         if isinstance(job, ServeJob):       # validate before registering
             job.resolved_buckets()          # fail fast on a bad bucket spec
             job.requested_backend()         # ... and on a bad backend name
+            job.resolved_policy()           # ... and on a bad policy/knobs
+            job.default_slo()               # ... and on nonsensical SLOs
             name = job.name or job.cfg.name
             if name in self._serve_names:
                 raise ValueError(
@@ -172,6 +174,10 @@ class Session:
                        n_completed=eng.retired_total,
                        n_active=len(eng.active_requests()),
                        n_queued=len(eng.queued_requests()),
+                       policy=eng.policy.name,
+                       n_preempted=eng.n_preempted,
+                       n_resumed=eng.n_resumed,
+                       n_shed=eng.n_shed,
                        recent_requests=eng.recent_metrics())
         if job_id in self._cold:
             out.update(cold=True, promoted="engine" in self._cold[job_id])
@@ -293,7 +299,12 @@ class Session:
                 "backend": backend,
                 "requested_backend": job.requested_backend(),
                 "capabilities": spec.capabilities(),
-                "capability_fallbacks": fallbacks}
+                "capability_fallbacks": fallbacks,
+                "policy": job.resolved_policy().name,
+                "slo_defaults": (None if job.default_slo() is None else {
+                    "deadline_ms": job.deadline_ms,
+                    "priority": job.priority,
+                    "max_ttft_ms": job.max_ttft_ms})}
         meta["paged"] = backend == "paged"
         if backend == "paged":
             from repro.serving import blocks_for_rows
@@ -603,7 +614,9 @@ class Session:
             job.cfg, params, capacity=job.capacity, max_seq=job.max_seq,
             window=job.window, model_name=job.name or job.cfg.name,
             backend=job.requested_backend(),
-            bucket_sizes=job.resolved_buckets(), **kw)
+            bucket_sizes=job.resolved_buckets(),
+            policy=job.resolved_policy(), default_slo=job.default_slo(),
+            **kw)
 
     def _promote_cold(self, jid: str) -> None:
         """First request for a cold model: promote its shards out of the

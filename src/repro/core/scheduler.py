@@ -91,6 +91,12 @@ SCHEDULERS: dict[str, Callable[..., SchedulerFn]] = {
     "srtf": lambda **_: sharded_srtf,
     "fifo": lambda **_: fifo,
     "random": lambda seed=0, **_: make_random_scheduler(seed),
+    # "slo": deadline-aware serving routing.  The deadline logic needs
+    # live engine state (per-request slack — repro.serving.slo), which
+    # this ModelProgress-only signature cannot see; MultiModelServer
+    # special-cases the name and uses this LRTF fn as its no-deadline
+    # fallback, so training/config surfaces accept "slo" uniformly.
+    "slo": lambda **_: sharded_lrtf,
 }
 
 

@@ -64,7 +64,11 @@ def build_serve_job(arch: str, args) -> ServeJob:
                     draft_k=getattr(args, "draft_k", 4),
                     spec_inner=getattr(args, "spec_inner", None),
                     stream=not getattr(args, "no_stream", False),
-                    endpoint=getattr(args, "endpoint", None))
+                    endpoint=getattr(args, "endpoint", None),
+                    policy=getattr(args, "policy", "slo"),
+                    deadline_ms=getattr(args, "deadline_ms", None),
+                    priority=getattr(args, "priority", None) or "normal",
+                    max_ttft_ms=getattr(args, "max_ttft_ms", None))
 
 
 def synth_prompts(cfg, n: int, prompt_len: int, seed: int):
@@ -175,7 +179,21 @@ def main():
                     help="disable copy-on-write prompt-prefix page sharing "
                     "(paged backend)")
     ap.add_argument("--scheduler", default="lrtf",
-                    choices=["lrtf", "srtf", "fifo", "random"])
+                    choices=["lrtf", "srtf", "fifo", "random", "slo"],
+                    help="multi-model routing policy; 'slo' adds a "
+                    "deadline-urgency pre-pass over LRTF")
+    ap.add_argument("--policy", default="slo", choices=["slo", "fifo"],
+                    help="per-engine admission policy (ServeJob.policy): "
+                    "'slo' = EDF with priority tiers + aging + paged "
+                    "preemption; 'fifo' = legacy arrival order")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="default end-to-end deadline budget for every "
+                    "request to this model (requests may override)")
+    ap.add_argument("--priority", default=None,
+                    choices=["high", "normal", "low"],
+                    help="default priority tier for requests to this model")
+    ap.add_argument("--max-ttft-ms", type=float, default=None,
+                    help="default time-to-first-token budget (ms)")
     ap.add_argument("--http", action="store_true",
                     help="serve over HTTP (OpenAI-compatible /v1 endpoints "
                     "with SSE streaming) instead of a synthetic batch")

@@ -89,6 +89,15 @@ class FamilySpec:
             return self.kv_block_cost(cfg, block_size)
         return _default_kv_block_bytes(cfg, block_size)
 
+    @property
+    def preemptible(self) -> bool:
+        """A RUNNING request can be descheduled and later resumed with
+        prefill skipped.  Derived, not declared: preemption rides on the
+        paged backend's refcounted block tables (snapshot the table,
+        keep the blocks), so exactly the ``paging`` families qualify —
+        a family cannot promise preemption without paged KV."""
+        return self.paging
+
     def capabilities(self) -> dict:
         """JSON-ready capability record (plan meta / poll / summaries)."""
         return {"batched_prefill": self.batched_prefill,
@@ -96,9 +105,16 @@ class FamilySpec:
                 "paging": self.paging,
                 "pure_kv_state": self.pure_kv_state,
                 "servable": self.servable,
-                "spec_draftable": self.spec_draftable}
+                "spec_draftable": self.spec_draftable,
+                "preemptible": self.preemptible}
 
     def why_not(self, capability: str) -> str:
+        if capability == "preemptible" and "preemptible" not in self.notes:
+            # derived from paging: explain through the underlying flag
+            return ("preemption snapshots paged block tables; " +
+                    ("the slot/spec backends keep contiguous or lockstep "
+                     "decode state — serve with backend='paged'"
+                     if self.paging else self.why_not("paging")))
         return self.notes.get(capability, "not declared by the family spec")
 
 

@@ -11,6 +11,8 @@ from repro.serving.queue import KVBudget, PagedKVBudget, RequestQueue
 from repro.serving.request import Request, Status
 from repro.serving.server import (HydraHTTPServer, ServingFrontend,
                                   encode_prompt)
+from repro.serving.slo import (PRIORITIES, SLO, FIFOPolicy, OverloadedError,
+                               SLOPolicy, make_policy)
 from repro.serving.slots import SlotPool, stack_trees, write_slots
 from repro.serving.stream import TokenStream
 
@@ -20,4 +22,5 @@ __all__ = ["InferenceEngine", "MultiModelServer", "KVBudget", "PagedKVBudget",
            "write_slots", "pow2_buckets", "DecodeBackend", "SlotBackend",
            "PagedBackend", "SpecDecodeBackend", "BACKENDS", "make_backend",
            "CapabilityFallbackWarning", "TokenStream", "ServingFrontend",
-           "HydraHTTPServer", "encode_prompt"]
+           "HydraHTTPServer", "encode_prompt", "SLO", "SLOPolicy",
+           "FIFOPolicy", "OverloadedError", "PRIORITIES", "make_policy"]

@@ -16,6 +16,21 @@ one) touches no engine call sites.  The protocol:
     advance(lane)                   -> post-token bookkeeping
     summary()                       -> backend-specific metric extras
 
+Backends that can deschedule a RUNNING request additionally declare
+``preemptible = True`` and implement the preemption trio the SLO
+scheduler (``serving/slo.py``) drives:
+
+    preempt(req)                    -> snapshot lane state, free the lane
+    resume(req) -> bool             -> re-attach the snapshot to a lane
+    discard_preempted(req)          -> drop the snapshot (cancel/shed)
+
+Only the paged backend qualifies: its per-lane state is a block table
+over refcounted pages, so a snapshot is O(blocks) of integers and the
+KV bytes (still reserved) never move.  The slot pool's KV is a
+contiguous per-lane buffer and the spec backend advances a draft model
+in lockstep — both declare ``preemptible = False`` with a
+``preempt_reason`` the capability machinery surfaces.
+
 Three implementations:
 
 * ``SlotBackend`` — every request owns a ``max_seq``-sized slot of a
@@ -222,6 +237,10 @@ class SlotBackend:
     """Fixed slot pool: constant ``slot_bytes`` admission, every family."""
 
     name = "slot"
+    preemptible = False
+    preempt_reason = ("slot KV is one contiguous per-lane buffer — "
+                      "descheduling would copy the whole cache out or "
+                      "replay the prompt; use backend='paged'")
 
     def __init__(self, cfg, capacity: int, max_seq: int, *,
                  window: Optional[int] = None,
@@ -308,6 +327,8 @@ class PagedBackend:
     """Refcounted block pool; admission charges only unshared blocks."""
 
     name = "paged"
+    preemptible = True
+    preempt_reason = None
 
     def __init__(self, cfg, capacity: int, max_seq: int, *,
                  window: Optional[int] = None, block_size: int = 16,
@@ -370,6 +391,11 @@ class PagedBackend:
         self._block_tokens: dict[int, np.ndarray] = {}
         self._rev: dict[int, tuple] = {}               # bid -> (key, parent)
         self._orphans: set[int] = set()  # charged blocks whose owner retired
+        # preemption parking lot: request_id -> (blocks, owned, length).
+        # A preempted request's blocks stay refcounted and its byte
+        # reservation stays charged — descheduling frees the LANE only, so
+        # resume is a table re-attach with prefill skipped.
+        self._preempted: dict[str, tuple[list[int], set[int], int]] = {}
         self.shared_block_hits = 0       # blocks aliased instead of allocated
         self.cow_copies = 0              # copy-on-write block copies
 
@@ -542,10 +568,10 @@ class PagedBackend:
                 self.budget.release(1)
                 self._committed_blocks -= 1
 
-    def release(self, req: Request) -> None:
-        lane = req.slot
-        blocks = self._lane_blocks.pop(lane)
-        owned = self._lane_owned.pop(lane)
+    def _release_blocks(self, blocks: list[int], owned: set[int],
+                        reserved_blocks: int) -> None:
+        """Settle a retiring block set's refcounts + byte charge (shared
+        by lane release and preempted-snapshot discard)."""
         orphaned = 0
         for bid in blocks:
             if bid in owned:
@@ -559,11 +585,69 @@ class PagedBackend:
                     orphaned += 1
             else:
                 self._drop_alias(bid)
-        self.budget.release(req.reserved_blocks - orphaned)
-        self._committed_blocks -= req.reserved_blocks - orphaned
+        self.budget.release(reserved_blocks - orphaned)
+        self._committed_blocks -= reserved_blocks - orphaned
+
+    def release(self, req: Request) -> None:
+        lane = req.slot
+        self._release_blocks(self._lane_blocks.pop(lane),
+                             self._lane_owned.pop(lane),
+                             req.reserved_blocks)
         self._tables[lane, :] = BlockPool.GARBAGE
         self._lengths[lane] = 0
         self._lane_free.append(lane)
+
+    # -- preemption ----------------------------------------------------------
+    def preempt(self, req: Request) -> None:
+        """Deschedule a RUNNING request: park (block table, committed
+        length) under its request_id and free the lane.  Refcounts and
+        the byte reservation are untouched — the request still *holds*
+        its KV, it just isn't decoding — so resume needs only a lane."""
+        lane = req.slot
+        self._preempted[req.request_id] = (
+            self._lane_blocks.pop(lane), self._lane_owned.pop(lane),
+            int(self._lengths[lane]))
+        self._tables[lane, :] = BlockPool.GARBAGE
+        self._lengths[lane] = 0
+        self._lane_free.append(lane)
+
+    def resume(self, req: Request) -> bool:
+        """Re-attach a preempted request's snapshot to a free lane.  The
+        KV rows never moved, so the caller skips prefill and resumes
+        decode from the request's last generated token."""
+        if not self._lane_free:
+            return False
+        blocks, owned, length = self._preempted.pop(req.request_id)
+        lane = self._lane_free.pop()
+        self._lane_blocks[lane] = blocks
+        self._lane_owned[lane] = owned
+        self._tables[lane, :] = BlockPool.GARBAGE
+        self._tables[lane, :len(blocks)] = blocks
+        self._lengths[lane] = length
+        req.slot = lane
+        return True
+
+    def discard_preempted(self, req: Request) -> None:
+        """Drop a parked snapshot without resuming (cancel / shed while
+        preempted): refcounts and bytes settle exactly like a release.
+        No-op for requests that never held a snapshot — the terminal
+        sweep calls this for every dead queue entry."""
+        parked = self._preempted.pop(req.request_id, None)
+        if parked is None:
+            return
+        blocks, owned, _ = parked
+        self._release_blocks(blocks, owned, req.reserved_blocks)
+
+    def can_admit_bytes(self, req: Request, prefill_rows: int) -> bool:
+        """Byte-side admissibility if a lane WERE free — the preemption
+        guard: evicting a victim only helps when the lane is the scarce
+        resource, not blocks (read-only; conservative on aliasing)."""
+        if req.request_id in self._preempted:
+            return True      # bytes still charged from first admission
+        aliased, _ = self._match_prefix(req.prompt)
+        need = self._worst_blocks(req, prefill_rows) - len(aliased)
+        return (self._committed_blocks + need <= self.pool.n_allocatable
+                and self.budget.can_reserve(need))
 
     # -- prefill -------------------------------------------------------------
     def fresh_states(self, n: int, prefill_rows: int):
@@ -667,6 +751,7 @@ class PagedBackend:
             "prefix_share": self.prefix_share,
             "shared_block_hits": self.shared_block_hits,
             "cow_copies": self.cow_copies,
+            "preempted_held": len(self._preempted),
         }
 
 
@@ -706,9 +791,24 @@ class SpecDecodeBackend:
     Lanes not in the round still ride through the batched draft/verify
     programs (fixed shapes — no retracing) with their writes parked in
     the garbage block / rewound, outputs discarded.
+
+    **Degraded mode** (``set_degraded(True)`` — the SLO scheduler's soft
+    overload shed, docs/serving.md): the draft model stops running.
+    Rounds substitute trivial proposals (the last token repeated), so
+    the draft chain, draft prefill, and draft rollback are all skipped —
+    the shed is pure compute, no memory moves.  Correctness is
+    untouched: acceptance only ever emits the target's own argmax
+    tokens, so a degraded round yields >= 1 exact token per verify (the
+    accept rate just collapses toward plain decode).  Un-degrading
+    re-enables proposals immediately; lanes admitted while degraded have
+    stale draft state, which costs acceptance, never correctness.
     """
 
     name = "spec"
+    preemptible = False
+    preempt_reason = ("the draft model's decode state advances in "
+                      "lockstep with the target — snapshotting both "
+                      "mid-round is not supported; use backend='paged'")
 
     def __init__(self, cfg, capacity: int, max_seq: int, *,
                  draft_cfg=None, draft_params=None, draft_k: int = 4,
@@ -778,12 +878,14 @@ class SpecDecodeBackend:
             self._verify = _compiled_paged_verify(cfg, window,
                                                   self.inner.paged_impl)
         self._pending: dict[int, deque] = {}    # lane -> emitted tokens
+        self.degraded = False       # soft-overload shed: draft model off
         # round stats (summary / bench --spec)
         self.spec_rounds = 0        # batched verify forwards
         self.target_steps = 0       # per-lane verify participations
         self.draft_steps = 0        # per-lane draft tokens proposed
         self.spec_tokens = 0        # tokens emitted by spec rounds
         self.drafts_accepted = 0    # proposed drafts that matched target
+        self.degraded_rounds = 0    # rounds run with the draft shed
 
     # -- introspection delegates (engine compat properties read these) -------
     @property
@@ -853,8 +955,17 @@ class SpecDecodeBackend:
     def fresh_states(self, n: int, prefill_rows: int):
         return self.inner.fresh_states(n, prefill_rows)
 
+    def set_degraded(self, flag: bool) -> None:
+        """Shed (or restore) the draft model — the SLO policy's soft-
+        overload lever.  Takes effect at the next round."""
+        self.degraded = bool(flag)
+
     def write_prefill(self, group: Sequence[Request], states) -> None:
         self.inner.write_prefill(group, states)
+        if self.degraded:
+            return      # draft shed: skip its prefill entirely (compute
+            # only — lanes admitted now draft garbage if un-degraded
+            # later, costing acceptance, never correctness)
         # the draft model prefills the same prompts into its own pool at
         # exact lengths (one vmapped call per same-length subgroup); its
         # prefill logits are unused — the first token is the target's
@@ -887,11 +998,17 @@ class SpecDecodeBackend:
         t_last = tokens[:, 0, 0].astype(np.int32)           # (cap,)
         # 1. draft k greedy tokens per lane — ONE fused scan dispatch and
         #    one device sync (full lane width, fixed shapes;
-        #    non-participants are rolled back below)
-        drafts, self._draft_state = self._draft_chain(
-            self.draft_params, self._draft_state,
-            jnp.asarray(t_last[:, None, None]))
-        dr = np.asarray(drafts)[:, :, 0, 0].T.copy()        # (cap, k)
+        #    non-participants are rolled back below).  Degraded (soft
+        #    overload): the draft model is shed — propose the last token
+        #    repeated instead; the verify path below still emits >= 1
+        #    exact target token per round, so outputs stay identical.
+        if self.degraded:
+            dr = np.repeat(t_last[:, None], k, axis=1)      # (cap, k)
+        else:
+            drafts, self._draft_state = self._draft_chain(
+                self.draft_params, self._draft_state,
+                jnp.asarray(t_last[:, None, None]))
+            dr = np.asarray(drafts)[:, :, 0, 0].T.copy()    # (cap, k)
         # 2. verify all k positions in ONE batched target forward: feed
         #    [t_last, d_1 .. d_{k-1}]; position i's argmax is the target's
         #    own next token after t_last, d_1 .. d_i
@@ -922,9 +1039,12 @@ class SpecDecodeBackend:
         for lane in todo:
             self._pending[lane].extend(
                 int(t) for t in g[lane, :accept[lane]])
-        # 4. roll both models back past the accept point
+        # 4. roll both models back past the accept point (degraded: the
+        #    draft never stepped, so only the target rewinds)
         delta = jnp.asarray((k - accept).astype(np.int32))
-        self._draft_state = self._draft_rollback(self._draft_state, delta)
+        if not self.degraded:
+            self._draft_state = self._draft_rollback(self._draft_state,
+                                                     delta)
         if isinstance(self.inner, PagedBackend):
             for lane in todo:
                 self.inner._lengths[lane] += int(accept[lane])
@@ -932,12 +1052,16 @@ class SpecDecodeBackend:
         else:
             self.inner.pool.state = self._rollback(self.inner.pool.state,
                                                    delta)
-        # 5. stats
+        # 5. stats (degraded rounds propose nothing, so they count no
+        #    draft steps and no acceptances)
         self.spec_rounds += 1
         self.target_steps += len(todo)
-        self.draft_steps += len(todo) * k
+        if self.degraded:
+            self.degraded_rounds += 1
+        else:
+            self.draft_steps += len(todo) * k
+            self.drafts_accepted += int(m[list(todo)].sum())
         self.spec_tokens += int(accept.sum())
-        self.drafts_accepted += int(m[list(todo)].sum())
 
     def advance(self, lane: int) -> None:
         pass        # rounds advance lengths/indices at the accept point
@@ -958,6 +1082,8 @@ class SpecDecodeBackend:
             "draft_accept_rate":
                 round(self.drafts_accepted / self.draft_steps, 3)
                 if self.draft_steps else None,
+            "degraded": self.degraded,
+            "degraded_rounds": self.degraded_rounds,
         }
         out.update(self.inner.summary())
         return out

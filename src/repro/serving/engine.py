@@ -3,11 +3,16 @@
 One engine serves one loaded model.  Per tick (``step()``):
 
   1. retire finished requests (backend releases lanes + KV reservation),
-  2. admit queued requests while the backend's byte budget allows — each
-     admission group is prefilled in ONE jitted call
-     (``make_prefill_into_cache`` vmapped over same-length prompts) and
-     handed to the backend (``write_prefill``),
-  3. run ONE pooled decode step so every active request advances a token.
+  2. apply overload pressure (``serving/slo.py``: degrade spec drafts at
+     soft, shed the lowest waiting tier at hard) and, when the queue head
+     strictly outranks a running request, preempt one victim,
+  3. admit queued requests in POLICY order (EDF + priority tiers +
+     starvation aging by default; strict FIFO with ``policy="fifo"``)
+     while the backend's byte budget allows — each admission group is
+     prefilled in ONE jitted call (``make_prefill_into_cache`` vmapped
+     over same-length prompts) and handed to the backend
+     (``write_prefill``); preempted requests resume with prefill skipped,
+  4. run ONE pooled decode step so every active request advances a token.
 
 Requests therefore join and leave between decode steps without ever
 retracing or perturbing in-flight lanes; outputs are token-identical to
@@ -44,6 +49,7 @@ metadata / ``session.poll()``.
 
 from __future__ import annotations
 
+import math
 import time
 import warnings
 from collections import deque
@@ -59,6 +65,7 @@ from repro.models.registry import spec as family_spec
 from repro.serving.backends import DecodeBackend, make_backend
 from repro.serving.queue import RequestQueue
 from repro.serving.request import Request, Status
+from repro.serving.slo import SLO, OverloadedError, make_policy
 from repro.training.train_loop import (make_padded_prefill_into_cache,
                                        make_prefill_into_cache)
 
@@ -105,6 +112,8 @@ class InferenceEngine:
                  draft_cfg=None, draft_params=None, draft_k: int = 4,
                  spec_inner: Optional[str] = None,
                  completed_cap: Optional[int] = None,
+                 policy: Union[str, object] = "slo",
+                 default_slo: Optional[SLO] = None,
                  clock=time.perf_counter):
         spec = family_spec(cfg)
         if not spec.servable:
@@ -219,6 +228,15 @@ class InferenceEngine:
         self.prefill_s = 0.0
         self.peak_concurrency = 0
         self._tok_s_ema: Optional[float] = None     # per-token decode seconds
+        # -- SLO-aware admission (serving/slo.py) ---------------------------
+        # "slo" with no SLOs declared degrades EXACTLY to FIFO (infinite
+        # deadlines tie, arrival_seq breaks the tie), so it is the default
+        self.policy = (make_policy(policy) if isinstance(policy, str)
+                       else policy)
+        self.default_slo = default_slo.validate() if default_slo else None
+        self.n_preempted = 0    # RUNNING requests descheduled
+        self.n_resumed = 0      # preempted requests re-attached
+        self.n_shed = 0         # requests rejected under hard overload
 
     # -- backend introspection (compat delegates) ----------------------------
     @property
@@ -249,21 +267,56 @@ class InferenceEngine:
     def submit(self, prompt, max_new_tokens: int, *,
                request_id: str = "", eos_id: Optional[int] = None,
                arrival_time: Optional[float] = None,
+               deadline_ms: Optional[float] = None,
+               priority: Optional[str] = None,
+               max_ttft_ms: Optional[float] = None,
                stream: bool = False) -> Request:
+        # request-level SLO fields win; unset ones inherit the engine's
+        # per-model default (ServeJob deadline_ms/priority/max_ttft_ms).
+        # Request.__post_init__ validates — nonsense SLOs raise ValueError
+        # here, at submit time (HTTP maps it to 400)
+        slo = SLO(deadline_ms=deadline_ms,
+                  priority=priority if priority is not None else "normal",
+                  max_ttft_ms=max_ttft_ms).merged(self.default_slo)
         req = Request(prompt=prompt, max_new_tokens=max_new_tokens,
                       request_id=request_id, eos_id=eos_id,
-                      model=self.model_name, arrival_time=arrival_time)
-        if stream:
-            from repro.serving.stream import TokenStream
-            req.stream = TokenStream(req.request_id)
+                      model=self.model_name, arrival_time=arrival_time,
+                      slo=slo)
         # rows actually written: plen at prefill + one per decode step; the
         # final generated token is sampled but never fed back into the cache
         if req.prompt_len + req.max_new_tokens - 1 > self.max_seq:
             raise ValueError(
                 f"prompt+generation exceeds engine max_seq={self.max_seq}")
-        # a request that can NEVER fit would sit at the head of the FIFO
+        # a request that can NEVER fit would sit at the head of the queue
         # forever and livelock admission — the backend rejects it up front
         self.backend.admission_check(req, self._bucket(req.prompt_len))
+        # hard overload: refuse at the door rather than queue work the
+        # shed pass would reject anyway — but only when this request is in
+        # (or below) the tier being shed; higher-priority traffic still
+        # lands and preempts/outranks its way in
+        if self.policy.pressure(self.queued_seconds()) >= 2 \
+                and hasattr(self.policy, "shed_tier"):
+            waiting = [r for r in self.queue if not r.done]
+            shed = self.policy.shed_tier(waiting + [req])
+            if shed is not None and req.slo.tier >= shed:
+                req.status = Status.REJECTED
+                req.shed_reason = (
+                    "hard overload: queued work exceeds "
+                    f"{self.policy.hard_overload_s:.4g}s; "
+                    f"{req.slo.priority!r} is the lowest waiting tier")
+                self.n_shed += 1
+                self._finish(req)   # rejected requests hit the metrics ring
+                raise OverloadedError(
+                    f"{req.request_id}: {req.shed_reason}",
+                    payload={"request_id": req.request_id,
+                             "model": self.model_name,
+                             "priority": req.slo.priority,
+                             "queued_seconds":
+                                 round(self.queued_seconds(), 3),
+                             "reason": req.shed_reason})
+        if stream:
+            from repro.serving.stream import TokenStream
+            req.stream = TokenStream(req.request_id)
         return self.queue.push(req)
 
     # -- cancellation -------------------------------------------------------
@@ -279,7 +332,10 @@ class InferenceEngine:
         False when no live request has that id.
         """
         req = self.queue.find(request_id)
-        if req is not None and req.status is Status.QUEUED:
+        if req is not None and req.status in (Status.QUEUED,
+                                              Status.PREEMPTED):
+            # a preempted request still holds its KV snapshot; the sweep
+            # in the next admission pass discards it through the backend
             req.status = Status.CANCELLED
             return True
         for req in self._active.values():
@@ -293,7 +349,7 @@ class InferenceEngine:
         """Withdraw every still-queued request (job-level cancel)."""
         n = 0
         for req in self.queue:
-            if req.status is Status.QUEUED:
+            if req.status in (Status.QUEUED, Status.PREEMPTED):
                 req.status = Status.CANCELLED
                 n += 1
         return n
@@ -322,9 +378,47 @@ class InferenceEngine:
     def remaining_seconds(self) -> float:
         """LRTF input: remaining decode work (active + queued), seconds."""
         rem = sum(r.remaining_tokens() for r in self._active.values())
-        # queued requests also owe their prefill; charge it as tokens
-        rem += sum(r.max_new_tokens + r.prompt_len for r in self.queue)
+        # queued requests also owe their prefill; charge it as tokens —
+        # except preempted ones, whose prompt rows are already in KV
+        rem += sum(r.remaining_tokens()
+                   + (0 if r.status is Status.PREEMPTED else r.prompt_len)
+                   for r in self.queue if not r.done)
         return rem * self.tok_seconds_estimate()
+
+    def queued_seconds(self) -> float:
+        """Estimated seconds of work WAITING (not yet on a lane) — the
+        overload signal the shed policy gates on."""
+        rem = sum(r.remaining_tokens()
+                  + (0 if r.status is Status.PREEMPTED else r.prompt_len)
+                  for r in self.queue if not r.done)
+        return rem * self.tok_seconds_estimate()
+
+    def min_slack_seconds(self, now: Optional[float] = None
+                          ) -> Optional[float]:
+        """Tightest deadline slack across live requests (negative = a
+        deadline is already doomed at the current decode rate), or None
+        when nothing declares a deadline.  The SLO-aware multi-model
+        router ranks engines by this instead of raw remaining work."""
+        now = self.clock() if now is None else now
+        tok_s = self.tok_seconds_estimate()
+        best: Optional[float] = None
+        for r in list(self._active.values()) + list(self.queue):
+            if r.done:
+                continue
+            arrival = r.arrival_time if r.arrival_time is not None else now
+            # running requests only owe their end-to-end deadline; waiting
+            # ones are also racing their TTFT budget
+            dl = (r.slo.deadline_abs(arrival)
+                  if r.status is Status.RUNNING
+                  else r.slo.admission_deadline(arrival))
+            if not math.isfinite(dl):
+                continue
+            est = r.remaining_tokens() * tok_s
+            if r.status is Status.QUEUED:
+                est += r.prompt_len * tok_s
+            slack = dl - now - est
+            best = slack if best is None else min(best, slack)
+        return best
 
     # -- engine tick --------------------------------------------------------
     def _finish(self, req: Request) -> None:
@@ -358,21 +452,47 @@ class InferenceEngine:
                     return b
         return plen
 
+    def _sweep_terminal_queued(self) -> None:
+        """Retire queued entries that went terminal in place (cancelled,
+        or rejected by the shed pass) — admitting one would reserve a
+        lane, burn a jitted prefill, and stomp the status to RUNNING.  A
+        cancelled PREEMPTED request still holds a KV snapshot; discard it
+        through the backend so refcounts and bytes settle."""
+        for req in [r for r in self.queue
+                    if r.status in (Status.CANCELLED, Status.REJECTED)]:
+            self.queue.remove(req)
+            if getattr(self.backend, "preemptible", False):
+                self.backend.discard_preempted(req)
+            self._finish(req)
+
     def _admit(self) -> list[Request]:
+        self._sweep_terminal_queued()
         admitted: list[Request] = []
-        while self.queue:
-            req = self.queue.peek()
-            if req.status is Status.CANCELLED:
-                # withdrawn while queued: retire straight from the queue —
-                # admitting it would reserve a lane, burn a full jitted
-                # prefill, and stomp the status back to RUNNING
-                self.queue.pop()
-                self._finish(req)
-                continue
-            if not self.backend.free_lanes or \
-                    not self.backend.reserve(req, self._bucket(req.prompt_len)):
+        now = self.clock()
+        # policy-ordered walk (EDF + tiers + aging for "slo", arrival
+        # order for "fifo"); stop at the first request that cannot take a
+        # lane — skipping past a blocked head would starve it
+        for req in self.policy.order(list(self.queue), now):
+            if not self.backend.free_lanes:
                 break
-            self.queue.pop()
+            if req.status is Status.PREEMPTED:
+                # resume: the KV snapshot re-attaches to a lane, prefill
+                # is skipped, and decode restarts from the last generated
+                # token — its KV row was never written (engine invariant:
+                # the newest token lives only in the feed buffer), so the
+                # continuation is token-identical to an uninterrupted run
+                if not self.backend.resume(req):
+                    break
+                self.queue.remove(req)
+                req.status = Status.RUNNING
+                req.resume_generated = len(req.generated)
+                self.n_resumed += 1
+                self._tokens[req.slot, 0, 0] = req.generated[-1]
+                self._active[req.slot] = req
+                continue
+            if not self.backend.reserve(req, self._bucket(req.prompt_len)):
+                break
+            self.queue.remove(req)
             req.admit_time = self.clock()
             req.status = Status.RUNNING
             admitted.append(req)
@@ -417,9 +537,75 @@ class InferenceEngine:
                 self._active[req.slot] = req
         return admitted
 
+    def _maybe_preempt(self) -> None:
+        """Deschedule one running victim when the queue head strictly
+        outranks it (SLO policy + preemptible backend only).  Guards: a
+        free lane means admission needs no help, and evicting is useless
+        when the head is blocked on BYTES rather than a lane."""
+        if self.backend.free_lanes or not self.queue:
+            return
+        if not getattr(self.backend, "preemptible", False) \
+                or not getattr(self.policy, "preempt", False):
+            return
+        now = self.clock()
+        waiting = [r for r in self.queue if not r.done]
+        if not waiting:
+            return
+        head = self.policy.order(waiting, now)[0]
+        if head.status is not Status.PREEMPTED \
+                and not self.backend.can_admit_bytes(
+                    head, self._bucket(head.prompt_len)):
+            return
+        running = [r for r in self._active.values()
+                   if r.status is Status.RUNNING and not r.done]
+        victim = self.policy.pick_victim(head, running, now)
+        if victim is None:
+            return
+        lane = victim.slot
+        self.backend.preempt(victim)
+        del self._active[lane]
+        victim.slot = None
+        victim.status = Status.PREEMPTED
+        victim.preemptions += 1
+        self.n_preempted += 1
+        # rejoins the queue with its ORIGINAL arrival time/seq: aging and
+        # EDF keep ranking it as the old request it is
+        self.queue.push(victim)
+
+    def _apply_pressure(self) -> None:
+        """Overload response, in declared shed order: soft -> degrade the
+        spec backend's draft model (compute-only, still token-identical);
+        hard -> reject the lowest-priority WAITING tier (preempted
+        requests are exempt: they hold KV and finished work)."""
+        press = self.policy.pressure(self.queued_seconds())
+        if hasattr(self.backend, "set_degraded"):
+            self.backend.set_degraded(press >= 1)
+        if press < 2 or not hasattr(self.policy, "shed_tier"):
+            return
+        waiting = [r for r in self.queue if r.status is Status.QUEUED]
+        shed = self.policy.shed_tier(waiting)
+        if shed is None:
+            return
+        now = self.clock()
+        # worst-ranked first, and stop as soon as pressure clears hard —
+        # shed the minimum, not the whole tier
+        for req in reversed(self.policy.order(waiting, now)):
+            if req.slo.tier != shed:
+                continue
+            if self.policy.pressure(self.queued_seconds()) < 2:
+                break
+            req.status = Status.REJECTED
+            req.shed_reason = (
+                "hard overload: queued work exceeds "
+                f"{self.policy.hard_overload_s:.4g}s; shed lowest waiting "
+                f"tier ({req.slo.priority!r})")
+            self.n_shed += 1
+
     def step(self) -> bool:
         """One engine tick; returns True while there is work left."""
         self._retire_finished()
+        self._apply_pressure()
+        self._maybe_preempt()        # freed lane is re-used this same tick
         self._admit()
         self._retire_finished()      # single-token requests finish at prefill
         self.peak_concurrency = max(self.peak_concurrency, len(self._active))
@@ -484,6 +670,12 @@ class InferenceEngine:
             "backend": self.backend.name,
             "requested_backend": self.requested_backend,
             "paged": self.paged,
+            "policy": self.policy.name,
+            "preemptible": bool(getattr(self.backend, "preemptible",
+                                        False)),
+            "n_preempted": self.n_preempted,
+            "n_resumed": self.n_resumed,
+            "n_shed": self.n_shed,
             "bucket_sizes": list(self.bucket_sizes)
                 if self.bucket_sizes else None,
             "slot_bytes": self.slot_bytes,

@@ -8,26 +8,44 @@ model's "remaining train time" maps onto its remaining decode work in
 seconds (``ModelProgress.from_remaining``): LRTF therefore keeps the model
 with the most outstanding tokens moving, the same longest-first rule the
 paper proves out for training makespan.
+
+``scheduler="slo"`` generalizes the LRTF router for deadline traffic:
+each tick first asks every eligible engine for its tightest deadline
+slack (``InferenceEngine.min_slack_seconds``); if some engine's slack is
+inside the urgency margin, that engine steps (EDF across models) —
+otherwise the tick falls back to plain LRTF, so workloads without
+deadlines route identically to ``"lrtf"``.
+
+Ties in remaining time resolve deterministically: eligible models are
+presented to the policy sorted by (model name, earliest arrival seq), so
+equal-remaining-work schedules are reproducible across runs instead of
+following dict insertion order.
 """
 
 from __future__ import annotations
 
+import math
 from collections import deque
 from typing import Optional, Union
 
 from repro.core.scheduler import ModelProgress, SchedulerFn, get_scheduler
 from repro.serving.engine import InferenceEngine
 from repro.serving.request import Request
+from repro.serving.slo import most_urgent
 
 
 class MultiModelServer:
     def __init__(self, engines: dict[str, InferenceEngine],
                  scheduler: Union[str, SchedulerFn] = "lrtf",
-                 trace_cap: int = 4096):
+                 trace_cap: int = 4096, slo_margin_s: float = 0.5):
         if not engines:
             raise ValueError("need at least one engine")
         self.engines = dict(engines)
         self._names = list(self.engines)
+        # "slo" = deadline-aware pre-pass + LRTF fallback (module
+        # docstring); get_scheduler maps the name onto the fallback fn
+        self.slo_routing = scheduler == "slo"
+        self.slo_margin_s = slo_margin_s
         self.scheduler: SchedulerFn = (get_scheduler(scheduler)
                                        if isinstance(scheduler, str)
                                        else scheduler)
@@ -47,17 +65,40 @@ class MultiModelServer:
     def has_work(self) -> bool:
         return any(e.has_work() for e in self.engines.values())
 
+    def _earliest_seq(self, name: str) -> float:
+        """Oldest live arrival seq in an engine (queued or active) — the
+        second component of the deterministic tie-break."""
+        eng = self.engines[name]
+        seqs = [r.arrival_seq
+                for r in list(eng.queue) + eng.active_requests()
+                if r.arrival_seq is not None]
+        return min(seqs) if seqs else math.inf
+
     def step(self) -> Optional[str]:
         """One server tick: pick a model via the policy, run its engine
         tick.  Returns the model name stepped, or None when idle."""
-        eligible = [(i, name) for i, name in enumerate(self._names)
-                    if self.engines[name].has_work()]
+        # deterministic tie-breaking: the LRTF/SRTF fns keep the FIRST
+        # best on exact remaining-time ties, so present eligible models
+        # sorted by (model name, earliest arrival seq) instead of dict
+        # insertion order — equal-work schedules reproduce across runs
+        eligible = sorted(
+            (name for name in self._names if self.engines[name].has_work()),
+            key=lambda name: (name, self._earliest_seq(name)))
         if not eligible:
             return None
-        progress = [ModelProgress.from_remaining(
-            i, self.engines[name].remaining_seconds())
-            for i, name in eligible]
-        _, name = eligible[self.scheduler(progress)]
+        pick = None
+        if self.slo_routing:
+            # EDF pre-pass: an engine whose tightest deadline is inside
+            # the urgency margin wins outright; None -> LRTF fallback
+            now = self.engines[eligible[0]].clock()
+            pick = most_urgent([self.engines[n] for n in eligible], now,
+                               margin_s=self.slo_margin_s)
+        if pick is None:
+            progress = [ModelProgress.from_remaining(
+                i, self.engines[name].remaining_seconds())
+                for i, name in enumerate(eligible)]
+            pick = self.scheduler(progress)
+        name = eligible[pick]
         self.engines[name].step()
         self.schedule_trace.append(name)
         return name

@@ -88,6 +88,12 @@ class BlockPool:
         """Current refcount (0 when not allocated)."""
         return self._ref.get(bid, 0)
 
+    def refcounts(self) -> dict[int, int]:
+        """Snapshot of every live block's refcount — the leak-audit
+        surface: preempt/resume must leave this identical, and a full
+        retire must leave it empty (tests/test_slo.py)."""
+        return dict(self._ref)
+
     def incref(self, bid: int) -> int:
         """Alias an allocated block (prefix sharing); returns the block id
         so table-building code can write ``incref(bid)`` in place."""

@@ -30,6 +30,7 @@ never exceeds it).
 
 from __future__ import annotations
 
+import itertools
 import time
 from collections import deque
 from typing import Optional
@@ -38,15 +39,23 @@ from repro.serving.request import Request
 
 
 class RequestQueue:
-    """Arrival-ordered queue; stamps ``arrival_time`` on push."""
+    """Arrival-ordered queue; stamps ``arrival_time`` + ``arrival_seq``
+    on push.  The seq is a per-queue monotonic counter: the deterministic
+    tie-break every admission policy (and the LRTF router) falls back to,
+    so schedules are reproducible across runs regardless of clock
+    resolution.  Admission policies reorder by iterating (``__iter__`` /
+    ``remove``) — the deque itself stays arrival-ordered."""
 
     def __init__(self, clock=time.perf_counter):
         self.clock = clock
         self._q: deque[Request] = deque()
+        self._seq = itertools.count()
 
     def push(self, req: Request) -> Request:
         if req.arrival_time is None:
             req.arrival_time = self.clock()
+        if req.arrival_seq is None:
+            req.arrival_seq = next(self._seq)
         self._q.append(req)
         return req
 
@@ -57,6 +66,11 @@ class RequestQueue:
         """Head of the queue without removing it (page-granular admission
         must size the head's reservation before deciding to admit)."""
         return self._q[0]
+
+    def remove(self, req: Request) -> None:
+        """Remove a specific entry (policy-ordered admission pulls
+        requests out of arrival order; shed/cancel sweeps retire them)."""
+        self._q.remove(req)
 
     def find(self, request_id: str) -> Optional[Request]:
         """Queued request by id (cancellation targets it in place — the

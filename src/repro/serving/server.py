@@ -42,8 +42,10 @@ import numpy as np
 
 from repro.serving.multi import MultiModelServer
 from repro.serving.request import Request, Status
+from repro.serving.slo import OverloadedError
 
-_FINISH_REASON = {Status.FINISHED: "stop", Status.CANCELLED: "cancelled"}
+_FINISH_REASON = {Status.FINISHED: "stop", Status.CANCELLED: "cancelled",
+                  Status.REJECTED: "rejected"}
 
 
 def encode_prompt(prompt: Any, vocab_size: int) -> np.ndarray:
@@ -191,12 +193,18 @@ class ServingFrontend:
         return self.server.engines[model].cfg
 
     def submit(self, model: str, prompt, max_new_tokens: int, *,
-               request_id: str = "", eos_id: Optional[int] = None) -> Request:
+               request_id: str = "", eos_id: Optional[int] = None,
+               deadline_ms: Optional[float] = None,
+               priority: Optional[str] = None,
+               max_ttft_ms: Optional[float] = None) -> Request:
         """Thread-safe submit; always attaches a TokenStream (the HTTP
         layer consumes it even for non-streaming responses)."""
         def _do():
             req = self.server.submit(model, prompt, max_new_tokens,
                                      request_id=request_id, eos_id=eos_id,
+                                     deadline_ms=deadline_ms,
+                                     priority=priority,
+                                     max_ttft_ms=max_ttft_ms,
                                      stream=True)
             self.n_submitted += 1
             return req
@@ -211,6 +219,14 @@ class ServingFrontend:
                 "n_submitted": self.n_submitted,
                 "n_completed": self.n_completed,
                 "n_cancelled": self.n_cancelled,
+                # SLO outcomes, aggregated across engines (per-request
+                # deadline_met/preemptions ride in recent_requests)
+                "n_preempted": sum(e.n_preempted
+                                   for e in self.server.engines.values()),
+                "n_resumed": sum(e.n_resumed
+                                 for e in self.server.engines.values()),
+                "n_shed": sum(e.n_shed
+                              for e in self.server.engines.values()),
                 "ticks": self.ticks,
                 "engines": {name: eng.summary()
                             for name, eng in self.server.engines.items()},
@@ -327,9 +343,27 @@ class _Handler(BaseHTTPRequestHandler):
             prompt = encode_prompt(raw, vocab)
             max_tokens = int(body.get("max_tokens", 16))
             eos_id = body.get("eos_id")
+            # SLO fields (serving/slo.py): nonsense values raise
+            # ValueError from SLO.validate -> HTTP 400 with the
+            # actionable message, same as every other body error
+            deadline_ms = body.get("deadline_ms")
+            max_ttft_ms = body.get("max_ttft_ms")
+            priority = body.get("priority")
             req = fe.submit(model, prompt, max_tokens,
                             request_id=str(body.get("request_id", "")),
-                            eos_id=None if eos_id is None else int(eos_id))
+                            eos_id=None if eos_id is None else int(eos_id),
+                            deadline_ms=(None if deadline_ms is None
+                                         else float(deadline_ms)),
+                            priority=(None if priority is None
+                                      else str(priority)),
+                            max_ttft_ms=(None if max_ttft_ms is None
+                                         else float(max_ttft_ms)))
+        except OverloadedError as e:
+            # shed at the door: structured 429 so clients can back off
+            # or retry at a higher priority
+            return self._json(429, {"error": {
+                "message": str(e), "type": "overloaded",
+                "code": 429, **e.payload}})
         except (TypeError, ValueError) as e:
             return self._error(400, str(e))
         if want_stream:
