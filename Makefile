@@ -21,6 +21,12 @@
 #                      preempts+resumes a paged request, strictly higher
 #                      deadline goodput, completions token-identical to
 #                      offline sequential decode)
+#   make tier-smoke  - tiered memory: shard-resident weight packing serves
+#                      strictly more concurrently-resident models than
+#                      whole-model promotion under one ledger budget, and
+#                      host-DRAM KV demotion admits strictly more live
+#                      requests under byte-scarce preemption — both
+#                      token-identical, ledger drained to baseline
 #   make docs-check  - docs lint: relative links + [[refs]] resolve and
 #                      fenced python blocks compile (docs/*.md, README.md)
 #   make examples-smoke - run all four examples/*.py on their tiny configs
@@ -30,7 +36,7 @@ PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export PYTHONPATH
 
 .PHONY: test test-fast bench-smoke plan-smoke paged-smoke backend-smoke \
-    spec-smoke http-smoke slo-smoke docs-check examples-smoke
+    spec-smoke http-smoke slo-smoke tier-smoke docs-check examples-smoke
 
 test:
 	$(PY) -m pytest -x -q
@@ -62,6 +68,9 @@ http-smoke:
 
 slo-smoke:
 	$(PY) -m benchmarks.bench_load --slo-smoke
+
+tier-smoke:
+	$(PY) -m benchmarks.bench_serving --tiered
 
 docs-check:
 	$(PY) scripts/docs_check.py

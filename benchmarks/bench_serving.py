@@ -335,6 +335,203 @@ def bench_spec(arch="qwen3-0.6b", draft_arch=None, n_requests=6,
     return out
 
 
+def bench_tiered_weights(arch="qwen3-0.6b", n_models=3, plen=8, gen=6,
+                         max_seq=64, block_size=8,
+                         part_budget=3_200_000) -> dict:
+    """Shard-granular weight residency: N models served under ONE ledger
+    budget that whole-model promotion could fit only ``budget // model``
+    of (ROADMAP item 3a).
+
+    Each model pins roughly half its shards hot (``hot_bytes``) and
+    streams the rest through the serve loop's double buffer — the SHARP
+    train pattern applied to decode — with the cross-model LRU
+    coordinator demoting idle pins under pressure.  Self-asserting: every
+    model's tokens are identical to a fully-resident warm engine, the
+    peak count of concurrently-resident models strictly exceeds the
+    whole-model bound, the ledger never exceeds its budget
+    (``_check_budget`` raises otherwise), and a full drain returns every
+    weight and KV byte to baseline.
+    """
+    from repro.core import partitioner as pt
+    from repro.core import shard_graph as sg
+    from repro.core.spilling import DeviceMemory, HostModelStore
+    from repro.optim import optimizers as opt
+    from repro.serving.residency import (ResidencyCoordinator,
+                                         ShardResidentParams)
+    cfg = get_config(arch, smoke=True)
+    shard_plan = sg.build_plan(cfg)
+    prompts = [np.asarray(jax.random.randint(
+        jax.random.PRNGKey(40 + i), (plen,), 0, cfg.vocab_size, jnp.int32))
+        for i in range(n_models)]
+
+    # distinct weights per model (seed i); a tight partition budget forces
+    # the multi-shard layout shard streaming needs
+    stores, partitions, all_params = [], [], []
+    for i in range(n_models):
+        params = api.init_params(cfg, jax.random.PRNGKey(i))
+        host = sg.prepare_host_params(cfg, jax.tree.map(np.asarray, params))
+        partition = pt.partition(cfg, host, shard_plan,
+                                 budget_bytes=part_budget, batch=1,
+                                 seq=max_seq, train=False)
+        stores.append(HostModelStore(cfg, shard_plan, params,
+                                     opt.OptimizerConfig(grad_clip=0.0),
+                                     partition))
+        partitions.append(partition)
+        all_params.append(params)
+
+    model_bytes = sum(stores[0].shard_transfer_bytes(s, train=False)
+                      for s in partitions[0].shards)
+    # fits TWO whole models (plus KV slack), so whole-model promotion
+    # serves at most 2 concurrently; shard residency must beat that
+    budget = 2 * model_bytes + 512 * 1024
+    whole_model_fit = budget // model_bytes
+    ledger = DeviceMemory(-1, budget_bytes=budget)
+    coord = ResidencyCoordinator(ledger)
+
+    engines, sources, reqs = [], [], []
+    for i in range(n_models):
+        src = ShardResidentParams(cfg, stores[i], partitions[i], ledger,
+                                  hot_bytes=model_bytes // 2,
+                                  name=f"{arch}#{i}")
+        coord.register(src)
+        eng = InferenceEngine(cfg, None, capacity=1, max_seq=max_seq,
+                              backend="paged", block_size=block_size,
+                              ledger=ledger, policy="fifo",
+                              model_name=f"{arch}#{i}", param_source=src)
+        sources.append(src)
+        engines.append(eng)
+        reqs.append(eng.submit(prompts[i], gen))
+
+    # round-robin the engines (the session's serve_tick shape) and track
+    # how many models hold pinned weights at once
+    peak_resident = 0
+    t0 = time.perf_counter()
+    while any(e.has_work() for e in engines):
+        for eng in engines:
+            if eng.has_work():
+                eng.step()
+        peak_resident = max(peak_resident, sum(
+            1 for s in sources if s.hot_resident_bytes > 0))
+    wall = time.perf_counter() - t0
+
+    toks = [r.generated for r in reqs]
+    refs = []
+    for i in range(n_models):
+        warm = InferenceEngine(cfg, all_params[i], capacity=1,
+                               max_seq=max_seq, backend="paged",
+                               block_size=block_size, policy="fifo")
+        r = warm.submit(prompts[i], gen)
+        warm.run()
+        refs.append(r.generated)
+    assert toks == refs, \
+        "shard-resident decode diverged from fully-resident decode"
+    assert peak_resident > whole_model_fit, \
+        (f"only {peak_resident} models concurrently resident — no better "
+         f"than whole-model promotion's {whole_model_fit} under "
+         f"{budget} B")
+    stream_bytes = sum(s.stream_promoted_bytes for s in sources)
+    assert stream_bytes > 0, "no shard ever streamed — hot pins fit " \
+        "everything; tighten the budget"
+    # drain: unpin every model, every ledger term back to baseline
+    for s in sources:
+        s.demote_all()
+    assert ledger.used_bytes() == 0 and ledger.host_kv_bytes == 0
+    emit(f"serve_tiered_models_{arch}", wall * 1e6,
+         f"{peak_resident}vs{whole_model_fit}")
+    return {"arch": arch, "n_models": n_models,
+            "model_weight_bytes": model_bytes,
+            "ledger_budget_bytes": budget,
+            "whole_model_fit": int(whole_model_fit),
+            "peak_resident_models": peak_resident,
+            "models_served": len(toks),
+            "tokens_identical": toks == refs,
+            "stream_promoted_bytes": stream_bytes,
+            "hot_demotions": sum(s.n_hot_demotions for s in sources),
+            "ledger_drained": ledger.used_bytes() == 0}
+
+
+def bench_tiered_kv(arch="qwen3-0.6b", n_low=2, n_high=2, plen=8,
+                    gen_low=16, gen_high=4, max_seq=64,
+                    block_size=8) -> dict:
+    """Host-DRAM KV page demotion under byte-scarce preemption (ROADMAP
+    item 3b).
+
+    One budget worth ~7 KV blocks, two lanes: the running low-priority
+    longs reserve 6, so a high-priority arrival's 2-block reservation is
+    byte-blocked.  Untiered paging cannot preempt its way out (a parked
+    victim keeps its device reservation — the bytes guard refuses), so
+    admitted concurrency stalls at the lanes.  Tiered paging demotes the
+    victim's pages to the host pool at preemption, freeing real device
+    bytes, admits the high, and prefetches the pages back before resume —
+    strictly more peak live requests (active + parked), token-identical,
+    with host<->device traffic and the prefetch hit rate reported.
+    """
+    from repro.core.spilling import DeviceMemory
+    from repro.serving import blocks_for_rows
+    cfg = get_config(arch, smoke=True)
+    params = api.init_params(cfg, jax.random.PRNGKey(0))
+    block_bytes = api.kv_block_bytes(cfg, block_size)
+    budget = 7 * block_bytes
+    low_prompts = [np.asarray(jax.random.randint(
+        jax.random.PRNGKey(50 + i), (plen,), 0, cfg.vocab_size, jnp.int32))
+        for i in range(n_low)]
+    high_prompts = [np.asarray(jax.random.randint(
+        jax.random.PRNGKey(70 + i), (plen,), 0, cfg.vocab_size, jnp.int32))
+        for i in range(n_high)]
+
+    def drive(tiered: bool):
+        ledger = DeviceMemory(-1, budget_bytes=budget)
+        eng = InferenceEngine(cfg, params, capacity=2, max_seq=max_seq,
+                              backend="paged", block_size=block_size,
+                              ledger=ledger, policy="slo",
+                              tiered_kv=tiered, model_name=arch)
+        lows = [eng.submit(p, gen_low, priority="low")
+                for p in low_prompts]
+        for _ in range(3):
+            eng.step()
+        highs = [eng.submit(p, gen_high, priority="high",
+                            deadline_ms=60_000.0) for p in high_prompts]
+        t0 = time.perf_counter()
+        eng.run()
+        wall = time.perf_counter() - t0
+        toks = [r.generated for r in lows + highs]
+        assert ledger.kv_reserved_bytes == 0 and ledger.host_kv_bytes == 0
+        return eng.summary(), toks, ledger, wall
+
+    base_sum, base_toks, _, base_wall = drive(tiered=False)
+    tier_sum, tier_toks, tier_led, tier_wall = drive(tiered=True)
+    assert tier_toks == base_toks, \
+        "tiered decode diverged from untiered paged decode"
+    assert tier_sum["peak_live_requests"] > base_sum["peak_live_requests"], \
+        (f"tiering admitted no extra live requests: "
+         f"{tier_sum['peak_live_requests']} <= "
+         f"{base_sum['peak_live_requests']} under {budget} B")
+    assert tier_sum["kv_demoted_bytes"] > 0
+    assert tier_sum["kv_prefetched_bytes"] > 0
+    emit(f"serve_tiered_kv_live_{arch}", 0.0,
+         f"{tier_sum['peak_live_requests']}vs"
+         f"{base_sum['peak_live_requests']}")
+    emit(f"serve_tiered_kv_traffic_{arch}", 0.0,
+         f"{tier_sum['kv_demoted_bytes'] + tier_sum['kv_prefetched_bytes']}B")
+    return {"arch": arch, "kv_budget_bytes": budget,
+            "block_bytes": block_bytes, "capacity": 2,
+            "n_low": n_low, "n_high": n_high,
+            "untiered_peak_live_requests": base_sum["peak_live_requests"],
+            "tiered_peak_live_requests": tier_sum["peak_live_requests"],
+            "untiered_preemptions": base_sum["n_preempted"],
+            "tiered_preemptions": tier_sum["n_preempted"],
+            "tokens_identical": tier_toks == base_toks,
+            # satellite: host<->device transfer accounting + hit rate
+            "kv_demoted_bytes": tier_sum["kv_demoted_bytes"],
+            "kv_prefetched_bytes": tier_sum["kv_prefetched_bytes"],
+            "host_pool_peak_blocks": tier_sum["host_pool_peak_blocks"],
+            "prefetch_hits": tier_sum["prefetch_hits"],
+            "prefetch_misses": tier_sum["prefetch_misses"],
+            "prefetch_hit_rate": tier_sum["prefetch_hit_rate"],
+            "untiered_wall_s": round(base_wall, 4),
+            "tiered_wall_s": round(tier_wall, 4)}
+
+
 # one servable arch per family the backend smoke exercises (encoder-decoder
 # families are not servable; vlm shares the transformer paths with dense)
 _SMOKE_FAMILY_ARCHS = {"dense": "qwen3-0.6b", "ssm": "xlstm-350m",
@@ -402,6 +599,11 @@ def main():
                     help="both decode backends per supporting family + the "
                     "prefix-share workload (self-asserting; make "
                     "backend-smoke)")
+    ap.add_argument("--tiered", action="store_true",
+                    help="tiered memory smoke: shard-resident weight "
+                    "packing beats whole-model promotion, and host-DRAM "
+                    "KV demotion admits more live requests under one "
+                    "budget (self-asserting; make tier-smoke)")
     ap.add_argument("--spec", action="store_true",
                     help="speculative decode vs plain decode on both inner "
                     "backends (self-asserting: token-identical, accept "
@@ -412,7 +614,11 @@ def main():
     ap.add_argument("--draft-k", type=int, default=4)
     ap.add_argument("--arch", default="qwen3-0.6b")
     args = ap.parse_args()
-    if args.spec:
+    if args.tiered:
+        out = {"tiered_weights": bench_tiered_weights(arch=args.arch),
+               "tiered_kv": bench_tiered_kv(arch=args.arch)}
+        print(json.dumps(out))
+    elif args.spec:
         print(json.dumps({"spec": bench_spec(
             arch=args.arch, draft_arch=args.draft_model,
             draft_k=args.draft_k)}))

@@ -136,6 +136,24 @@ class ServeJob(JobSpec):
     slo_aging_s: float = 30.0                   # starvation aging interval
     soft_overload_s: float = float("inf")       # queued-seconds: degrade spec
     hard_overload_s: float = float("inf")       # queued-seconds: shed/reject
+    # Tiered memory (ROADMAP item 3; docs/serving.md "Tiered memory"):
+    # ``residency`` picks how a COLD model's weights live on the device —
+    # "model" (legacy: first request promotes the whole tree) or "shard"
+    # (hot shards stay pinned under ``hot_bytes`` of ledger budget, cold
+    # shards stream through the serve loop's double buffer exactly like
+    # SHARP train shards; idle models' hot shards demote under ledger
+    # pressure, LRU by last-served tick).  ``tiered_kv`` enables the
+    # host-DRAM KV tier on the paged backend: preempted requests' pages
+    # demote to the host pool and prefetch back (``prefetch_ticks`` engine
+    # steps of latency) before resume.  ``params_from`` names a finished
+    # TrainJob in the same session whose trained weights this job serves
+    # straight out of the shared host store — no host round-trip through
+    # user code.
+    residency: str = "model"                    # "model" | "shard"
+    hot_bytes: Optional[int] = None             # shard residency: pin target
+    tiered_kv: bool = False                     # host-DRAM KV tier (paged)
+    prefetch_ticks: int = 1                     # host->device prefetch latency
+    params_from: Optional[str] = None           # TrainJob id to serve from
     kind: str = field(default="serve", init=False)
 
     def http_options(self) -> dict:
@@ -174,6 +192,44 @@ class ServeJob(JobSpec):
             return None
         return SLO(deadline_ms=self.deadline_ms, priority=self.priority,
                    max_ttft_ms=self.max_ttft_ms).validate()
+
+    def validate_tiering(self) -> None:
+        """Fail fast on tiered-memory misconfiguration (submit time, not
+        mid-run): the tiering knobs only compose certain ways."""
+        if self.residency not in ("model", "shard"):
+            raise ValueError(
+                f"residency={self.residency!r}: weight residency is "
+                "'model' (whole-tree promotion on first request) or "
+                "'shard' (pinned hot shards + streamed cold shards)")
+        if self.residency == "shard" and not self.cold \
+                and self.params_from is None:
+            raise ValueError(
+                "residency='shard' streams weights out of the session's "
+                "host store, which only cold jobs have — set cold=True "
+                "(or params_from=<train job id>, which implies it)")
+        if self.hot_bytes is not None:
+            if self.residency != "shard":
+                raise ValueError(
+                    "hot_bytes only applies to residency='shard' (it caps "
+                    "the pinned hot-shard bytes); drop it or switch "
+                    "residency")
+            if self.hot_bytes < 0:
+                raise ValueError(
+                    f"hot_bytes={self.hot_bytes}: the pinned hot-shard "
+                    "target must be >= 0 (0 streams every shard)")
+        if self.prefetch_ticks < 1:
+            raise ValueError(
+                f"prefetch_ticks={self.prefetch_ticks}: host->device "
+                "prefetch takes at least one engine step")
+        if self.tiered_kv and self.requested_backend() != "paged":
+            raise ValueError(
+                f"tiered_kv=True needs the paged backend (KV pages are "
+                f"the demotion unit), but this job requests "
+                f"{self.requested_backend()!r}")
+        if self.params_from is not None and self.params is not None:
+            raise ValueError(
+                "conflicting spec: params_from names a TrainJob to serve "
+                "from, but explicit params were also given; drop one")
 
     def requested_backend(self) -> str:
         """The backend this spec asks for, before capability fallback."""

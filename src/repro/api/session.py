@@ -111,6 +111,11 @@ class Session:
         # serving forever must not grow its tick trace without bound
         self.serve_trace: deque[str] = deque(maxlen=4096)
         self.unit_trace: list[tuple] = []
+        # cross-model weight-residency LRU (serving/residency.py), built
+        # lazily at the first shard-resident serve job: registers itself
+        # as a device-0 ledger pressure handler, so idle models' pinned
+        # shards demote when some other charge needs the bytes
+        self._residency = None
 
     def __enter__(self) -> "Session":
         return self
@@ -129,6 +134,17 @@ class Session:
             job.requested_backend()         # ... and on a bad backend name
             job.resolved_policy()           # ... and on a bad policy/knobs
             job.default_slo()               # ... and on nonsensical SLOs
+            job.validate_tiering()          # ... and on tiering misuse
+            if job.params_from is not None:
+                src = self._jobs.get(job.params_from)
+                if not isinstance(src, TrainJob):
+                    have = sorted(j for j, s in self._jobs.items()
+                                  if isinstance(s, TrainJob))
+                    raise ValueError(
+                        f"params_from={job.params_from!r}: not a TrainJob "
+                        f"in this session (have {have}); submit the train "
+                        "job first, then the serve job that inherits its "
+                        "weights")
             name = job.name or job.cfg.name
             if name in self._serve_names:
                 raise ValueError(
@@ -179,6 +195,14 @@ class Session:
                        n_resumed=eng.n_resumed,
                        n_shed=eng.n_shed,
                        recent_requests=eng.recent_metrics())
+            # tiered-memory gauges, only when the job opted in (the keys
+            # exist iff the backend/param source is tiered)
+            s = eng.summary()
+            out.update({k: s[k] for k in
+                        ("residency", "n_hot_shards", "hot_resident_bytes",
+                         "stream_promoted_bytes", "kv_demoted_bytes",
+                         "kv_prefetched_bytes", "prefetch_hit_rate",
+                         "peak_live_requests") if k in s})
         if job_id in self._cold:
             out.update(cold=True, promoted="engine" in self._cold[job_id])
         if job_id in self._eval_execs:
@@ -304,7 +328,13 @@ class Session:
                 "slo_defaults": (None if job.default_slo() is None else {
                     "deadline_ms": job.deadline_ms,
                     "priority": job.priority,
-                    "max_ttft_ms": job.max_ttft_ms})}
+                    "max_ttft_ms": job.max_ttft_ms}),
+                # tiered memory (ROADMAP item 3): weight residency + the
+                # train job this serve job inherits weights from, if any
+                "residency": job.residency,
+                "params_from": job.params_from}
+        if job.residency == "shard":
+            meta["hot_bytes"] = job.hot_bytes
         meta["paged"] = backend == "paged"
         if backend == "paged":
             from repro.serving import blocks_for_rows
@@ -318,7 +348,9 @@ class Session:
                 # plan's memory split charges against the device budget
                 kv_page_cap_bytes=job.capacity * per_req * block_bytes,
                 prefix_share=job.prefix_share,
-                shared_ledger=job.kv_budget_bytes is None)
+                shared_ledger=job.kv_budget_bytes is None,
+                tiered_kv=job.tiered_kv,
+                prefetch_ticks=job.prefetch_ticks)
         if backend == "spec":
             draft_spec = family_spec(job.draft_model)
             meta.update(
@@ -424,7 +456,7 @@ class Session:
             elif isinstance(job, EvalJob):
                 self._eval_execs[jid] = self._build_eval(job, planned)
             elif isinstance(job, ServeJob):
-                if not job.cold and only is None:
+                if not job.cold and job.params_from is None and only is None:
                     # a warm engine (param init + device-resident slot pool)
                     # is execution state a plan does not need — engine()
                     # builds it lazily at the first request or at run()
@@ -560,6 +592,19 @@ class Session:
 
     def _build_serve(self, jid: str, job: ServeJob, planned) -> None:
         from repro.optim import optimizers as opt
+        if job.params_from is not None:
+            # train-then-serve promotion: this job serves straight out of
+            # the TRAIN job's host store — no host round-trip through user
+            # code.  Promotion is necessarily deferred (cold) until the
+            # weights exist; _promote_cold enforces the ordering.
+            tjid = job.params_from
+            if tjid not in self._train_execs:
+                self._materialize(only=tjid)
+            m = self._train_execs[tjid]
+            self._cold[jid] = {"store": m.store, "partition": m.partition,
+                               "params_from": tjid,
+                               "promote_bytes": 0, "promote_s": 0.0}
+            return
         params = self._init_params(job)
         if not job.cold:
             self._engines[jid] = self._make_engine(job, params)
@@ -574,12 +619,14 @@ class Session:
         self._cold[jid] = {"store": store, "partition": partition,
                            "promote_bytes": 0, "promote_s": 0.0}
 
-    def _make_engine(self, job: ServeJob, params):
+    def _make_engine(self, job: ServeJob, params, *, param_source=None):
         """Backend selection happens ONCE here: resolve the job's effective
         backend through the FamilySpec registry and hand the engine one
         backend choice — no capability branches at call sites."""
         from repro.serving import InferenceEngine
         kw: dict[str, Any] = {}
+        if param_source is not None:
+            kw.update(param_source=param_source)
         effective = job.effective_backend()
         if effective == "spec":
             from repro.models import api as mapi
@@ -601,7 +648,9 @@ class Session:
                 kw.update(kv_budget_bytes=job.kv_budget_bytes)
         elif effective == "paged":
             kw.update(block_size=job.block_size,
-                      prefix_share=job.prefix_share)
+                      prefix_share=job.prefix_share,
+                      tiered_kv=job.tiered_kv,
+                      prefetch_ticks=job.prefetch_ticks)
             if job.kv_budget_bytes is None:
                 # pages charge the session's device-0 ledger — the budget
                 # SHARP promotions charge — unless the job pins a private cap
@@ -620,10 +669,32 @@ class Session:
 
     def _promote_cold(self, jid: str) -> None:
         """First request for a cold model: promote its shards out of the
-        host store (core/spilling byte accounting) and build the engine."""
+        host store (core/spilling byte accounting) and build the engine.
+        ``residency='shard'`` skips the whole-tree move: the engine gets a
+        ``ShardResidentParams`` source instead, and residency is decided
+        tick-by-tick (pinned hot shards + streamed cold shards)."""
         cold = self._cold[jid]
         job: ServeJob = self._jobs[jid]          # type: ignore[assignment]
         store, partition = cold["store"], cold["partition"]
+        tjid = cold.get("params_from")
+        if tjid is not None and not self._train_execs[tjid].done:
+            raise RuntimeError(
+                f"{jid}: params_from={tjid!r} has not finished training — "
+                "its weights do not exist to serve yet; run() trains "
+                "before draining serve requests")
+        if job.residency == "shard":
+            from repro.serving.residency import (ResidencyCoordinator,
+                                                 ShardResidentParams)
+            if self._residency is None:
+                self._residency = ResidencyCoordinator(self.devices[0])
+            src = ShardResidentParams(
+                job.cfg, store, partition, self.devices[0],
+                hot_bytes=job.hot_bytes, name=job.name or job.cfg.name)
+            self._residency.register(src)
+            cold["residency"] = src
+            cold["engine"] = self._engines[jid] = self._make_engine(
+                job, None, param_source=src)
+            return
         t0 = time.perf_counter()
         # the transfer itself is the single to_device below; the spilling
         # store's per-shard accounting prices it shard-by-shard

@@ -452,10 +452,8 @@ class SharpExecutor:
 
             # ---- memory accounting --------------------------------------
             dev = self.devices[d]
-            dev.charge_promotion(shard_bytes,
-                                 into_buffer=self.hc.enable_double_buffer)
-            if self.hc.enable_double_buffer:
-                dev.activate_buffer()
+            dev.promote_through_buffer(
+                shard_bytes, double_buffer=self.hc.enable_double_buffer)
             if move_act:
                 dev.charge_act(act_bytes)
 

@@ -45,9 +45,16 @@ class TransferStats:
     n_promotions: int = 0
     n_demotions: int = 0
     act_bytes_moved: int = 0
+    # tiered KV (serving): pages moved between device pool and host pool
+    kv_demoted_bytes: int = 0
+    kv_prefetched_bytes: int = 0
+    n_kv_demotions: int = 0
+    n_kv_prefetches: int = 0
 
     def total_bytes(self) -> int:
-        return self.promoted_bytes + self.demoted_bytes + self.act_bytes_moved
+        return (self.promoted_bytes + self.demoted_bytes
+                + self.act_bytes_moved
+                + self.kv_demoted_bytes + self.kv_prefetched_bytes)
 
 
 class HostModelStore:
@@ -86,6 +93,14 @@ class HostModelStore:
                   for n in self.shard_shared_names(shard)}
         opt_state = to_device(self.opt[shard.index])
         return own, shared, opt_state
+
+    def promote_shard_params(self, shard: Shard):
+        """Host -> device, weights only (serving: no optimizer state)."""
+        own = to_device(self._own_params(shard))
+        shared = {n: to_device(sg.resolve_ref(self.params,
+                                              self.plan.shared_refs[n]))
+                  for n in self.shard_shared_names(shard)}
+        return own, shared
 
     def demote_shard(self, shard: Shard, own, opt_state):
         """Device -> host: write back possibly-updated params + opt state."""
@@ -145,11 +160,21 @@ class HostModelStore:
 class DeviceMemory:
     """Budget + double-buffer + KV-page accounting for one virtual device.
 
-    One ledger, three charges against the same byte budget: promoted shard
-    residency (``resident_bytes``), the double-buffer loading zone
-    (``buffered_bytes``), and serving KV-page reservations
-    (``kv_reserved_bytes`` — charged by page-granular admission in
-    ``repro.serving``, so mixed train+serve plans stay byte-accurate).
+    One ledger, four charges against the same byte budget: promoted shard
+    residency (``resident_bytes`` — train units and shards streamed through
+    the serve loop), the double-buffer loading zone (``buffered_bytes``),
+    serving KV-page reservations (``kv_reserved_bytes`` — charged by
+    page-granular admission in ``repro.serving``), and persistent serve-side
+    weight residency (``weight_resident_bytes`` — hot shards held across
+    serve ticks by shard-granular residency, ``serving/residency.py``).
+
+    The tiered extension treats this device budget as a *cache* over host
+    DRAM (ZeRO-Infinity, arXiv 2104.07857): KV pages of parked requests can
+    be demoted into a host pool (``host_kv_bytes`` — tracked, but not
+    charged against the device budget) and prefetched back later, and a
+    failing reservation first consults registered *pressure handlers*
+    (LRU demotion of idle models' weight shards or parked KV pages) before
+    giving up.
     """
 
     def __init__(self, device_id: int, budget_bytes: int,
@@ -161,11 +186,18 @@ class DeviceMemory:
         self.buffered_bytes = 0
         self.kv_reserved_bytes = 0
         self.kv_peak_bytes = 0
+        # tiered terms: persistent serve-weight residency on device, and
+        # demoted KV pages parked in the host-DRAM pool
+        self.weight_resident_bytes = 0
+        self.host_kv_bytes = 0
+        self.host_kv_peak_bytes = 0
         self.stats = TransferStats()
+        self._pressure_handlers: list = []
+        self._in_pressure = False
 
     def used_bytes(self) -> int:
-        return self.resident_bytes + self.buffered_bytes \
-            + self.kv_reserved_bytes
+        return (self.resident_bytes + self.buffered_bytes
+                + self.kv_reserved_bytes + self.weight_resident_bytes)
 
     def _check_budget(self) -> None:
         # a real error, not an assert: budget enforcement is a correctness
@@ -176,7 +208,8 @@ class DeviceMemory:
                 f"{self.used_bytes()/1e9:.3f} GB > {self.budget/1e9:.3f} GB "
                 f"(resident {self.resident_bytes/1e9:.3f} GB, double-buffer "
                 f"{self.buffered_bytes/1e9:.3f} GB, kv pages "
-                f"{self.kv_reserved_bytes/1e9:.3f} GB)")
+                f"{self.kv_reserved_bytes/1e9:.3f} GB, serve weights "
+                f"{self.weight_resident_bytes/1e9:.3f} GB)")
 
     def charge_promotion(self, nbytes: int, *, into_buffer: bool):
         if into_buffer:
@@ -187,18 +220,116 @@ class DeviceMemory:
         self.stats.n_promotions += 1
         self._check_budget()
 
+    def promote_through_buffer(self, nbytes: int, *,
+                               double_buffer: bool = True) -> None:
+        """The SHARP promotion pattern: land the shard in the loading zone,
+        then flip it into the active region.  Shared by the train executor
+        (``core/sharp.py``) and serve-side shard streaming
+        (``serving/residency.py``) so both charge the budget at the same
+        buffered peak."""
+        self.charge_promotion(nbytes, into_buffer=double_buffer)
+        if double_buffer:
+            self.activate_buffer()
+
+    # -- pressure (tiered demotion) -----------------------------------------
+    def on_pressure(self, handler) -> None:
+        """Register ``handler(need_bytes) -> freed_bytes``, consulted when a
+        reservation does not fit.  Handlers demote tiered residents (idle
+        models' weight shards, parked KV pages) to host DRAM."""
+        if handler not in self._pressure_handlers:
+            self._pressure_handlers.append(handler)
+
+    def _relieve(self, need_bytes: int) -> None:
+        if self._in_pressure or need_bytes <= 0:
+            return
+        self._in_pressure = True
+        try:
+            freed = 0
+            for handler in list(self._pressure_handlers):
+                if freed >= need_bytes:
+                    break
+                freed += int(handler(need_bytes - freed))
+        finally:
+            self._in_pressure = False
+
+    # -- serve weights (shard-granular residency) ---------------------------
+    def reserve_weights(self, nbytes: int) -> bool:
+        """Charge persistent hot-shard residency for a served model; False
+        when it does not fit even after pressure-driven demotion — the
+        caller streams the shard per tick instead of pinning it."""
+        over = self.used_bytes() + nbytes - self.budget
+        if over > 0:
+            self._relieve(over)
+        if self.used_bytes() + nbytes > self.budget:
+            return False
+        self.weight_resident_bytes += nbytes
+        self.stats.promoted_bytes += nbytes
+        self.stats.n_promotions += 1
+        return True
+
+    def release_weights(self, nbytes: int) -> None:
+        """Demote hot serve shards back to the host store."""
+        if nbytes > self.weight_resident_bytes:
+            raise RuntimeError(
+                f"device {self.device_id}: release_weights({nbytes}) exceeds "
+                f"the {self.weight_resident_bytes} B of serve-weight "
+                "residency — release without a matching reserve")
+        self.weight_resident_bytes -= nbytes
+        self.stats.demoted_bytes += nbytes
+        self.stats.n_demotions += 1
+
     # -- serving KV pages ----------------------------------------------------
     def can_reserve_kv(self, nbytes: int) -> bool:
         return self.used_bytes() + nbytes <= self.budget
 
     def reserve_kv(self, nbytes: int) -> bool:
         """Charge a KV-page reservation; False (not an error) when it does
-        not fit — admission control degrades to queueing, not crashing."""
+        not fit — admission control degrades to queueing, not crashing.
+        Under pressure, registered handlers may demote tiered residents to
+        make the reservation fit."""
+        if not self.can_reserve_kv(nbytes):
+            self._relieve(self.used_bytes() + nbytes - self.budget)
         if not self.can_reserve_kv(nbytes):
             return False
         self.kv_reserved_bytes += nbytes
         self.kv_peak_bytes = max(self.kv_peak_bytes, self.kv_reserved_bytes)
         return True
+
+    # -- tiered KV: device pool <-> host pool -------------------------------
+    def demote_kv(self, nbytes: int) -> None:
+        """Move a live KV reservation device -> host pool: the device bytes
+        are released (schedulable by others) while the pages stay accounted
+        in ``host_kv_bytes`` until prefetched back or dropped."""
+        self.release_kv(nbytes)
+        self.host_kv_bytes += nbytes
+        self.host_kv_peak_bytes = max(self.host_kv_peak_bytes,
+                                      self.host_kv_bytes)
+        self.stats.kv_demoted_bytes += nbytes
+        self.stats.n_kv_demotions += 1
+
+    def prefetch_kv(self, nbytes: int) -> bool:
+        """Host pool -> device: re-reserve device bytes for demoted pages.
+        False when the device side does not fit yet — the pages stay in the
+        host pool and the owner retries once bytes drain."""
+        if nbytes > self.host_kv_bytes:
+            raise RuntimeError(
+                f"device {self.device_id}: prefetch_kv({nbytes}) exceeds the "
+                f"{self.host_kv_bytes} B parked in the host pool")
+        if not self.reserve_kv(nbytes):
+            return False
+        self.host_kv_bytes -= nbytes
+        self.stats.kv_prefetched_bytes += nbytes
+        self.stats.n_kv_prefetches += 1
+        return True
+
+    def drop_host_kv(self, nbytes: int) -> None:
+        """Discard demoted pages parked in the host pool (cancel/shed of a
+        demoted request) without re-reserving device bytes."""
+        if nbytes > self.host_kv_bytes:
+            raise RuntimeError(
+                f"device {self.device_id}: drop_host_kv({nbytes}) exceeds "
+                f"the {self.host_kv_bytes} B parked in the host pool")
+        self.host_kv_bytes -= nbytes
 
     def release_kv(self, nbytes: int) -> None:
         if nbytes > self.kv_reserved_bytes:

@@ -62,6 +62,7 @@ shard promotions.
 from __future__ import annotations
 
 import hashlib
+import itertools
 from collections import deque
 from functools import lru_cache
 from typing import Optional, Protocol, Sequence, runtime_checkable
@@ -72,7 +73,7 @@ import numpy as np
 
 from repro.models import api
 from repro.models.registry import spec as family_spec
-from repro.serving.paging import (BlockPool, blocks_for_rows,
+from repro.serving.paging import (BlockPool, HostBlockPool, blocks_for_rows,
                                   default_n_blocks)
 from repro.serving.queue import KVBudget, PagedKVBudget
 from repro.serving.request import Request
@@ -229,6 +230,19 @@ def _compiled_page_copy():
     return jax.jit(copy, donate_argnums=(0, 1))
 
 
+@lru_cache(maxsize=None)
+def _compiled_block_write():
+    """Write one block's host rows into a physical block (all layers):
+    the tiered-KV prefetch landing step.  Pages donated, like the CoW
+    copy — an in-place row write, not a pool copy."""
+    def write(kp, vp, bid, kb, vb):
+        kp = kp.at[:, bid].set(kb)
+        vp = vp.at[:, bid].set(vb)
+        return kp, vp
+
+    return jax.jit(write, donate_argnums=(0, 1))
+
+
 # ---------------------------------------------------------------------------
 # slot backend
 # ---------------------------------------------------------------------------
@@ -335,7 +349,8 @@ class PagedBackend:
                  n_blocks: Optional[int] = None,
                  kv_budget_bytes: Optional[int] = None, ledger=None,
                  paged_impl: Optional[str] = None,
-                 prefix_share: bool = True, verify_headroom: int = 0):
+                 prefix_share: bool = True, verify_headroom: int = 0,
+                 tiered: bool = False, prefetch_ticks: int = 1):
         from repro.core.spilling import DeviceMemory
         from repro.kernels import ops as kops
         if ledger is not None and kv_budget_bytes is not None:
@@ -398,6 +413,30 @@ class PagedBackend:
         self._preempted: dict[str, tuple[list[int], set[int], int]] = {}
         self.shared_block_hits = 0       # blocks aliased instead of allocated
         self.cow_copies = 0              # copy-on-write block copies
+        # tiered KV (host-DRAM page demotion, docs/serving.md): parked
+        # snapshots' private pages can leave the device for a host pool —
+        # eagerly on preempt, or LRU-by-park-time under ledger pressure —
+        # and prefetch back asynchronously before their lane resumes.
+        self.tiered = bool(tiered)
+        if prefetch_ticks < 1:
+            raise ValueError("prefetch_ticks must be >= 1")
+        self.prefetch_ticks = prefetch_ticks
+        self.host_pool = (HostBlockPool(self.pool.block_bytes)
+                          if self.tiered else None)
+        self._block_write = _compiled_block_write()
+        self._demoted: dict[str, dict[int, int]] = {}   # rid -> {j: hostkey}
+        self._prefetching: dict[str, dict] = {}         # rid -> staging
+        self._park_seq = itertools.count()
+        self._park_order: dict[str, int] = {}           # rid -> park stamp
+        self._prefetch_done_late: dict[str, bool] = {}
+        self.kv_demote_block_moves = 0      # device -> host block copies
+        self.kv_prefetch_block_moves = 0    # host -> device block copies
+        self.prefetch_hits = 0      # prefetch done before the lane needed it
+        self.prefetch_misses = 0    # lane had to wait on an in-flight fetch
+        if self.tiered:
+            # failing reservations demote parked pages before giving up —
+            # the mechanism that lets admission proceed past parked bytes
+            self.ledger.on_pressure(self.relieve_pressure)
 
     # -- sizing --------------------------------------------------------------
     def _prefill_width(self, prefill_rows: int) -> int:
@@ -602,22 +641,34 @@ class PagedBackend:
         """Deschedule a RUNNING request: park (block table, committed
         length) under its request_id and free the lane.  Refcounts and
         the byte reservation are untouched — the request still *holds*
-        its KV, it just isn't decoding — so resume needs only a lane."""
+        its KV, it just isn't decoding — so resume needs only a lane.
+        (Tiered engines follow up with ``demote_parked`` so the parked
+        bytes stop pinning device memory.)"""
         lane = req.slot
         self._preempted[req.request_id] = (
             self._lane_blocks.pop(lane), self._lane_owned.pop(lane),
             int(self._lengths[lane]))
+        self._park_order[req.request_id] = next(self._park_seq)
         self._tables[lane, :] = BlockPool.GARBAGE
         self._lengths[lane] = 0
         self._lane_free.append(lane)
 
     def resume(self, req: Request) -> bool:
         """Re-attach a preempted request's snapshot to a free lane.  The
-        KV rows never moved, so the caller skips prefill and resumes
-        decode from the request's last generated token."""
-        if not self._lane_free:
+        KV rows never moved (or have been prefetched back), so the caller
+        skips prefill and resumes decode from the last generated token.
+        Demoted / still-prefetching snapshots refuse: the engine must
+        drive ``start_prefetch`` + ``poll_prefetches`` first."""
+        rid = req.request_id
+        if not self._lane_free or self._demoted.get(rid) \
+                or rid in self._prefetching:
             return False
-        blocks, owned, length = self._preempted.pop(req.request_id)
+        blocks, owned, length = self._preempted.pop(rid)
+        self._park_order.pop(rid, None)
+        late = self._prefetch_done_late.pop(rid, None)
+        if late is not None:
+            self.prefetch_misses += int(late)
+            self.prefetch_hits += int(not late)
         lane = self._lane_free.pop()
         self._lane_blocks[lane] = blocks
         self._lane_owned[lane] = owned
@@ -629,14 +680,176 @@ class PagedBackend:
 
     def discard_preempted(self, req: Request) -> None:
         """Drop a parked snapshot without resuming (cancel / shed while
-        preempted): refcounts and bytes settle exactly like a release.
-        No-op for requests that never held a snapshot — the terminal
-        sweep calls this for every dead queue entry."""
-        parked = self._preempted.pop(req.request_id, None)
+        preempted): refcounts and bytes settle exactly like a release —
+        including any pages demoted to the host pool or caught mid-
+        prefetch.  No-op for requests that never held a snapshot — the
+        terminal sweep calls this for every dead queue entry."""
+        rid = req.request_id
+        parked = self._preempted.pop(rid, None)
         if parked is None:
             return
+        self._park_order.pop(rid, None)
+        self._prefetch_done_late.pop(rid, None)
         blocks, owned, _ = parked
-        self._release_blocks(blocks, owned, req.reserved_blocks)
+        # mid-prefetch: the new physical blocks exist and their device
+        # bytes are re-reserved, but the rows were never attached — free
+        # them like ordinary owned blocks by completing the bookkeeping
+        st = self._prefetching.pop(rid, None)
+        if st is not None:
+            for j, (bid, _k, _v) in st["rows"].items():
+                blocks[j] = bid
+                owned.add(bid)
+        hostmap = self._demoted.pop(rid, {})
+        live = [b for b in blocks if b >= 0]
+        # the demoted blocks' device reservation and physical commitment
+        # were already settled at demotion time — release only the rest
+        self._release_blocks(live, owned,
+                             req.reserved_blocks - len(hostmap))
+        for key in hostmap.values():
+            self.host_pool.drop(key)
+        if hostmap:
+            self.budget.drop_host(len(hostmap))
+
+    # -- tiered KV: demotion / prefetch (docs/serving.md) --------------------
+    def _demotable(self, bid: int, owned: set) -> bool:
+        """Only private pages move tiers: sole-owner, unindexed blocks —
+        the same guard as speculative rollback.  Shared/indexed pages stay
+        device-resident for their other readers."""
+        return bid in owned and self.pool.ref(bid) == 1 \
+            and bid not in self._rev
+
+    def demoted_blocks(self, req: Request) -> int:
+        """Blocks of this request currently host-resident or in flight
+        (the SLO router's resume-cost input)."""
+        rid = req.request_id
+        st = self._prefetching.get(rid)
+        if st is not None:
+            return len(st["rows"])
+        return len(self._demoted.get(rid, ()))
+
+    def parked_state(self, req: Request) -> str:
+        """'resident' | 'demoted' | 'inflight' for a parked snapshot."""
+        rid = req.request_id
+        if rid in self._prefetching:
+            return "inflight"
+        if self._demoted.get(rid):
+            return "demoted"
+        return "resident"
+
+    def _demote_snapshot(self, rid: str, need_blocks=None) -> int:
+        """Move a parked snapshot's private pages device -> host pool.
+        Each moved block's rows are copied out, the physical block is
+        freed, and its device byte reservation is re-parked as host-pool
+        bytes.  Returns blocks moved."""
+        parked = self._preempted.get(rid)
+        if parked is None or rid in self._prefetching:
+            return 0
+        blocks, owned, _length = parked
+        hostmap = self._demoted.setdefault(rid, {})
+        moved = 0
+        for j, bid in enumerate(blocks):
+            if need_blocks is not None and moved >= need_blocks:
+                break
+            if bid < 0 or not self._demotable(bid, owned):
+                continue
+            k_rows = np.array(self.pool.pages["k"][:, bid])
+            v_rows = np.array(self.pool.pages["v"][:, bid])
+            hostmap[j] = self.host_pool.put(k_rows, v_rows)
+            owned.discard(bid)
+            self.pool.decref(bid)
+            blocks[j] = -1
+            moved += 1
+        if not hostmap:
+            self._demoted.pop(rid, None)
+        if moved:
+            self._committed_blocks -= moved
+            self.budget.demote(moved)
+            self.kv_demote_block_moves += moved
+        return moved
+
+    def demote_parked(self, req: Request) -> int:
+        """Eagerly demote a just-preempted request's private pages (the
+        engine calls this right after ``preempt`` when tiering is on), so
+        parked requests stop pinning device bytes.  Returns blocks moved."""
+        if not self.tiered:
+            return 0
+        return self._demote_snapshot(req.request_id)
+
+    def relieve_pressure(self, need_bytes: int) -> int:
+        """``DeviceMemory`` pressure handler: demote parked snapshots'
+        pages, least-recently-parked first, until ``need_bytes`` are freed
+        or nothing demotable is left.  Returns bytes freed."""
+        if not self.tiered:
+            return 0
+        bb = self.pool.block_bytes
+        need = blocks_for_rows(need_bytes, bb)   # ceil-div bytes -> blocks
+        freed = 0
+        for rid in sorted(self._preempted, key=self._park_order.get):
+            if freed >= need:
+                break
+            freed += self._demote_snapshot(rid, need - freed)
+        return freed * bb
+
+    def start_prefetch(self, req: Request) -> bool:
+        """Begin the async host -> device fetch of a demoted snapshot:
+        re-reserve its device bytes, allocate physical blocks, and stage
+        the row copies — they land at a later ``poll_prefetches`` (the
+        modeled transfer latency), after which ``resume`` proceeds.
+        False when the device bytes or blocks do not fit yet: the caller
+        keeps the request queued and retries as bytes drain — it always
+        fits eventually because the bytes being waited on were part of
+        this request's original admission reservation."""
+        rid = req.request_id
+        if rid in self._prefetching:
+            return True
+        hostmap = self._demoted.get(rid)
+        if not hostmap:
+            return True
+        n = len(hostmap)
+        if n > self.pool.n_free:
+            return False
+        if not self.budget.prefetch(n):
+            return False
+        ids = self.pool.alloc(n)
+        self._committed_blocks += n
+        rows = {}
+        for (j, key), bid in zip(sorted(hostmap.items()), ids):
+            k_rows, v_rows = self.host_pool.pop(key)
+            rows[j] = (bid, k_rows, v_rows)
+        del self._demoted[rid]
+        self._prefetching[rid] = {"rows": rows,
+                                  "ticks": self.prefetch_ticks,
+                                  "late": False}
+        return True
+
+    def poll_prefetches(self) -> None:
+        """Advance in-flight prefetches one tick; completed ones write
+        their staged rows into the pages and the snapshot becomes
+        resumable.  The engine calls this at the top of every step — the
+        async-transfer barrier."""
+        for rid in list(self._prefetching):
+            st = self._prefetching[rid]
+            st["ticks"] -= 1
+            if st["ticks"] > 0:
+                continue
+            blocks, owned, _length = self._preempted[rid]
+            for j, (bid, k_rows, v_rows) in sorted(st["rows"].items()):
+                kp, vp = self._block_write(
+                    self.pool.pages["k"], self.pool.pages["v"], bid,
+                    jnp.asarray(k_rows), jnp.asarray(v_rows))
+                self.pool.pages = {"k": kp, "v": vp}
+                blocks[j] = bid
+                owned.add(bid)
+            self.kv_prefetch_block_moves += len(st["rows"])
+            self._prefetch_done_late[rid] = st["late"]
+            del self._prefetching[rid]
+
+    def note_prefetch_wait(self, req: Request) -> None:
+        """The scheduler wanted this lane but its pages are still in
+        flight — a prefetch that completed 'late' (miss, not hit)."""
+        st = self._prefetching.get(req.request_id)
+        if st is not None:
+            st["late"] = True
 
     def can_admit_bytes(self, req: Request, prefill_rows: int) -> bool:
         """Byte-side admissibility if a lane WERE free — the preemption
@@ -741,7 +954,7 @@ class PagedBackend:
         self._lengths[lane] += 1
 
     def summary(self) -> dict:
-        return {
+        out = {
             "block_size": self.block_size,
             "block_bytes": self.pool.block_bytes,
             "n_blocks": self.pool.n_blocks,
@@ -753,6 +966,22 @@ class PagedBackend:
             "cow_copies": self.cow_copies,
             "preempted_held": len(self._preempted),
         }
+        if self.tiered:
+            bb = self.pool.block_bytes
+            fetches = self.prefetch_hits + self.prefetch_misses
+            out.update({
+                "tiered": True,
+                "host_pool_blocks": self.host_pool.n_blocks,
+                "host_pool_bytes": self.host_pool.used_bytes(),
+                "host_pool_peak_blocks": self.host_pool.peak_blocks,
+                "kv_demoted_bytes": self.kv_demote_block_moves * bb,
+                "kv_prefetched_bytes": self.kv_prefetch_block_moves * bb,
+                "prefetch_hits": self.prefetch_hits,
+                "prefetch_misses": self.prefetch_misses,
+                "prefetch_hit_rate": (round(self.prefetch_hits / fetches, 3)
+                                      if fetches else None),
+            })
+        return out
 
 
 # ---------------------------------------------------------------------------
@@ -1097,7 +1326,8 @@ BACKENDS = {"slot": SlotBackend, "paged": PagedBackend,
 _BACKEND_KWARGS = {
     "slot": ("window", "kv_budget_bytes", "ledger", "verify_headroom"),
     "paged": ("window", "kv_budget_bytes", "ledger", "block_size",
-              "n_blocks", "paged_impl", "prefix_share", "verify_headroom"),
+              "n_blocks", "paged_impl", "prefix_share", "verify_headroom",
+              "tiered", "prefetch_ticks"),
     "spec": ("window", "kv_budget_bytes", "ledger", "block_size",
              "n_blocks", "paged_impl", "prefix_share", "draft_cfg",
              "draft_params", "draft_k", "inner"),

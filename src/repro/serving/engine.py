@@ -114,6 +114,8 @@ class InferenceEngine:
                  completed_cap: Optional[int] = None,
                  policy: Union[str, object] = "slo",
                  default_slo: Optional[SLO] = None,
+                 tiered_kv: bool = False, prefetch_ticks: int = 1,
+                 param_source=None,
                  clock=time.perf_counter):
         spec = family_spec(cfg)
         if not spec.servable:
@@ -126,6 +128,13 @@ class InferenceEngine:
         if capacity < 1:
             raise ValueError("capacity must be >= 1")
         self.cfg = cfg
+        # shard-granular residency (serving/residency.py): a param source
+        # assembles the device tree per tick — hot shards stay pinned,
+        # cold ones stream through the double buffer; `self.params` is
+        # refreshed at the top of every step
+        self._param_source = param_source
+        if param_source is not None and params is not None:
+            raise ValueError("pass params or param_source, not both")
         self.params = params
         self.model_name = model_name or cfg.name
         self.clock = clock
@@ -173,7 +182,8 @@ class InferenceEngine:
                 block_size=block_size, n_blocks=n_blocks,
                 paged_impl=paged_impl, prefix_share=prefix_share,
                 draft_cfg=draft_cfg, draft_params=draft_params,
-                draft_k=draft_k, inner=spec_inner)
+                draft_k=draft_k, inner=spec_inner,
+                tiered=tiered_kv, prefetch_ticks=prefetch_ticks)
         else:
             if paged and requested.name != "paged":
                 raise ValueError(
@@ -237,6 +247,13 @@ class InferenceEngine:
         self.n_preempted = 0    # RUNNING requests descheduled
         self.n_resumed = 0      # preempted requests re-attached
         self.n_shed = 0         # requests rejected under hard overload
+        # -- tiered KV (host-DRAM page demotion, serving/backends.py) -------
+        self._tiered = bool(getattr(self.backend, "tiered", False))
+        self._demote_on_preempt = self._tiered and bool(
+            getattr(self.policy, "demote_on_preempt", True))
+        # active lanes + parked snapshot holders: the live-request
+        # concurrency one byte budget sustains — tiering's headline metric
+        self.peak_live_requests = 0
 
     # -- backend introspection (compat delegates) ----------------------------
     @property
@@ -393,12 +410,26 @@ class InferenceEngine:
                   for r in self.queue if not r.done)
         return rem * self.tok_seconds_estimate()
 
+    def resume_cost_seconds(self, req: Request) -> float:
+        """Extra latency a preempted request pays before its next token:
+        pages demoted to the host pool must prefetch back — an async
+        transfer of ``prefetch_ticks`` engine ticks plus the resume tick,
+        each roughly one pooled decode step at current occupancy.  Zero
+        for device-resident snapshots (resume is a table re-attach)."""
+        if not self._tiered or self.backend.demoted_blocks(req) == 0:
+            return 0.0
+        per_tick = self.tok_seconds_estimate() * max(1, len(self._active))
+        return (self.backend.prefetch_ticks + 1) * per_tick
+
     def min_slack_seconds(self, now: Optional[float] = None
                           ) -> Optional[float]:
         """Tightest deadline slack across live requests (negative = a
         deadline is already doomed at the current decode rate), or None
         when nothing declares a deadline.  The SLO-aware multi-model
-        router ranks engines by this instead of raw remaining work."""
+        router ranks engines by this instead of raw remaining work.
+        Preempted-and-demoted requests owe their resume/prefetch latency
+        on top of remaining decode — without it the router overpromises
+        on engines whose parked work lives in host DRAM."""
         now = self.clock() if now is None else now
         tok_s = self.tok_seconds_estimate()
         best: Optional[float] = None
@@ -416,6 +447,8 @@ class InferenceEngine:
             est = r.remaining_tokens() * tok_s
             if r.status is Status.QUEUED:
                 est += r.prompt_len * tok_s
+            elif r.status is Status.PREEMPTED:
+                est += self.resume_cost_seconds(r)
             slack = dl - now - est
             best = slack if best is None else min(best, slack)
         return best
@@ -476,6 +509,24 @@ class InferenceEngine:
             if not self.backend.free_lanes:
                 break
             if req.status is Status.PREEMPTED:
+                if self._tiered:
+                    # resume barrier for demoted snapshots: pages must be
+                    # back on device before the lane re-attaches
+                    state = self.backend.parked_state(req)
+                    if state == "demoted":
+                        # start the async fetch; a failed byte reservation
+                        # blocks admission AT THE HEAD (no skipping —
+                        # running work retiring is what frees the bytes,
+                        # and they were part of this request's original
+                        # reservation, so the wait is bounded)
+                        if not self.backend.start_prefetch(req):
+                            break
+                        continue    # in flight; revisit next tick
+                    if state == "inflight":
+                        # demoted-but-prefetching: the lane stays
+                        # schedulable — others admit past it this tick
+                        self.backend.note_prefetch_wait(req)
+                        continue
                 # resume: the KV snapshot re-attaches to a lane, prefill
                 # is skipped, and decode restarts from the last generated
                 # token — its KV row was never written (engine invariant:
@@ -552,7 +603,12 @@ class InferenceEngine:
         if not waiting:
             return
         head = self.policy.order(waiting, now)[0]
+        # bytes guard: evicting is useless when the head is blocked on
+        # BYTES rather than a lane — unless eager demotion is on, in
+        # which case the victim's parked pages leave the device and the
+        # freed bytes are exactly what admits the head
         if head.status is not Status.PREEMPTED \
+                and not self._demote_on_preempt \
                 and not self.backend.can_admit_bytes(
                     head, self._bucket(head.prompt_len)):
             return
@@ -563,6 +619,9 @@ class InferenceEngine:
             return
         lane = victim.slot
         self.backend.preempt(victim)
+        if self._demote_on_preempt:
+            # PR 7 follow-on: a parked request stops pinning device bytes
+            self.backend.demote_parked(victim)
         del self._active[lane]
         victim.slot = None
         victim.status = Status.PREEMPTED
@@ -603,12 +662,28 @@ class InferenceEngine:
 
     def step(self) -> bool:
         """One engine tick; returns True while there is work left."""
+        if self._param_source is not None and self.has_work():
+            # assemble the shard-resident param tree for this tick (hot
+            # shards reuse their device copies; cold shards stream)
+            self.params = self._param_source.begin_tick()
+        try:
+            return self._step_inner()
+        finally:
+            if self._param_source is not None:
+                self._param_source.end_tick()
+
+    def _step_inner(self) -> bool:
+        if self._tiered:
+            self.backend.poll_prefetches()   # async-transfer completions
         self._retire_finished()
         self._apply_pressure()
         self._maybe_preempt()        # freed lane is re-used this same tick
         self._admit()
         self._retire_finished()      # single-token requests finish at prefill
         self.peak_concurrency = max(self.peak_concurrency, len(self._active))
+        parked = sum(1 for r in self.queue if r.status is Status.PREEMPTED)
+        self.peak_live_requests = max(self.peak_live_requests,
+                                      len(self._active) + parked)
         if self._active:
             t0 = self.clock()
             ntoks = self.backend.decode(self.params, self._tokens,
@@ -684,6 +759,11 @@ class InferenceEngine:
             "kv_peak_bytes": self.backend.budget.peak_bytes,
             "free_lanes": self.backend.free_lanes,
             "peak_concurrency": self.peak_concurrency,
+            # active lanes + parked (preempted) snapshot holders: the
+            # admitted concurrency one byte budget sustains — with tiered
+            # KV, parked pages live in host DRAM so this exceeds what
+            # device bytes alone could hold
+            "peak_live_requests": self.peak_live_requests,
             # retired_total, not len(completed): drain_completed/-cap
             # eviction must not make a long-running server report zero
             "n_completed": self.retired_total,
@@ -696,4 +776,6 @@ class InferenceEngine:
                 if self.decode_s else None,
         }
         out.update(self.backend.summary())
+        if self._param_source is not None:
+            out.update(self._param_source.summary())
         return out

@@ -124,6 +124,56 @@ class BlockPool:
             self.decref(b)
 
 
+class HostBlockPool:
+    """Host-DRAM side of the tiered KV cache (ROADMAP item 3b).
+
+    Holds the *contents* of demoted KV blocks — per block, the
+    ``(L, block_size, n_kv_heads, head_dim)`` k/v rows as numpy arrays —
+    keyed by an opaque handle.  Byte accounting mirrors the device pool's
+    ``block_bytes`` so ``DeviceMemory.host_kv_bytes`` reconciles exactly
+    with ``used_bytes()`` here.  Unlike the device pool there is no free
+    list or budget: host DRAM is the backing tier, bounded only by what
+    was demoted out of the device budget.
+    """
+
+    def __init__(self, block_bytes: int):
+        self.block_bytes = block_bytes
+        self._data: dict[int, tuple] = {}       # key -> (k_rows, v_rows)
+        self._next = 0
+        self.total_demotions = 0     # lifetime blocks parked here
+        self.total_prefetches = 0    # lifetime blocks pulled back out
+        self.peak_blocks = 0
+
+    @property
+    def n_blocks(self) -> int:
+        return len(self._data)
+
+    def used_bytes(self) -> int:
+        return self.n_blocks * self.block_bytes
+
+    def put(self, k_rows, v_rows) -> int:
+        """Park one demoted block's rows; returns its handle."""
+        key = self._next
+        self._next += 1
+        self._data[key] = (k_rows, v_rows)
+        self.total_demotions += 1
+        self.peak_blocks = max(self.peak_blocks, self.n_blocks)
+        return key
+
+    def pop(self, key: int) -> tuple:
+        """Pull a block back out for prefetch (host -> device)."""
+        if key not in self._data:
+            raise RuntimeError(f"HostBlockPool.pop({key}): no such block")
+        self.total_prefetches += 1
+        return self._data.pop(key)
+
+    def drop(self, key: int) -> None:
+        """Discard a parked block (owner cancelled/shed while demoted)."""
+        if key not in self._data:
+            raise RuntimeError(f"HostBlockPool.drop({key}): no such block")
+        del self._data[key]
+
+
 def blocks_for_rows(rows: int, block_size: int) -> int:
     """Blocks needed to hold ``rows`` KV rows (ceil division)."""
     return -(-rows // block_size)

@@ -179,3 +179,29 @@ class PagedKVBudget:
                 "a matching reserve")
         self.reserved_bytes -= nbytes
         self.ledger.release_kv(nbytes)
+
+    # -- tiered KV: device <-> host-pool moves (serving/backends.py) --------
+    def demote(self, n_blocks: int) -> None:
+        """Park reserved blocks in the host pool: device bytes release,
+        ``DeviceMemory.host_kv_bytes`` picks them up."""
+        nbytes = n_blocks * self.block_bytes
+        if nbytes > self.reserved_bytes:
+            raise RuntimeError(
+                f"PagedKVBudget.demote({n_blocks} blocks = {nbytes} B): "
+                f"only {self.reserved_bytes} B reserved")
+        self.reserved_bytes -= nbytes
+        self.ledger.demote_kv(nbytes)
+
+    def prefetch(self, n_blocks: int) -> bool:
+        """Re-reserve device bytes for demoted blocks; False when the
+        device side does not fit yet."""
+        nbytes = n_blocks * self.block_bytes
+        if not self.ledger.prefetch_kv(nbytes):
+            return False
+        self.reserved_bytes += nbytes
+        self.peak_bytes = max(self.peak_bytes, self.reserved_bytes)
+        return True
+
+    def drop_host(self, n_blocks: int) -> None:
+        """Discard demoted blocks outright (owner cancelled while parked)."""
+        self.ledger.drop_host_kv(n_blocks * self.block_bytes)

@@ -1,0 +1,214 @@
+"""Shard-granular weight residency for serving (ROADMAP item 3a).
+
+``ServeJob(cold=True)`` used to mean *whole-model* promotion: the first
+request paid one big host->device transfer and the model stayed fully
+resident forever, uncharged.  This module completes SHARP-for-inference:
+a served model's weights live in its ``HostModelStore`` and reach the
+device **per shard**, charged to the one ``DeviceMemory`` ledger.
+
+Two residency classes per shard:
+
+* **hot** — pinned across serve ticks (``DeviceMemory.reserve_weights``),
+  up to the job's ``hot_bytes`` target.  Hot shards are what make a model
+  "resident"; many models' hot sets pack into one budget.
+* **streamed** — everything else is promoted *through the double buffer*
+  each tick, exactly the ``SharpExecutor`` train pattern
+  (``DeviceMemory.promote_through_buffer`` -> compute -> demotion), so the
+  ledger peak is hot + one in-flight shard rather than the whole model.
+
+Under ledger pressure a ``ResidencyCoordinator`` demotes hot shards of
+the least-recently-served models first (LRU over last-served tick); a
+demoted model keeps serving — its shards simply stream until the budget
+drains and ``_ensure_hot`` re-pins them.
+
+On this CPU dev container promotion is physically host->host and the
+assembled decode tree is retained between ticks; the *mechanics* (per
+shard transfer work, buffer lifecycle, budget enforcement, LRU demotion,
+byte/traffic accounting) are identical to a real fleet and fully
+exercised — the same contract ``core/spilling.py`` declares.  Decode
+outputs are token-identical to a warm engine by construction: weights
+are read-only and ``to_device`` round-trips are exact.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Optional
+
+from repro.core.spilling import DeviceMemory, HostModelStore, to_device
+
+
+class ShardResidentParams:
+    """Param source for one served model: assembles the decode tree each
+    engine tick from hot (pinned) + streamed (per-tick) weight shards.
+
+    The engine calls ``begin_tick()`` before prefill/decode and
+    ``end_tick()`` after; between ticks only the hot set is charged.
+    """
+
+    def __init__(self, cfg, store: HostModelStore, partition,
+                 ledger: DeviceMemory, *, hot_bytes: Optional[int] = None,
+                 double_buffer: bool = True, name: Optional[str] = None,
+                 clock=time.monotonic):
+        self.cfg = cfg
+        self.store = store
+        self.partition = partition
+        self.ledger = ledger
+        self.hot_bytes = hot_bytes      # None -> pin everything that fits
+        self.double_buffer = double_buffer
+        self.name = name or getattr(cfg, "name", "model")
+        self.clock = clock
+        self.shards = list(partition.shards)
+        self.shard_bytes = {
+            s.index: store.shard_transfer_bytes(s, train=False)
+            for s in self.shards}
+        self.total_bytes = sum(self.shard_bytes.values())
+        self.last_used = float("-inf")  # LRU key: last-served tick time
+        self._hot: dict[int, int] = {}  # shard index -> charged bytes
+        self._assembled = None          # device tree, built on first tick
+        self._tail_bytes = 0            # last streamed shard, demoted at end
+        self._in_tick = False
+        # traffic accounting (reported via summary())
+        self.stream_promoted_bytes = 0
+        self.n_stream_promotions = 0
+        self.n_hot_demotions = 0
+        self.promote_s = 0.0
+
+    # -- tick protocol (driven by InferenceEngine) --------------------------
+    def begin_tick(self):
+        """Assemble the device param tree for one prefill/decode tick."""
+        self.last_used = self.clock()
+        self._in_tick = True
+        self._ensure_hot()
+        cold = [s for s in self.shards if s.index not in self._hot]
+        prev = 0
+        for s in cold:
+            b = self.shard_bytes[s.index]
+            if prev:
+                self.ledger.charge_demotion(prev)
+            self.ledger.promote_through_buffer(
+                b, double_buffer=self.double_buffer)
+            t0 = time.perf_counter()
+            self.store.promote_shard_params(s)  # real host->device transfer
+            self.promote_s += time.perf_counter() - t0
+            self.stream_promoted_bytes += b
+            self.n_stream_promotions += 1
+            prev = b
+        # the last streamed shard stays charged through the decode call
+        self._tail_bytes = prev
+        if self._assembled is None:
+            t0 = time.perf_counter()
+            self._assembled = to_device(self.store.model_params())
+            self.promote_s += time.perf_counter() - t0
+        return self._assembled
+
+    def end_tick(self) -> None:
+        if self._tail_bytes:
+            self.ledger.charge_demotion(self._tail_bytes)
+            self._tail_bytes = 0
+        self._in_tick = False
+
+    # -- residency ----------------------------------------------------------
+    def _ensure_hot(self) -> None:
+        """Greedily (re-)pin shards up to the hot-bytes target.  Runs every
+        tick, so a model demoted under pressure re-warms once the ledger
+        drains.  The pin set must leave enough budget headroom to stream
+        the LARGEST remaining cold shard — otherwise the tick itself would
+        blow ``_check_budget`` mid-stream; pins yield (own shards last,
+        after cross-model pressure relief) until streaming fits."""
+        target = self.total_bytes if self.hot_bytes is None else self.hot_bytes
+        hot_total = sum(self._hot.values())
+        for s in self.shards:
+            if s.index in self._hot:
+                continue
+            b = self.shard_bytes[s.index]
+            if hot_total + b > target:
+                continue
+            if not self.ledger.reserve_weights(b):
+                break       # budget full even after pressure demotion
+            self._hot[s.index] = b
+            hot_total += b
+        cold = [s.index for s in self.shards if s.index not in self._hot]
+        if not cold:
+            return
+        need = max(self.shard_bytes[i] for i in cold)
+        headroom = self.ledger.budget - self.ledger.used_bytes()
+        if headroom < need:
+            # other models' idle pins go first (LRU via the ledger's
+            # pressure handlers; our own demote() is a no-op mid-tick)
+            self.ledger._relieve(need - headroom)
+        while self._hot and \
+                self.ledger.budget - self.ledger.used_bytes() < need:
+            idx = max(self._hot)
+            b = self._hot.pop(idx)
+            self.ledger.release_weights(b)
+            self.n_hot_demotions += 1
+            need = max(need, b)     # the unpinned shard now streams too
+
+    def demote(self, need_bytes: int) -> int:
+        """Pressure handler: unpin hot shards until ``need_bytes`` are
+        freed (or nothing is left).  Never demotes mid-tick — the charges
+        are load-bearing while the model is decoding."""
+        if self._in_tick:
+            return 0
+        freed = 0
+        for idx in sorted(self._hot, reverse=True):
+            if freed >= need_bytes:
+                break
+            b = self._hot.pop(idx)
+            self.ledger.release_weights(b)
+            self.n_hot_demotions += 1
+            freed += b
+        return freed
+
+    def demote_all(self) -> int:
+        """Teardown: release every pinned shard (drain-to-baseline)."""
+        return self.demote(self.total_bytes + 1)
+
+    @property
+    def n_shards(self) -> int:
+        return len(self.shards)
+
+    @property
+    def hot_resident_bytes(self) -> int:
+        return sum(self._hot.values())
+
+    @property
+    def n_hot_shards(self) -> int:
+        return len(self._hot)
+
+    def summary(self) -> dict:
+        return {
+            "residency": "shard",
+            "n_shards": len(self.shards),
+            "n_hot_shards": self.n_hot_shards,
+            "weight_bytes": self.total_bytes,
+            "hot_resident_bytes": self.hot_resident_bytes,
+            "stream_promoted_bytes": self.stream_promoted_bytes,
+            "n_stream_promotions": self.n_stream_promotions,
+            "n_hot_demotions": self.n_hot_demotions,
+            "promote_s": round(self.promote_s, 6),
+        }
+
+
+class ResidencyCoordinator:
+    """Cross-model LRU demotion: one per session ledger.  Registered as a
+    ``DeviceMemory`` pressure handler; under pressure the least-recently-
+    served models' hot shards leave the device first."""
+
+    def __init__(self, ledger: DeviceMemory):
+        self.ledger = ledger
+        self.models: list[ShardResidentParams] = []
+        ledger.on_pressure(self.relieve)
+
+    def register(self, src: ShardResidentParams) -> None:
+        if src not in self.models:
+            self.models.append(src)
+
+    def relieve(self, need_bytes: int) -> int:
+        freed = 0
+        for src in sorted(self.models, key=lambda s: s.last_used):
+            if freed >= need_bytes:
+                break
+            freed += src.demote(need_bytes - freed)
+        return freed

@@ -160,6 +160,12 @@ class SLOPolicy:
                              backend declares ``preemptible``.
     ``preempt_min_tokens`` — a victim must have decoded this many tokens
                              since its last admit/resume (anti-thrash).
+    ``demote_on_preempt``  — on tiered-KV backends, eagerly demote a
+                             victim's parked pages to the host pool so
+                             they stop pinning device bytes (preempt→
+                             demote, resume→prefetch barrier; see
+                             docs/serving.md).  Ignored when the engine
+                             is not tiered.
     ``soft_overload_s``    — queued-work seconds above which speculative
                              draft models are degraded (level 1).
     ``hard_overload_s``    — queued-work seconds above which the
@@ -172,6 +178,7 @@ class SLOPolicy:
     aging_s: float = 30.0
     preempt: bool = True
     preempt_min_tokens: int = 2
+    demote_on_preempt: bool = True
     soft_overload_s: float = math.inf
     hard_overload_s: float = math.inf
 

@@ -1,0 +1,489 @@
+"""Tiered KV + weights memory (ROADMAP item 3; docs/serving.md).
+
+Three invariants under test, all on the ONE shared ``DeviceMemory``
+ledger:
+
+1. **Byte reconciliation** — across any interleaving of preempt → demote
+   → prefetch → resume / cancel, device-side reservations plus the host
+   pool reconcile exactly with the ledger's ``kv_reserved_bytes`` /
+   ``host_kv_bytes`` terms, and a full drain returns every term to its
+   baseline (no leaked bytes, blocks, or refcounts).
+2. **Token identity** — a demote → prefetch → resume cycle reproduces
+   exactly the tokens of untiered decode (the pages round-trip through
+   host numpy arrays bit-exactly), on the paged backend directly and
+   through the ``Session`` serve surface.
+3. **Weight residency** — ``ShardResidentParams`` pins hot shards under
+   ``reserve_weights``, streams cold shards through the same double-buffer
+   discipline SHARP training uses, demotes idle models under ledger
+   pressure (LRU by last-served tick), and never changes decode output
+   (weights are read-only; residency is pure mechanism).
+"""
+
+import functools
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.spilling import DeviceMemory
+from repro.models import api
+from repro.serving.engine import InferenceEngine
+from repro.serving.request import Status
+
+from tests._hypothesis_compat import given, settings, st
+
+MAX_SEQ = 64
+
+
+@functools.lru_cache(maxsize=None)
+def _dense():
+    cfg = get_config("qwen3-0.6b", smoke=True)
+    return cfg, api.init_params(cfg, jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def dense():
+    return _dense()
+
+
+def _prompt(cfg, seed, plen=8):
+    rng = np.random.RandomState(seed)
+    return rng.randint(0, cfg.vocab_size, plen).astype(np.int32)
+
+
+def _paged(cfg, params, *, capacity=2, policy="slo", ledger=None,
+           tiered=False, prefetch_ticks=1, n_blocks=32):
+    return InferenceEngine(cfg, params, capacity=capacity, max_seq=MAX_SEQ,
+                           backend="paged", block_size=8, n_blocks=n_blocks,
+                           ledger=ledger, policy=policy, tiered_kv=tiered,
+                           prefetch_ticks=prefetch_ticks)
+
+
+def _sequential(cfg, params, prompts_gens):
+    """Reference: each prompt decoded alone — the token-identity oracle."""
+    out = []
+    eng = _paged(cfg, params, capacity=1, policy="fifo")
+    for prompt, gen in prompts_gens:
+        r = eng.submit(prompt, gen)
+        eng.run()
+        out.append(r.generated)
+    return out
+
+
+def _run_preempt_scenario(cfg, params, ledger, **kw):
+    """Two low-priority longs saturate both lanes; a high-priority short
+    preempts one.  With tiering on, the victim's pages demote eagerly."""
+    eng = _paged(cfg, params, capacity=2, ledger=ledger, tiered=True, **kw)
+    longs = [eng.submit(_prompt(cfg, i), 16, priority="low")
+             for i in (1, 2)]
+    for _ in range(3):
+        eng.step()
+    assert all(r.status is Status.RUNNING for r in longs)
+    short = eng.submit(_prompt(cfg, 3), 4, priority="high",
+                       deadline_ms=60_000.0)
+    eng.step()
+    return eng, longs, short
+
+
+def _assert_drained(eng, ledger):
+    """Every tier back to baseline: device bytes, host bytes, blocks,
+    refcounts — the reconciliation terms of docs/serving.md."""
+    assert eng.budget.reserved_bytes == 0
+    assert ledger.kv_reserved_bytes == 0
+    assert ledger.host_kv_bytes == 0
+    assert eng.backend.host_pool.n_blocks == 0
+    assert eng.pool.n_free == eng.pool.n_allocatable
+    assert eng.pool.refcounts() == {}
+
+
+def _reconcile(eng, ledger):
+    """Mid-flight invariant: the host pool and the ledger's host term are
+    the same bytes, and device usage never exceeds the budget."""
+    assert eng.backend.host_pool.used_bytes() == ledger.host_kv_bytes
+    assert ledger.used_bytes() <= ledger.budget
+
+
+# ---------------------------------------------------------------------------
+# tiered KV: demote -> prefetch -> resume
+# ---------------------------------------------------------------------------
+
+def test_preempt_demotes_eagerly_and_resumes_identical(dense):
+    cfg, params = dense
+    ledger = DeviceMemory(-1, budget_bytes=10**9)
+    eng, longs, short = _run_preempt_scenario(cfg, params, ledger)
+    assert eng.n_preempted >= 1
+    victim = next(r for r in longs if r.status is Status.PREEMPTED)
+    # eager demotion: the parked snapshot's sole-owner pages moved to host
+    assert eng.backend.parked_state(victim) == "demoted"
+    assert eng.backend.demoted_blocks(victim) > 0
+    assert ledger.host_kv_bytes > 0
+    _reconcile(eng, ledger)
+    eng.run()
+    assert all(r.status is Status.FINISHED for r in longs + [short])
+    ref = _sequential(cfg, params,
+                      [(_prompt(cfg, 1), 16), (_prompt(cfg, 2), 16),
+                       (_prompt(cfg, 3), 4)])
+    assert [longs[0].generated, longs[1].generated, short.generated] == ref
+    s = eng.summary()
+    assert s["tiered"] is True
+    assert s["kv_demoted_bytes"] > 0
+    assert s["kv_prefetched_bytes"] == s["kv_demoted_bytes"]
+    _assert_drained(eng, ledger)
+
+
+def test_slow_prefetch_counts_misses_still_identical(dense):
+    """prefetch_ticks=3: the scheduler wants the lane before the transfer
+    lands, so the wait is a recorded miss — and costs only latency, never
+    tokens."""
+    cfg, params = dense
+    ledger = DeviceMemory(-1, budget_bytes=10**9)
+    eng, longs, short = _run_preempt_scenario(cfg, params, ledger,
+                                              prefetch_ticks=3)
+    eng.run()
+    assert all(r.status is Status.FINISHED for r in longs + [short])
+    ref = _sequential(cfg, params,
+                      [(_prompt(cfg, 1), 16), (_prompt(cfg, 2), 16),
+                       (_prompt(cfg, 3), 4)])
+    assert [longs[0].generated, longs[1].generated, short.generated] == ref
+    assert eng.summary()["prefetch_misses"] >= 1
+    _assert_drained(eng, ledger)
+
+
+def test_cancel_while_demoted_settles_everything(dense):
+    cfg, params = dense
+    ledger = DeviceMemory(-1, budget_bytes=10**9)
+    eng, longs, short = _run_preempt_scenario(cfg, params, ledger)
+    victim = next(r for r in longs if r.status is Status.PREEMPTED)
+    assert eng.backend.demoted_blocks(victim) > 0
+    assert eng.cancel(victim.request_id)
+    eng.run()
+    assert victim.status is Status.CANCELLED
+    assert eng.n_resumed == 0
+    _assert_drained(eng, ledger)
+
+
+def test_preempted_ttft_estimate_includes_resume_cost(dense):
+    """Satellite 1: min_slack_seconds charges a demoted victim the
+    prefetch + re-admission latency, so the SLO router sees the true
+    time-to-next-token of a parked request."""
+    cfg, params = dense
+    ledger = DeviceMemory(-1, budget_bytes=10**9)
+    eng, longs, short = _run_preempt_scenario(cfg, params, ledger)
+    victim = next(r for r in longs if r.status is Status.PREEMPTED)
+    assert eng.resume_cost_seconds(victim) > 0.0
+    # an active request pays no resume cost
+    active = next(r for r in longs + [short]
+                  if r.status is Status.RUNNING)
+    assert eng.resume_cost_seconds(active) == 0.0
+    eng.run()
+    _assert_drained(eng, ledger)
+
+
+def test_untiered_engine_rejects_nothing_changes(dense):
+    """tiered_kv=False is the exact PR-7 engine: no host pool, no demote
+    hooks, same preempt/resume tokens."""
+    cfg, params = dense
+    eng = _paged(cfg, params, capacity=2,
+                 ledger=DeviceMemory(-1, budget_bytes=10**9))
+    assert eng.backend.host_pool is None
+    assert eng.backend.tiered is False
+    assert "host_pool_blocks" not in eng.summary()
+
+
+def test_bad_prefetch_ticks_rejected(dense):
+    cfg, params = dense
+    with pytest.raises(ValueError, match="prefetch_ticks"):
+        _paged(cfg, params, tiered=True, prefetch_ticks=0,
+               ledger=DeviceMemory(-1, budget_bytes=10**9))
+
+
+# ---------------------------------------------------------------------------
+# property: byte reconciliation across random interleavings
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10_000))
+def test_property_interleavings_reconcile(seed):
+    """Random preempt/demote/prefetch/cancel/step interleavings: the
+    ledger's device + host terms reconcile with the engine's pools at
+    every step, and a full drain restores the baseline."""
+    cfg, params = _dense()
+    rng = np.random.RandomState(seed)
+    ledger = DeviceMemory(-1, budget_bytes=10**9)
+    eng = _paged(cfg, params, capacity=2, ledger=ledger, tiered=True,
+                 prefetch_ticks=int(rng.randint(1, 4)))
+    reqs = [eng.submit(_prompt(cfg, int(rng.randint(100))),
+                       int(rng.randint(4, 14)),
+                       priority=["low", "normal", "high"][i % 3])
+            for i in range(4)]
+    for _ in range(30):
+        op = rng.randint(4)
+        if op == 0:
+            eng.step()
+        elif op == 1:
+            # demote any resident parked snapshot by hand
+            parked = [r for r in reqs if r.status is Status.PREEMPTED]
+            if parked:
+                eng.backend.demote_parked(parked[int(rng.randint(
+                    len(parked)))])
+        elif op == 2:
+            # cancel someone (possibly mid-demotion / mid-prefetch)
+            live = [r for r in reqs if r.status in (Status.QUEUED,
+                                                    Status.RUNNING,
+                                                    Status.PREEMPTED)]
+            if live:
+                eng.cancel(live[int(rng.randint(len(live)))].request_id)
+        else:
+            # a high-priority arrival to force preemption traffic
+            if len(reqs) < 8:
+                reqs.append(eng.submit(_prompt(cfg, int(rng.randint(100))),
+                                       4, priority="high",
+                                       deadline_ms=60_000.0))
+        _reconcile(eng, ledger)
+    eng.run()
+    _reconcile(eng, ledger)
+    _assert_drained(eng, ledger)
+    assert all(r.status in (Status.FINISHED, Status.CANCELLED,
+                            Status.REJECTED) for r in reqs)
+
+
+# ---------------------------------------------------------------------------
+# weight residency: ShardResidentParams + cross-model LRU
+# ---------------------------------------------------------------------------
+
+PART_BUDGET = 3_200_000     # partitions the smoke model into 2 shards
+HOT_CAP = 3_000_000         # pins exactly one ~2.75 MB shard
+
+
+def _shard_setup(ledger_budget, *, hot_bytes=None, name=None,
+                 ledger=None):
+    """A 2-shard host store + ShardResidentParams: ``hot_bytes=HOT_CAP``
+    pins the first shard and streams the second (partial residency)."""
+    from repro.core import shard_graph as sg
+    from repro.core import partitioner as pt
+    from repro.core.spilling import HostModelStore
+    from repro.optim import optimizers as opt
+    from repro.serving.residency import ShardResidentParams
+    cfg, params = _dense()
+    shard_plan = sg.build_plan(cfg)
+    host = sg.prepare_host_params(cfg, jax.tree.map(np.asarray, params))
+    partition = pt.partition(cfg, host, shard_plan,
+                             budget_bytes=PART_BUDGET, batch=1,
+                             seq=MAX_SEQ, train=False)
+    store = HostModelStore(cfg, shard_plan, params,
+                           opt.OptimizerConfig(grad_clip=0.0), partition)
+    led = ledger or DeviceMemory(-1, budget_bytes=ledger_budget)
+    src = ShardResidentParams(cfg, store, partition, led,
+                              hot_bytes=hot_bytes, name=name)
+    return cfg, params, partition, led, src
+
+
+def test_shard_residency_streams_and_reconciles():
+    cfg, params, partition, led, src = _shard_setup(6 * 10**6,
+                                                    hot_bytes=HOT_CAP)
+    assert src.n_shards > 1, "budget did not force a multi-shard partition"
+    assembled = src.begin_tick()
+    # mid-tick: hot pins + the in-flight streamed shard charge the ledger
+    assert led.weight_resident_bytes == src.hot_resident_bytes
+    assert led.used_bytes() <= led.budget
+    src.end_tick()
+    assert led.resident_bytes == 0 and led.buffered_bytes == 0
+    # partial residency: the hot cap pins one shard, streams the other
+    assert 0 < src.n_hot_shards < src.n_shards
+    assert 0 < src.hot_resident_bytes < src.total_bytes
+    assert src.summary()["n_stream_promotions"] > 0
+    # the assembled tree is numerically the full model
+    ref = jax.tree.leaves(params)[0]
+    got = jax.tree.leaves(assembled)[0]
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+
+def test_shard_residency_decode_token_identity():
+    """Decoding with only part of the model pinned produces exactly the
+    tokens of fully-resident decode."""
+    cfg, params, partition, led, src = _shard_setup(6 * 10**6,
+                                                    hot_bytes=HOT_CAP)
+    eng = InferenceEngine(cfg, None, capacity=1, max_seq=MAX_SEQ,
+                          backend="paged", block_size=8, policy="fifo",
+                          param_source=src)
+    r = eng.submit(_prompt(cfg, 5), 8)
+    eng.run()
+    assert r.status is Status.FINISHED
+    ref = _sequential(cfg, params, [(_prompt(cfg, 5), 8)])
+    assert r.generated == ref[0]
+    # residency traffic is visible in the engine summary
+    s = eng.summary()
+    assert s["residency"] == "shard"
+    assert s["n_hot_shards"] < s["n_shards"]
+    assert s["stream_promoted_bytes"] > 0
+    # between ticks only the hot set stays charged
+    assert led.weight_resident_bytes == src.hot_resident_bytes
+    assert led.resident_bytes == 0 and led.buffered_bytes == 0
+
+
+def test_pressure_demotes_lru_model():
+    """Two models under one ledger: reserving bytes that do not fit
+    demotes the least-recently-served model's pinned shards first."""
+    from repro.serving.residency import ResidencyCoordinator
+    budget = 12 * 10**6     # fits both models' ~5.5 MB of pinned weights
+    led = DeviceMemory(-1, budget_bytes=budget)
+    coord = ResidencyCoordinator(led)
+    _, _, _, _, a = _shard_setup(budget, ledger=led, name="model-a")
+    _, _, _, _, b = _shard_setup(budget, ledger=led, name="model-b")
+    coord.register(a)
+    coord.register(b)
+    a.begin_tick()
+    a.end_tick()
+    b.begin_tick()
+    b.end_tick()            # LRU order now: a older than b
+    a_before, b_before = a.hot_resident_bytes, b.hot_resident_bytes
+    assert a_before > 0 and b_before > 0
+    # a KV reservation that cannot fit beside both pins: pressure fires
+    need = budget - led.used_bytes() + a_before // 2
+    assert led.reserve_kv(need)
+    # the LRU model (a) demoted first; b stays warm
+    assert a.hot_resident_bytes < a_before
+    assert b.hot_resident_bytes == b_before
+    assert led.used_bytes() <= led.budget
+    led.release_kv(need)
+
+
+def test_relieve_never_demotes_mid_tick():
+    """A model mid-serve-tick must keep its pins: pressure skips it."""
+    cfg, params, partition, led, src = _shard_setup(6 * 10**6,
+                                                    hot_bytes=HOT_CAP)
+    src.begin_tick()
+    pinned = src.hot_resident_bytes
+    freed = src.demote(pinned or 1)
+    assert freed == 0                      # guarded by _in_tick
+    assert src.hot_resident_bytes == pinned
+    src.end_tick()
+    freed = src.demote(pinned or 1)        # after the tick: demotable
+    assert freed == pinned
+
+
+def test_weight_reservation_over_release_raises():
+    led = DeviceMemory(-1, budget_bytes=10**6)
+    assert led.reserve_weights(1000)
+    with pytest.raises(RuntimeError, match="release_weights"):
+        led.release_weights(2000)
+    led.release_weights(1000)
+    assert led.weight_resident_bytes == 0
+
+
+# ---------------------------------------------------------------------------
+# ledger unit properties: demote/prefetch/drop bookkeeping
+# ---------------------------------------------------------------------------
+
+def test_ledger_kv_tier_roundtrip():
+    led = DeviceMemory(-1, budget_bytes=10_000)
+    assert led.reserve_kv(8_000)
+    led.demote_kv(6_000)
+    assert led.kv_reserved_bytes == 2_000
+    assert led.host_kv_bytes == 6_000
+    assert led.used_bytes() == 2_000       # host bytes are NOT device bytes
+    # prefetch pulls them back under the budget check
+    assert led.prefetch_kv(6_000)
+    assert led.kv_reserved_bytes == 8_000 and led.host_kv_bytes == 0
+    led.demote_kv(8_000)
+    led.drop_host_kv(8_000)                # cancel while parked
+    assert led.host_kv_bytes == 0 and led.kv_reserved_bytes == 0
+    assert led.stats.kv_demoted_bytes == 14_000
+    assert led.stats.kv_prefetched_bytes == 6_000
+
+
+def test_ledger_prefetch_respects_budget_and_pressure():
+    led = DeviceMemory(-1, budget_bytes=10_000)
+    assert led.reserve_kv(10_000)
+    led.demote_kv(4_000)
+    # someone else takes the freed bytes: prefetch must fail, not deadlock
+    assert led.reserve_kv(4_000)
+    assert not led.prefetch_kv(4_000)
+    assert led.host_kv_bytes == 4_000      # still parked, nothing lost
+    led.release_kv(4_000)
+    assert led.prefetch_kv(4_000)
+    assert led.host_kv_bytes == 0
+
+
+def test_ledger_host_over_release_raises():
+    led = DeviceMemory(-1, budget_bytes=10_000)
+    assert led.reserve_kv(2_000)
+    led.demote_kv(2_000)
+    with pytest.raises(RuntimeError, match="host"):
+        led.prefetch_kv(3_000)
+    with pytest.raises(RuntimeError, match="host"):
+        led.drop_host_kv(3_000)
+    led.drop_host_kv(2_000)
+
+
+# ---------------------------------------------------------------------------
+# session surface: train-then-serve + shard-resident cold serve
+# ---------------------------------------------------------------------------
+
+def _synth_loader(cfg, n=4, batch=2, seq=16):
+    rng = np.random.RandomState(0)
+    out = []
+    for _ in range(n):
+        toks = rng.randint(0, cfg.vocab_size, (batch, seq)).astype(np.int32)
+        out.append({"tokens": toks, "labels": toks})
+    return out
+
+
+def test_session_train_then_serve_promotion(dense):
+    """Satellite 2: a finished TrainJob's weights flow into a ServeJob in
+    the same session, served shard-granular, token-identical to decoding
+    the trained store by hand."""
+    from repro.api.jobs import ServeJob, TrainJob
+    from repro.api.session import Session
+    from repro.core.sharp import HydraConfig
+    cfg, params = dense
+    sess = Session(HydraConfig(n_devices=1, device_budget_bytes=10**9))
+    tid = sess.submit(TrainJob(cfg, dataloader=_synth_loader(cfg), lr=1e-3,
+                               epochs=1, steps_per_epoch=2, seed=0,
+                               batch=2, seq=16))
+    sid = sess.submit(ServeJob(cfg, params_from=tid, residency="shard",
+                               backend="paged", max_seq=MAX_SEQ,
+                               capacity=2, block_size=8))
+    sess.run()
+    r = sess.submit_request(sid, _prompt(cfg, 2), 6)
+    sess.drain_serving()
+    assert r.status is Status.FINISHED
+    trained = jax.tree.map(np.asarray,
+                           sess._train_execs[tid].store.model_params())
+    ref = _sequential(cfg, trained, [(_prompt(cfg, 2), 6)])
+    assert r.generated == ref[0]
+    # plan meta records the tiering spec
+    meta = sess._serve_meta(sess._jobs[sid], cold=True)
+    assert meta["residency"] == "shard"
+    assert meta["params_from"] == tid
+
+
+def test_session_params_from_before_training_refused(dense):
+    from repro.api.jobs import ServeJob, TrainJob
+    from repro.api.session import Session
+    from repro.core.sharp import HydraConfig
+    cfg, _ = dense
+    sess = Session(HydraConfig(n_devices=1, device_budget_bytes=10**9))
+    tid = sess.submit(TrainJob(cfg, dataloader=_synth_loader(cfg),
+                               epochs=1, steps_per_epoch=2, batch=2,
+                               seq=16))
+    sid = sess.submit(ServeJob(cfg, params_from=tid, max_seq=MAX_SEQ))
+    with pytest.raises(RuntimeError, match="has not finished training"):
+        sess.submit_request(sid, _prompt(cfg, 1), 4)
+
+
+def test_session_validates_tiering_specs(dense):
+    from repro.api.jobs import ServeJob
+    from repro.api.session import Session
+    from repro.core.sharp import HydraConfig
+    cfg, _ = dense
+    for bad, msg in ((dict(residency="shard"), "cold"),
+                     (dict(residency="page"), "residency"),
+                     (dict(tiered_kv=True), "paged"),
+                     (dict(residency="model", hot_bytes=5), "hot_bytes"),
+                     (dict(backend="paged", tiered_kv=True,
+                           prefetch_ticks=0), "prefetch_ticks"),
+                     (dict(params_from="train-99"), "params_from")):
+        with pytest.raises(ValueError, match=msg):
+            Session(HydraConfig()).submit(ServeJob(cfg, **bad))
