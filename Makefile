@@ -27,6 +27,10 @@
 #                      host-DRAM KV demotion admits strictly more live
 #                      requests under byte-scarce preemption — both
 #                      token-identical, ledger drained to baseline
+#   make profile-smoke - machine profiler: capped quick probes, persist
+#                      MachineFacts JSON, then plan the same job with and
+#                      without the profile (self-asserting: provenance
+#                      differs, executed tokens byte-identical)
 #   make docs-check  - docs lint: relative links + [[refs]] resolve and
 #                      fenced python blocks compile (docs/*.md, README.md)
 #   make examples-smoke - run all four examples/*.py on their tiny configs
@@ -36,7 +40,8 @@ PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export PYTHONPATH
 
 .PHONY: test test-fast bench-smoke plan-smoke paged-smoke backend-smoke \
-    spec-smoke http-smoke slo-smoke tier-smoke docs-check examples-smoke
+    spec-smoke http-smoke slo-smoke tier-smoke profile-smoke docs-check \
+    examples-smoke
 
 test:
 	$(PY) -m pytest -x -q
@@ -71,6 +76,9 @@ slo-smoke:
 
 tier-smoke:
 	$(PY) -m benchmarks.bench_serving --tiered
+
+profile-smoke:
+	$(PY) -m repro.profiler --smoke
 
 docs-check:
 	$(PY) scripts/docs_check.py

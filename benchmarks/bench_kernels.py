@@ -1,9 +1,16 @@
 """Kernel micro-benchmarks: XLA reference path wall-times on CPU (the
 Pallas kernels themselves target TPU; interpret-mode timing is not a perf
-signal, so what we measure here is the oracle path the dry-run lowers)."""
+signal, so what we measure here is the oracle path the dry-run lowers).
+
+Besides the CSV rows, ``run()`` writes ``results/bench_kernels.json`` —
+per-kernel throughput (rows/s) and the Pallas-vs-reference fallback delta
+measured by ``repro.profiler.probes.probe_kernels`` — so dashboards and
+the profiler share one measurement path."""
 
 from __future__ import annotations
 
+import json
+import os
 import time
 
 import jax
@@ -24,7 +31,7 @@ def _time(fn, *args, iters=5):
     return (time.perf_counter() - t0) / iters * 1e6
 
 
-def run():
+def run(json_out: str = "results/bench_kernels.json"):
     key = jax.random.PRNGKey(0)
     # attention oracle
     b, s, nh, nkv, hd = 1, 512, 8, 2, 64
@@ -58,3 +65,17 @@ def run():
     fn = jax.jit(ref.swiglu_ref)
     us = _time(fn, xm, wg, wu, wd)
     emit("kernel_swiglu_ref", us, f"gflops={6 * m * d * f / us / 1e3:.2f}")
+
+    # machine-readable pass: Pallas-vs-reference via the profiler's probes
+    # (same numbers a MachineFacts profile would carry)
+    from repro.profiler.probes import probe_kernels
+    kernels = probe_kernels(quick=True)
+    for name, row in sorted(kernels.items()):
+        if not isinstance(row, dict) or "fallback_delta" not in row:
+            continue
+        emit(f"kernel_{name}_pallas", row["kernel_us"],
+             f"fallback_delta={row['fallback_delta']:.3f}")
+    os.makedirs(os.path.dirname(json_out) or ".", exist_ok=True)
+    with open(json_out, "w") as f:
+        json.dump({"kernels": kernels}, f, indent=1, sort_keys=True)
+    print(f"# kernel json -> {json_out}")

@@ -114,10 +114,13 @@ class ServeJob(JobSpec):
     paged: bool = False                         # legacy alias: backend="paged"
     block_size: int = 16                        # KV rows per physical block
     prefix_share: bool = True                   # COW prefix sharing (paged)
-    draft_model: Optional[Any] = None           # ArchConfig (backend="spec")
+    # "auto" lets Session.submit pick the draft and/or k from the machine
+    # profile's measured draft-vs-target step times (repro.profiler);
+    # resolved before validation, recorded in plan meta as ``draft_auto``
+    draft_model: Optional[Any] = None           # ArchConfig|"auto" (spec)
     draft_params: Optional[Any] = None          # init'd from draft_seed if None
     draft_seed: int = 0
-    draft_k: int = 4                            # draft tokens per spec round
+    draft_k: Any = 4                            # int | "auto"
     spec_inner: Optional[str] = None            # "slot" (default) | "paged"
     # HTTP front-end fields (serving/server.py): whether the model offers
     # SSE token streaming over /v1 endpoints, and an optional extra route
@@ -253,6 +256,12 @@ class ServeJob(JobSpec):
         when the draft side of a spec job can never execute.  (The TARGET
         lacking ``spec_draftable`` is a planned fallback, not an error;
         a bad DRAFT is a configuration mistake with no fallback.)"""
+        if self.draft_model == "auto" or self.draft_k == "auto":
+            raise ValueError(
+                "draft_model/draft_k='auto' are resolved by Session.submit "
+                "from the machine profile (repro.profiler CostModel picks "
+                "them from draft-vs-target step times); outside a Session "
+                "pass an explicit ArchConfig draft_model and int draft_k")
         if self.draft_model is None:
             raise ValueError(
                 "backend='spec' needs a draft member model: pass "

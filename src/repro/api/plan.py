@@ -87,6 +87,11 @@ class Plan:
     hydra: dict                                 # HydraConfig fields
     jobs: list[JobPlan] = field(default_factory=list)
     schedule: dict = field(default_factory=dict)
+    # which cost facts priced which decision (repro.profiler.CostModel
+    # provenance_summary): {"profile": ... | None, "n_measured", "queries"}
+    # — the *why* behind every estimate above, so `dryrun --plan --profile`
+    # is a real what-if tool
+    provenance: dict = field(default_factory=dict)
     version: int = 1
 
     def job(self, job_id: str) -> JobPlan:
@@ -102,6 +107,7 @@ class Plan:
             "version": self.version,
             "hydra": self.hydra,
             "schedule": self.schedule,
+            "provenance": self.provenance,
             "jobs": [dataclasses.asdict(j) for j in self.jobs],
         }, **kw)
 
@@ -110,7 +116,9 @@ class Plan:
         d = json.loads(text)
         if d.get("version") != 1:
             raise ValueError(f"unsupported plan version {d.get('version')!r}")
+        # .get: pre-profiler plans on disk carry no provenance block
         return cls(hydra=d["hydra"], schedule=d["schedule"],
+                   provenance=d.get("provenance", {}),
                    jobs=[JobPlan(**j) for j in d["jobs"]],
                    version=d["version"])
 
@@ -132,6 +140,11 @@ class Plan:
             "est_makespan_s": self.schedule.get("est_makespan_s"),
             "jobs": {},
         }
+        if self.provenance:
+            out["cost_source"] = ("measured"
+                                  if self.provenance.get("n_measured")
+                                  else "analytic")
+            out["n_measured_queries"] = self.provenance.get("n_measured", 0)
         for jp in self.jobs:
             rec: dict[str, Any] = {"kind": jp.kind, "arch": jp.arch["name"]}
             if jp.partition is not None:

@@ -43,6 +43,8 @@ from repro.core import shard_graph as sg
 from repro.core.sharp import (HydraConfig, ModelExec, RunReport,
                               ShardFunctions, SharpExecutor, UnitEvent)
 from repro.core.spilling import DeviceMemory, HostModelStore, to_device
+from repro.profiler import (CostModel, MachineFacts, load_facts)
+from repro.profiler import DEFAULT_PATH as _PROFILE_PATH
 
 
 class JobState(enum.Enum):
@@ -81,8 +83,32 @@ class _EvalExec:
 class Session:
     """One resource manager, many workloads (train / serve / eval / spmd)."""
 
-    def __init__(self, hydra_cfg: Optional[HydraConfig] = None):
+    def __init__(self, hydra_cfg: Optional[HydraConfig] = None, *,
+                 profile: Any = "auto"):
         self.hc = (hydra_cfg or HydraConfig()).validate()
+        # measured-cost planning (repro.profiler): ``profile`` is "auto"
+        # (load results/profile_latest.json when present and fresh), None
+        # (force analytic pricing), a path, or a MachineFacts.  The
+        # CostModel prices partitions, schedule estimates, serve TTFT
+        # priors, and spec-draft auto-pick; with no facts it reproduces
+        # the historical analytic constants byte-identically and tags
+        # every answer source="analytic" in plan provenance.
+        allow_stale = False
+        if profile is None:
+            facts = None
+        elif isinstance(profile, MachineFacts):
+            # an explicit facts object is a deliberate choice — the what-if
+            # case prices against another machine's profile on purpose
+            facts, allow_stale = profile, True
+        elif profile == "auto":
+            facts = load_facts(_PROFILE_PATH, missing_ok=True)
+        elif isinstance(profile, str):
+            facts = load_facts(profile)
+        else:
+            raise TypeError(
+                f"profile={profile!r}: pass 'auto', None, a profile JSON "
+                "path, or a MachineFacts")
+        self.cost = CostModel(facts, allow_stale=allow_stale)
         # session-owned device ledgers: SHARP promotions, double-buffers,
         # and paged serving KV reservations all charge these same objects,
         # so one byte budget arbitrates mixed train+serve residency
@@ -130,6 +156,21 @@ class Session:
             raise TypeError(f"not a JobSpec: {type(job).__name__}")
         name = None
         if isinstance(job, ServeJob):       # validate before registering
+            if job.backend == "spec" and (job.draft_model == "auto"
+                                          or job.draft_k == "auto"):
+                # measured-cost backend selection: pick draft_model/draft_k
+                # from draft-vs-target step times BEFORE draft validation
+                # (the carried PR 5 follow-on; analytic priors when
+                # unprofiled).  The choice record lands in plan meta.
+                choice = self.cost.draft_plan(
+                    job.cfg,
+                    draft_cfg=(None if job.draft_model == "auto"
+                               else job.draft_model),
+                    draft_k=(None if job.draft_k == "auto"
+                             else job.draft_k))
+                job.draft_model = choice.draft_cfg
+                job.draft_k = choice.draft_k
+                job._draft_auto = choice.record     # read by _serve_meta
             job.resolved_buckets()          # fail fast on a bad bucket spec
             job.requested_backend()         # ... and on a bad backend name
             job.resolved_policy()           # ... and on a bad policy/knobs
@@ -259,6 +300,9 @@ class Session:
                 continue
             plan.jobs.append(self._plan_job(jid, job))
         plan.schedule = self._schedule_estimate()
+        # the *why*: which measured facts (or analytic constants) priced
+        # the partitions, schedule estimate, serve priors, and draft picks
+        plan.provenance = self.cost.provenance_summary()
         return plan
 
     def _hydra_dict(self) -> dict:
@@ -332,7 +376,16 @@ class Session:
                 # tiered memory (ROADMAP item 3): weight residency + the
                 # train job this serve job inherits weights from, if any
                 "residency": job.residency,
-                "params_from": job.params_from}
+                "params_from": job.params_from,
+                # measured-cost serving prior: the per-token seconds the
+                # engine's SLO slack/TTFT math starts from, and where the
+                # number came from (repro.profiler)
+                "cost": {
+                    "tok_seconds_est": self.cost.tok_seconds(
+                        job.cfg, job.max_seq),
+                    "source": ("measured"
+                               if self.cost.has_decode_facts(job.cfg)
+                               else "analytic")}}
         if job.residency == "shard":
             meta["hot_bytes"] = job.hot_bytes
         meta["paged"] = backend == "paged"
@@ -357,6 +410,9 @@ class Session:
                 spec_inner=job.effective_spec_inner(),
                 draft_model=job.draft_model.name,
                 draft_k=job.draft_k,
+                # non-None iff the session auto-picked the draft spec from
+                # (measured or analytic) step times at submit
+                draft_auto=getattr(job, "_draft_auto", None),
                 # draft state rides the same ledger as the target's KV
                 # (sized for max_seq + the k-row verify headroom)
                 draft_state_bytes=draft_spec.decode_state_bytes(
@@ -555,7 +611,8 @@ class Session:
             cfg, host, shard_plan,
             budget_bytes=budget,
             batch=batch, seq=seq, oracle=self.hc.partition_oracle,
-            buffer_frac=self.hc.buffer_frac, train=train)
+            buffer_frac=self.hc.buffer_frac, train=train,
+            cost_model=self.cost)
         return shard_plan, partition
 
     def _build_train(self, jid: str, job: TrainJob, planned) -> ModelExec:
@@ -627,6 +684,13 @@ class Session:
         kw: dict[str, Any] = {}
         if param_source is not None:
             kw.update(param_source=param_source)
+        if self.cost.has_decode_facts(job.cfg):
+            # measured per-token prior: min_slack_seconds / TTFT estimates
+            # start from this host's probed decode rate instead of the
+            # analytic 2e-10·params constant (the EMA still takes over
+            # after the first real step)
+            kw.update(tok_seconds_prior=self.cost.tok_seconds(
+                job.cfg, job.max_seq))
         effective = job.effective_backend()
         if effective == "spec":
             from repro.models import api as mapi

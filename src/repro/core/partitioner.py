@@ -203,7 +203,8 @@ def partition(cfg, params, plan: sg.ShardPlan, *,
               buffer_frac: float = 0.05,
               train: bool = True,
               measure: bool = False,
-              measure_batch=None) -> PartitionResult:
+              measure_batch=None,
+              cost_model=None) -> PartitionResult:
     """Greedy prefix packing of segments into shards under ``budget_bytes``.
 
     ``buffer_frac`` reserves the double-buffer loading zone (paper §4.6:
@@ -235,23 +236,38 @@ def partition(cfg, params, plan: sg.ShardPlan, *,
         lo = hi
 
     result = PartitionResult(shards, shared_bytes, budget_bytes, oracle)
-    _assign_runtimes(cfg, params, plan, result)
+    _assign_runtimes(cfg, params, plan, result,
+                     cost_model=cost_model, batch=batch, seq=seq)
     return result
 
 
-def _assign_runtimes(cfg, params, plan, result):
+def _assign_runtimes(cfg, params, plan, result, *, cost_model=None,
+                     batch: int = 2, seq: int = 128):
     """Initial runtime estimates ∝ flops_weight × param bytes.
 
     The SHARP executor's pilot pass (first mini-batch) overwrites these with
     *measured* per-shard times — a dynamic refinement of the paper's static
     pilot run; Sharded-LRTF reads whichever is current.
+
+    With a ``repro.profiler.CostModel`` the same per-shard weights price
+    against a *measured* whole-model forward instead of the analytic
+    1e-12 s/weighted-byte prior; the unprofiled CostModel reproduces the
+    analytic numbers byte-identically (and records either way in its
+    provenance).
     """
-    for shard in result.shards:
-        w = sum(plan.segments[i].flops_weight
-                * max(1, sg_param_bytes(params, plan.segments[i]))
-                for i in range(shard.seg_lo, shard.seg_hi))
-        shard.fwd_runtime = w * 1e-12
-        shard.bwd_runtime = 2 * shard.fwd_runtime
+    weights = [
+        sum(plan.segments[i].flops_weight
+            * max(1, sg_param_bytes(params, plan.segments[i]))
+            for i in range(shard.seg_lo, shard.seg_hi))
+        for shard in result.shards]
+    if cost_model is not None:
+        runtimes = cost_model.shard_runtimes(cfg, weights,
+                                             batch=batch, seq=seq)
+    else:
+        runtimes = [(w * 1e-12, 2 * (w * 1e-12)) for w in weights]
+    for shard, (fwd, bwd) in zip(result.shards, runtimes):
+        shard.fwd_runtime = fwd
+        shard.bwd_runtime = bwd
         shard.est_runtime = shard.fwd_runtime + shard.bwd_runtime
 
 

@@ -241,9 +241,18 @@ def plan_dryrun(args) -> dict:
 
     archs = [a.strip() for a in (args.arch or "qwen3-0.6b").split(",")
              if a.strip()]
+    # what-if pricing: --profile plans against another machine's measured
+    # facts (loaded without the freshness gate — a foreign fingerprint is
+    # the point); the default (None, not "auto") pins analytic pricing so
+    # the smoke plan is byte-stable regardless of any cached local profile
+    profile = None
+    if getattr(args, "profile", None):
+        from repro.profiler import load_facts
+        profile = load_facts(args.profile, require_fresh=False)
     session = Session(HydraConfig(
         n_devices=args.n_devices,
-        device_budget_bytes=int(args.budget_mb * 10**6)))
+        device_budget_bytes=int(args.budget_mb * 10**6)),
+        profile=profile)
     for i, arch in enumerate(archs):
         cfg = get_config(arch, smoke=args.smoke)
         session.submit(TrainJob(cfg, _plan_loader(cfg, 2, 64, seed=i),
@@ -283,6 +292,9 @@ def main():
                     help="(--plan) virtual device count")
     ap.add_argument("--budget-mb", type=float, default=18,
                     help="(--plan) per-device budget, MB")
+    ap.add_argument("--profile", default=None,
+                    help="(--plan) MachineFacts JSON to price the plan "
+                    "with — the what-if tool; default analytic")
     args = ap.parse_args()
 
     if args.plan:

@@ -35,7 +35,12 @@ def make_debug_mesh(n_data: int = 2, n_model: int = 2):
     return make_mesh((n_data, n_model), ("data", "model"))
 
 
-# v5e hardware constants (roofline)
-PEAK_FLOPS_BF16 = 197e12        # per chip
-HBM_BW = 819e9                  # bytes/s per chip
-ICI_BW = 50e9                   # bytes/s per link
+# v5e hardware constants (roofline) — the single source of truth is the
+# MachineFacts schema (repro/profiler/facts.py): a measured profile may
+# override them, and these module names re-export the analytic defaults
+# so unprofiled consumers see byte-identical values.  facts.py is pure
+# data + stdlib, so this import still never touches jax device state.
+from repro.profiler.facts import HBM_BW  # noqa: E402,F401  bytes/s per chip
+from repro.profiler.facts import ICI_BW  # noqa: E402,F401  bytes/s per link
+from repro.profiler.facts import \
+    PEAK_FLOPS_BF16  # noqa: E402,F401  per chip

@@ -29,7 +29,7 @@ import json
 from typing import Optional
 
 from repro.configs import ASSIGNED_ARCHS, INPUT_SHAPES, get_config
-from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+from repro.profiler.facts import hardware_constants, load_facts
 from repro.training.train_loop import decode_window_for
 
 CHIPS = {"16x16": 256, "2x16x16": 512}
@@ -157,7 +157,11 @@ def lever_for(dominant: str, cfg, shape) -> str:
             "overlap collectives with compute, or move to bf16 gathers")
 
 
-def analyze(records: list[dict]) -> list[dict]:
+def analyze(records: list[dict], facts=None) -> list[dict]:
+    """``facts`` (a ``repro.profiler.MachineFacts``) overrides the analytic
+    hardware constants with this machine's measured ones; None preserves
+    the historical analytic table byte-identically."""
+    hw = hardware_constants(facts)
     out = []
     for rec in records:
         if rec.get("status") != "ok":
@@ -167,10 +171,10 @@ def analyze(records: list[dict]) -> list[dict]:
         shape = INPUT_SHAPES[rec["shape"]]
         chips = CHIPS[rec["mesh"]]
         a = analytic_step(cfg, shape)
-        t_compute = a["flops"] / (chips * PEAK_FLOPS_BF16)
-        t_memory = a["hbm_bytes"] / (chips * HBM_BW)
+        t_compute = a["flops"] / (chips * hw["peak_flops_bf16"])
+        t_memory = a["hbm_bytes"] / (chips * hw["hbm_bw"])
         coll_bytes = rec["collectives"].get("total", 0)   # per device
-        t_coll = coll_bytes / ICI_BW
+        t_coll = coll_bytes / hw["ici_bw"]
         terms = {"compute": t_compute, "memory": t_memory,
                  "collective": t_coll}
         dominant = max(terms, key=terms.get)
@@ -181,6 +185,7 @@ def analyze(records: list[dict]) -> list[dict]:
                 "t_memory_s": t_memory,
                 "t_collective_s": t_coll,
                 "dominant": dominant,
+                "hw_source": hw["source"],
                 "model_flops": a["model_flops"],
                 "total_flops": a["flops"],
                 "useful_ratio": a["model_flops"] / max(a["flops"], 1),
@@ -214,9 +219,14 @@ def main():
     ap.add_argument("--dryrun", default="results/dryrun.jsonl")
     ap.add_argument("--out", default="results/roofline.json")
     ap.add_argument("--markdown", default="results/roofline.md")
+    ap.add_argument("--profile", default=None,
+                    help="MachineFacts JSON whose measured hardware "
+                    "constants replace the analytic v5e table")
     args = ap.parse_args()
     records = [json.loads(l) for l in open(args.dryrun)]
-    rows = analyze(records)
+    facts = load_facts(args.profile, require_fresh=False) \
+        if args.profile else None
+    rows = analyze(records, facts=facts)
     with open(args.out, "w") as f:
         json.dump(rows, f, indent=1)
     md = to_markdown(rows)

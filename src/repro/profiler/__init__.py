@@ -1,0 +1,31 @@
+"""``repro.profiler`` — measure the machine, price the plan.
+
+Probes (``probes.py``) measure host↔device bandwidth, per-family
+prefill/decode step latency, and kernel-vs-fallback throughput; the
+results persist as a versioned ``MachineFacts`` JSON (``facts.py``,
+``results/profile_latest.json`` by default); ``CostModel`` (``cost.py``)
+answers the planner's pricing queries from the measured grids and falls
+back to the historical analytic constants — byte-identically — when no
+(fresh) profile exists.
+
+    python -m repro.profiler            # probe + persist
+    Session(..., profile="auto")        # plan against the cached facts
+
+``build_facts`` is imported lazily: the probes pull in the serving stack,
+which ``launch/mesh.py`` (a facts consumer) must never do at import time.
+"""
+
+from repro.profiler.cost import CostModel, DraftChoice
+from repro.profiler.facts import (ANALYTIC_HARDWARE, DEFAULT_PATH,
+                                  MachineFacts, StaleProfileWarning,
+                                  current_fingerprint, hardware_constants,
+                                  load_facts)
+
+__all__ = ["ANALYTIC_HARDWARE", "CostModel", "DEFAULT_PATH", "DraftChoice",
+           "MachineFacts", "StaleProfileWarning", "build_facts",
+           "current_fingerprint", "hardware_constants", "load_facts"]
+
+
+def build_facts(**kw):
+    from repro.profiler.probes import build_facts as _build
+    return _build(**kw)

@@ -1,0 +1,145 @@
+"""CLI: ``python -m repro.profiler`` — probe this machine, persist facts.
+
+    python -m repro.profiler                      # full probes -> results/
+    python -m repro.profiler --quick              # capped CI-sized probes
+    python -m repro.profiler --show               # summarize cached profile
+    python -m repro.profiler --smoke              # the `make profile-smoke`
+        A/B: quick probes, then plan ONE workload twice (without and with
+        the fresh facts), assert the plans' provenance differs (analytic
+        vs measured pricing) while both executions stay token-identical —
+        measured costs change estimates and explanations, never results.
+
+The smoke prints one JSON line last (CI re-asserts from it, the repo's
+self-asserting smoke pattern).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from repro.profiler import DEFAULT_PATH, MachineFacts, build_facts
+
+
+def _smoke(out_path: str) -> dict:
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.api import ServeJob, Session, TrainJob
+    from repro.core.sharp import HydraConfig
+    from repro.configs import get_config
+
+    facts = build_facts(quick=True, families=["dense"])
+    facts.save(out_path)
+
+    cfg = get_config("qwen3-0.6b", smoke=True)
+
+    def loader():
+        class L:
+            def __iter__(self):
+                def gen():
+                    i = 0
+                    while True:
+                        from repro.models import api as mapi
+                        yield mapi.make_dummy_batch(
+                            cfg, 2, 32, key=jax.random.PRNGKey(i))
+                        i += 1
+                return gen()
+        return L()
+
+    prompts = [np.asarray(jax.random.randint(
+        jax.random.PRNGKey(7 + i), (8,), 0, cfg.vocab_size, jnp.int32))
+        for i in range(3)]
+
+    def plan_and_run(profile):
+        session = Session(HydraConfig(n_devices=2,
+                                      device_budget_bytes=18 * 10**6),
+                          profile=profile)
+        session.submit(TrainJob(cfg, loader(), epochs=1, steps_per_epoch=2,
+                                seed=0, batch=2, seq=32))
+        sid = session.submit(ServeJob(cfg, seed=0, capacity=3, max_seq=64))
+        plan = session.plan()
+        # provenance must survive the wire: plan -> JSON -> plan
+        from repro.api import Plan
+        rt = Plan.from_json(plan.to_json())
+        assert rt.provenance == plan.provenance, "provenance lost in JSON"
+        reqs = [session.submit_request(sid, p, 5) for p in prompts]
+        session.run(rt)
+        toks = [list(map(int, r.generated)) for r in reqs]
+        return plan, toks
+
+    plan_a, toks_a = plan_and_run(None)          # unprofiled: analytic
+    plan_b, toks_b = plan_and_run(facts)         # profiled: measured
+
+    prov_a, prov_b = plan_a.provenance, plan_b.provenance
+    assert prov_a["n_measured"] == 0, prov_a
+    assert prov_a["profile"] is None, prov_a
+    assert prov_b["n_measured"] > 0, prov_b
+    assert prov_b["profile"] is not None, prov_b
+    assert prov_a != prov_b, "profiled plan cites no different facts"
+    assert toks_a == toks_b, (
+        "measured-cost planning changed generated tokens — cost facts may "
+        "only change estimates, never execution")
+
+    rec = {
+        "ok": True,
+        "profile_path": out_path,
+        "decode_families": sorted(facts.decode),
+        "transfer_points": len(facts.transfer.get("h2d", [])),
+        "kernels": sorted(facts.kernels),
+        "analytic_queries_a": prov_a["n_analytic"],
+        "measured_queries_b": prov_b["n_measured"],
+        "provenance_differs": prov_a != prov_b,
+        "tokens_identical": toks_a == toks_b,
+        "est_makespan_analytic_s": plan_a.schedule.get("est_makespan_s"),
+        "est_makespan_measured_s": plan_b.schedule.get("est_makespan_s"),
+    }
+    return rec
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.profiler",
+        description="measure this machine; persist MachineFacts JSON")
+    ap.add_argument("--quick", action="store_true",
+                    help="capped probe grids (CI-sized)")
+    ap.add_argument("--out", default=DEFAULT_PATH,
+                    help=f"facts path (default {DEFAULT_PATH})")
+    ap.add_argument("--families", default=None,
+                    help="comma list of decode-probe families "
+                    "(default: all in full mode, dense in --quick)")
+    ap.add_argument("--skip-kernels", action="store_true")
+    ap.add_argument("--skip-decode", action="store_true")
+    ap.add_argument("--show", action="store_true",
+                    help="summarize an existing profile and exit")
+    ap.add_argument("--smoke", action="store_true",
+                    help="profile-smoke A/B (see module docstring)")
+    args = ap.parse_args(argv)
+
+    if args.show:
+        facts = MachineFacts.load(args.out)
+        print(json.dumps(facts.summary(), indent=1))
+        return 0
+
+    if args.smoke:
+        out = args.out if args.out != DEFAULT_PATH \
+            else "results/profile_smoke.json"
+        rec = _smoke(out)
+        print(json.dumps({"profile_smoke": rec}))
+        return 0
+
+    fams = [f.strip() for f in args.families.split(",")] \
+        if args.families else None
+    facts = build_facts(quick=args.quick, families=fams,
+                        skip_kernels=args.skip_kernels,
+                        skip_decode=args.skip_decode)
+    path = facts.save(args.out)
+    print(json.dumps(facts.summary(), indent=1))
+    print(f"profile -> {path}", file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

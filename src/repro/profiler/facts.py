@@ -1,0 +1,186 @@
+"""``MachineFacts`` — the versioned, JSON-serializable record of what the
+profiler measured on THIS host (the doctor-facts pattern: probe once,
+persist to ``results/profile_latest.json``, plan against the cached facts).
+
+The schema is deliberately small and flat:
+
+* ``fingerprint``  — platform/device identity; a loaded profile whose
+  fingerprint no longer matches the running host is *stale* and every
+  consumer falls back to the analytic constants (with a
+  ``StaleProfileWarning``) rather than pricing plans with another
+  machine's numbers.
+* ``hardware``     — the roofline constants.  Defaults are the analytic
+  v5e numbers that used to live in ``launch/mesh.py``; a profile may
+  override them, and ``hardware_constants()`` is the one accessor both
+  ``launch/mesh.py`` and ``launch/roofline.py`` read through.
+* ``transfer``     — host↔device bandwidth rows (both directions, a few
+  payload sizes) from ``probes.probe_transfer``.
+* ``decode``       — per-family prefill/decode step latency over a small
+  rectangular (batch, seq) grid from ``probes.probe_decode``.
+* ``kernels``      — Pallas-vs-jnp-fallback micro-throughput from
+  ``probes.probe_kernels``.
+
+``CostModel`` (cost.py) interpolates these; everything here is pure data
+plus (de)serialization, so importing this module never touches jax device
+state (``current_fingerprint`` does, but only when called).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import platform
+import time
+import warnings
+from dataclasses import dataclass, field
+from typing import Optional
+
+SCHEMA_VERSION = 1
+
+DEFAULT_PATH = os.path.join("results", "profile_latest.json")
+
+# -- analytic defaults ------------------------------------------------------
+# v5e hardware constants (roofline).  These are THE analytic numbers: with
+# no profile on disk, launch/mesh.py, launch/roofline.py, and CostModel all
+# read exactly these values, so unprofiled plans reproduce the historical
+# analytic plans byte-identically.
+PEAK_FLOPS_BF16 = 197e12        # per chip
+HBM_BW = 819e9                  # bytes/s per chip
+ICI_BW = 50e9                   # bytes/s per link
+H2D_BW = 16e9                   # host<->device analytic prior (PCIe-class)
+
+ANALYTIC_HARDWARE = {
+    "peak_flops_bf16": PEAK_FLOPS_BF16,
+    "hbm_bw": HBM_BW,
+    "ici_bw": ICI_BW,
+    "h2d_bw": H2D_BW,
+}
+
+
+class StaleProfileWarning(UserWarning):
+    """A persisted profile's fingerprint no longer matches this host."""
+
+
+def current_fingerprint() -> dict:
+    """Identity of the running host+device, compared on profile load."""
+    import jax
+    devs = jax.devices()
+    return {
+        "backend": jax.default_backend(),
+        "device_kind": devs[0].device_kind if devs else "none",
+        "n_devices": len(devs),
+        "jax": jax.__version__,
+        "machine": platform.machine(),
+        "system": platform.system(),
+    }
+
+
+@dataclass
+class MachineFacts:
+    """Everything the probes measured, ready to price a plan."""
+    fingerprint: dict
+    created_unix: float = 0.0
+    schema_version: int = SCHEMA_VERSION
+    hardware: dict = field(default_factory=lambda: dict(ANALYTIC_HARDWARE))
+    transfer: dict = field(default_factory=dict)    # {"h2d":[rows],"d2h":[..]}
+    decode: dict = field(default_factory=dict)      # family -> grid record
+    kernels: dict = field(default_factory=dict)     # name -> timing record
+    notes: dict = field(default_factory=dict)       # probe provenance/knobs
+
+    # -- identity -----------------------------------------------------------
+    def is_stale(self, fingerprint: Optional[dict] = None) -> bool:
+        fp = fingerprint if fingerprint is not None else current_fingerprint()
+        return fp != self.fingerprint
+
+    # -- (de)serialization --------------------------------------------------
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    def to_json(self, **kw) -> str:
+        return json.dumps(self.to_dict(), **kw)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "MachineFacts":
+        v = d.get("schema_version")
+        if v != SCHEMA_VERSION:
+            raise ValueError(
+                f"unsupported MachineFacts schema_version {v!r} (this build "
+                f"reads version {SCHEMA_VERSION}); re-run "
+                "`python -m repro.profiler` to regenerate the profile")
+        known = {f.name for f in dataclasses.fields(cls)}
+        return cls(**{k: v for k, v in d.items() if k in known})
+
+    @classmethod
+    def from_json(cls, text: str) -> "MachineFacts":
+        return cls.from_dict(json.loads(text))
+
+    def save(self, path: str = DEFAULT_PATH) -> str:
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        with open(path, "w") as f:
+            f.write(self.to_json(indent=1))
+        return path
+
+    @classmethod
+    def load(cls, path: str = DEFAULT_PATH) -> "MachineFacts":
+        with open(path) as f:
+            return cls.from_json(f.read())
+
+    # -- summaries ----------------------------------------------------------
+    def age_seconds(self) -> float:
+        return max(0.0, time.time() - self.created_unix)
+
+    def summary(self) -> dict:
+        return {
+            "created_unix": self.created_unix,
+            "fingerprint": self.fingerprint,
+            "hardware": self.hardware,
+            "transfer_points": {d: len(rows)
+                                for d, rows in self.transfer.items()},
+            "decode_families": sorted(self.decode),
+            "kernels": sorted(self.kernels),
+        }
+
+
+def load_facts(path: str = DEFAULT_PATH, *, missing_ok: bool = False,
+               require_fresh: bool = True) -> Optional[MachineFacts]:
+    """Load + staleness-gate a persisted profile.
+
+    Returns None (never raises) when ``missing_ok`` and the file does not
+    exist — the Session auto-load path, where "no profile yet" is normal.
+    A stale profile returns None with a ``StaleProfileWarning`` so callers
+    fall back to analytic pricing instead of trusting another machine's
+    measurements.
+    """
+    if missing_ok and not os.path.exists(path):
+        return None
+    facts = MachineFacts.load(path)
+    if require_fresh and facts.is_stale():
+        warnings.warn(
+            f"profile {path} was measured on "
+            f"{facts.fingerprint.get('device_kind')!r} "
+            f"({facts.fingerprint.get('backend')}/"
+            f"{facts.fingerprint.get('jax')}) but this host is "
+            f"{current_fingerprint().get('device_kind')!r} — ignoring it; "
+            "re-run `python -m repro.profiler` to refresh",
+            StaleProfileWarning, stacklevel=2)
+        return None
+    return facts
+
+
+def hardware_constants(facts: Optional[MachineFacts] = None) -> dict:
+    """The roofline constants, with their provenance tag.
+
+    With no facts (or facts that never overrode hardware), this IS the
+    analytic default table — byte-identical to the historical
+    ``launch/mesh.py`` constants.
+    """
+    out = dict(ANALYTIC_HARDWARE)
+    source = "analytic"
+    if facts is not None:
+        for k, v in (facts.hardware or {}).items():
+            if k in out and v != out[k]:
+                out[k] = v
+                source = "measured"
+    out["source"] = source
+    return out

@@ -1,0 +1,245 @@
+"""Microbenchmark probes — the measurements behind ``MachineFacts``.
+
+Three probe families, each with a ``quick`` mode sized for CI smoke:
+
+* ``probe_transfer`` — host↔device bandwidth both directions at a few
+  payload sizes (``jax.device_put`` / ``jax.device_get``), the number
+  ZeRO-Infinity-style offload schedules live or die on.
+* ``probe_decode``   — per-family prefill + pooled-decode step latency on
+  a small rectangular (batch, seq) grid, driven through the real
+  ``InferenceEngine``/``DecodeBackend`` surface (so the measurement
+  includes admission, cache writes, and token materialization — the
+  seconds a serving plan actually pays).  Timed steps exclude jit
+  compilation: the first engine step compiles, later steps are timed via
+  the engine's own ``decode_s``/``decode_steps`` counters; warm prefill
+  is measured on a second admission wave that reuses the compiled
+  (n, plen) prefill.
+* ``probe_kernels``  — Pallas-kernel vs pure-jnp-fallback throughput for
+  the ops with ``kernels/ref.py`` oracles (flash attention, rms_norm,
+  swiglu), at tiny shapes (the Pallas interpreter is faithful but slow on
+  CPU; on TPU the same probe times the Mosaic kernels).
+
+``build_facts`` assembles a ``MachineFacts``; ``python -m repro.profiler``
+is the CLI.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.profiler.facts import MachineFacts, current_fingerprint
+
+# one servable smoke arch per probe family (mirrors the backend smoke's
+# map; encoder-decoder families are not servable, vlm shares the dense
+# transformer decode path)
+PROBE_FAMILY_ARCHS = {"dense": "qwen3-0.6b", "ssm": "xlstm-350m",
+                      "hybrid": "zamba2-1.2b", "moe": "mixtral-8x22b"}
+
+
+def _time_call(fn, *args, iters: int = 5) -> float:
+    """Seconds per call, first (compiling) call excluded."""
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters
+
+
+# ---------------------------------------------------------------------------
+# host <-> device transfer
+# ---------------------------------------------------------------------------
+
+def probe_transfer(*, quick: bool = False, iters: int = 3) -> dict:
+    """Bandwidth rows per direction: [{"bytes", "seconds", "gbytes_per_s"}]."""
+    sizes = [1 << 16, 1 << 20, 1 << 22] if quick else \
+        [1 << 16, 1 << 20, 1 << 24, 1 << 26]
+    dev = jax.devices()[0]
+    h2d, d2h = [], []
+    for n in sizes:
+        host = np.ones(n, np.uint8)
+        put = lambda: jax.block_until_ready(jax.device_put(host, dev))
+        put()                                    # warm the path
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            put()
+        s = (time.perf_counter() - t0) / iters
+        h2d.append({"bytes": n, "seconds": s,
+                    "gbytes_per_s": n / s / 1e9 if s else None})
+        on_dev = jax.device_put(host, dev)
+        jax.block_until_ready(on_dev)
+        jax.device_get(on_dev)
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            jax.device_get(on_dev)
+        s = (time.perf_counter() - t0) / iters
+        d2h.append({"bytes": n, "seconds": s,
+                    "gbytes_per_s": n / s / 1e9 if s else None})
+    return {"h2d": h2d, "d2h": d2h}
+
+
+# ---------------------------------------------------------------------------
+# per-family decode / prefill grid
+# ---------------------------------------------------------------------------
+
+def _probe_family_grid(cfg, params, batches: Sequence[int],
+                       seqs: Sequence[int], iters: int) -> dict:
+    from repro.serving import InferenceEngine
+    step_grid = [[0.0] * len(seqs) for _ in batches]
+    prefill_grid = [[0.0] * len(seqs) for _ in batches]
+    for i, b in enumerate(batches):
+        for j, s in enumerate(seqs):
+            eng = InferenceEngine(cfg, params, capacity=b, max_seq=s,
+                                  model_name=f"probe-{cfg.name}")
+            plen = max(4, s // 4)
+            prompts = [np.asarray(jax.random.randint(
+                jax.random.PRNGKey(1000 + 17 * i + j * 3 + r), (plen,),
+                0, cfg.vocab_size, jnp.int32)) for r in range(b)]
+            # wave 1: first step compiles prefill+decode, later steps timed
+            for p in prompts:
+                eng.submit(p, iters + 2)
+            eng.step()                           # compile, not timed
+            d0, n0 = eng.decode_s, eng.decode_steps
+            for _ in range(iters):
+                eng.step()
+            dn = eng.decode_steps - n0
+            step_grid[i][j] = (eng.decode_s - d0) / max(1, dn)
+            eng.run()                            # drain stragglers
+            # wave 2: same (n, plen) group -> compiled prefill, warm timing
+            p0, t0 = eng.prefill_s, eng.prefill_tokens
+            for p in prompts:
+                eng.submit(p, 1)
+            eng.step()
+            new_tok = eng.prefill_tokens - t0
+            prefill_grid[i][j] = (eng.prefill_s - p0) / max(1, new_tok)
+            eng.run()
+    return {"arch": cfg.name,
+            "n_active_params": int(cfg.n_active_params),
+            "batches": list(batches), "seqs": list(seqs),
+            "decode_step_s": step_grid,
+            "prefill_s_per_token": prefill_grid}
+
+
+def probe_decode(*, quick: bool = False,
+                 families: Optional[Sequence[str]] = None,
+                 iters: Optional[int] = None) -> dict:
+    """Per-family (batch, seq) latency grids via the live engine surface.
+
+    A family whose probe fails (unservable on this build, OOM, ...) is
+    simply absent from the result — the CostModel falls back to analytic
+    pricing for it, which is the contract everywhere else too.
+    """
+    from repro.models import api as mapi
+    if families is None:
+        families = ["dense"] if quick else list(PROBE_FAMILY_ARCHS)
+    batches = [1, 2] if quick else [1, 2, 4]
+    seqs = [32, 64] if quick else [64, 128, 256]
+    iters = iters if iters is not None else (2 if quick else 5)
+    out: dict[str, dict] = {}
+    errors: dict[str, str] = {}
+    for fam in families:
+        arch = PROBE_FAMILY_ARCHS.get(fam)
+        if arch is None:
+            errors[fam] = f"no probe arch registered for family {fam!r}"
+            continue
+        try:
+            from repro.configs import get_config
+            cfg = get_config(arch, smoke=True)
+            params = mapi.init_params(cfg, jax.random.PRNGKey(0))
+            out[fam] = _probe_family_grid(cfg, params, batches, seqs, iters)
+        except Exception as e:      # record, don't abort the whole profile
+            errors[fam] = f"{type(e).__name__}: {e}"
+    if errors:
+        out["_errors"] = errors
+    return out
+
+
+# ---------------------------------------------------------------------------
+# kernel vs jnp fallback
+# ---------------------------------------------------------------------------
+
+def probe_kernels(*, quick: bool = False, iters: int = 3) -> dict:
+    """Per-kernel {ref_us, kernel_us, fallback_delta, rows_per_s} pairs.
+
+    ``kernel_us`` times the ``kernels/ops.py`` entry point under its
+    default impl for this backend (Mosaic on TPU, interpret elsewhere);
+    ``ref_us`` times the pure-jnp oracle the engine falls back to.
+    ``fallback_delta = ref_us / kernel_us`` (> 1 means the kernel wins).
+    """
+    from repro.kernels import ops, ref
+    key = jax.random.PRNGKey(0)
+    out: dict[str, dict] = {}
+
+    # flash attention: ref layout (b, nh, s, hd); ops layout (b, s, nh, hd)
+    b, s, nh, nkv, hd = (1, 32, 4, 2, 32) if quick else (1, 128, 8, 2, 64)
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (b, nh, s, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (b, nkv, s, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (b, nkv, s, hd), jnp.float32)
+    ref_s = _time_call(jax.jit(lambda q, k, v: ref.flash_attention_ref(
+        q, k, v, causal=True)), q, k, v, iters=iters)
+    kern_s = _time_call(
+        lambda q, k, v: ops.flash_attention(
+            q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+            v.transpose(0, 2, 1, 3), causal=True,
+            block_q=min(32, s), block_k=min(32, s)),
+        q, k, v, iters=iters)
+    out["flash_attention"] = _kernel_row(ref_s, kern_s, rows=b * s)
+
+    # rms_norm
+    m, d = (64, 128) if quick else (512, 512)
+    x = jax.random.normal(key, (m, d), jnp.float32)
+    w = jnp.ones((d,), jnp.float32)
+    ref_s = _time_call(jax.jit(ref.rms_norm_ref), x, w, iters=iters)
+    kern_s = _time_call(lambda x, w: ops.rms_norm(x, w), x, w, iters=iters)
+    out["rms_norm"] = _kernel_row(ref_s, kern_s, rows=m)
+
+    # swiglu
+    m, d, f = (64, 128, 256) if quick else (512, 512, 1024)
+    ks = jax.random.split(key, 4)
+    xm = jax.random.normal(ks[0], (m, d))
+    wg = jax.random.normal(ks[1], (d, f)) * 0.05
+    wu = jax.random.normal(ks[2], (d, f)) * 0.05
+    wd = jax.random.normal(ks[3], (f, d)) * 0.05
+    ref_s = _time_call(jax.jit(ref.swiglu_ref), xm, wg, wu, wd, iters=iters)
+    kern_s = _time_call(lambda *a: ops.swiglu(*a), xm, wg, wu, wd,
+                        iters=iters)
+    out["swiglu"] = _kernel_row(ref_s, kern_s, rows=m)
+    return out
+
+
+def _kernel_row(ref_s: float, kern_s: float, *, rows: int) -> dict:
+    return {"ref_us": ref_s * 1e6, "kernel_us": kern_s * 1e6,
+            "fallback_delta": ref_s / max(kern_s, 1e-12),
+            "ref_rows_per_s": rows / max(ref_s, 1e-12),
+            "kernel_rows_per_s": rows / max(kern_s, 1e-12),
+            "default_impl": "pallas" if jax.default_backend() == "tpu"
+            else "interpret"}
+
+
+# ---------------------------------------------------------------------------
+# assembly
+# ---------------------------------------------------------------------------
+
+def build_facts(*, quick: bool = False,
+                families: Optional[Sequence[str]] = None,
+                skip_kernels: bool = False,
+                skip_decode: bool = False) -> MachineFacts:
+    """Run every probe and assemble one ``MachineFacts``."""
+    facts = MachineFacts(fingerprint=current_fingerprint(),
+                         created_unix=time.time())
+    facts.notes = {"quick": bool(quick)}
+    facts.transfer = probe_transfer(quick=quick)
+    if not skip_decode:
+        decode = probe_decode(quick=quick, families=families)
+        facts.notes["decode_errors"] = decode.pop("_errors", {})
+        facts.decode = decode
+    if not skip_kernels:
+        facts.kernels = probe_kernels(quick=quick)
+    return facts

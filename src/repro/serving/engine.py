@@ -116,6 +116,7 @@ class InferenceEngine:
                  default_slo: Optional[SLO] = None,
                  tiered_kv: bool = False, prefetch_ticks: int = 1,
                  param_source=None,
+                 tok_seconds_prior: Optional[float] = None,
                  clock=time.perf_counter):
         spec = family_spec(cfg)
         if not spec.servable:
@@ -238,6 +239,10 @@ class InferenceEngine:
         self.prefill_s = 0.0
         self.peak_concurrency = 0
         self._tok_s_ema: Optional[float] = None     # per-token decode seconds
+        # measured-profile prior (repro.profiler CostModel): used until the
+        # first real decode step seeds the EMA; None keeps the analytic
+        # 2e-10·params constant
+        self._tok_s_prior = tok_seconds_prior
         # -- SLO-aware admission (serving/slo.py) ---------------------------
         # "slo" with no SLOs declared degrades EXACTLY to FIFO (infinite
         # deadlines tie, arrival_seq breaks the tie), so it is the default
@@ -387,9 +392,13 @@ class InferenceEngine:
 
     def tok_seconds_estimate(self) -> float:
         """Measured per-token decode seconds (EMA); cost-model prior until
-        the first step so multi-model LRTF can rank engines immediately."""
+        the first step so multi-model LRTF can rank engines immediately.
+        The prior is this host's probed decode rate when a machine profile
+        supplied one (``tok_seconds_prior``), else the analytic constant."""
         if self._tok_s_ema is not None:
             return self._tok_s_ema
+        if self._tok_s_prior is not None:
+            return self._tok_s_prior
         return 2e-10 * max(self.cfg.n_active_params, 1)
 
     def remaining_seconds(self) -> float:

@@ -1,0 +1,251 @@
+"""Machine profiler (repro.profiler): MachineFacts (de)serialization and
+staleness gating, CostModel monotonicity + analytic byte-identity, plan
+provenance round-trips, and the what-if pricing path."""
+
+import json
+import warnings
+
+import pytest
+
+from conftest import make_loader
+from repro.api import HydraConfig, Plan, Session, TrainJob
+from repro.configs import get_config
+from repro.profiler import (ANALYTIC_HARDWARE, CostModel, MachineFacts,
+                            StaleProfileWarning, current_fingerprint,
+                            hardware_constants, load_facts)
+from repro.profiler.cost import (ANALYTIC_SHARD_SECONDS_PER_WEIGHTED_BYTE,
+                                 ANALYTIC_TOK_SECONDS_PER_PARAM,
+                                 _monotone_grid)
+
+BUDGET = 18 * 10**6
+
+
+def _cfg():
+    return get_config("qwen3-0.6b", smoke=True)
+
+
+def _hc():
+    return HydraConfig(n_devices=2, device_budget_bytes=BUDGET)
+
+
+def _fresh_facts(**kw) -> MachineFacts:
+    return MachineFacts(fingerprint=current_fingerprint(), **kw)
+
+
+def _measured_facts(cfg) -> MachineFacts:
+    """Synthetic fresh facts with a dense-family decode grid around cfg."""
+    return _fresh_facts(decode={
+        cfg.family: {
+            "arch": cfg.name,
+            "n_active_params": cfg.n_active_params,
+            "batches": [1, 2],
+            "seqs": [32, 64],
+            "decode_step_s": [[1e-4, 2e-4], [3e-4, 4e-4]],
+            "prefill_s_per_token": [[1e-5, 1e-5], [9e-6, 9e-6]],
+        }})
+
+
+# ---------------------------------------------------------------------------
+# MachineFacts: round trip, schema gating, staleness
+# ---------------------------------------------------------------------------
+
+def test_facts_json_round_trip(tmp_path):
+    facts = _measured_facts(_cfg())
+    facts.hardware["hbm_bw"] = 123e9
+    path = facts.save(str(tmp_path / "profile.json"))
+    loaded = MachineFacts.load(path)
+    assert loaded.to_dict() == facts.to_dict()
+    assert loaded.to_json() == facts.to_json()
+    # and through the gated loader (fresh fingerprint -> accepted)
+    assert load_facts(path).to_dict() == facts.to_dict()
+
+
+def test_facts_schema_version_rejected(tmp_path):
+    d = _fresh_facts().to_dict()
+    d["schema_version"] = 999
+    path = tmp_path / "profile.json"
+    path.write_text(json.dumps(d))
+    with pytest.raises(ValueError, match="schema_version"):
+        MachineFacts.load(str(path))
+
+
+def test_load_facts_missing_ok(tmp_path):
+    assert load_facts(str(tmp_path / "nope.json"), missing_ok=True) is None
+    with pytest.raises(FileNotFoundError):
+        load_facts(str(tmp_path / "nope.json"))
+
+
+def test_stale_profile_warns_and_falls_back(tmp_path):
+    facts = _measured_facts(_cfg())
+    facts.fingerprint = dict(facts.fingerprint, device_kind="TPU v9000")
+    path = facts.save(str(tmp_path / "profile.json"))
+    with pytest.warns(StaleProfileWarning):
+        assert load_facts(path) is None
+    # ungated load for the what-if tool still reads it
+    assert load_facts(path, require_fresh=False).decode
+    # CostModel itself also refuses stale facts...
+    with pytest.warns(StaleProfileWarning):
+        cm = CostModel(MachineFacts.load(path))
+    assert not cm.measured
+    cfg = _cfg()
+    assert cm.tok_seconds(cfg) == \
+        ANALYTIC_TOK_SECONDS_PER_PARAM * cfg.n_active_params
+    # ...unless the caller opts in (what-if pricing)
+    cm2 = CostModel(MachineFacts.load(path), allow_stale=True)
+    assert cm2.measured and cm2.has_decode_facts(cfg)
+
+
+def test_hardware_constants_analytic_default_byte_identical():
+    from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+    hw = hardware_constants(None)
+    assert hw["source"] == "analytic"
+    assert hw["peak_flops_bf16"] == PEAK_FLOPS_BF16 == 197e12
+    assert hw["hbm_bw"] == HBM_BW == 819e9
+    assert hw["ici_bw"] == ICI_BW == 50e9
+    # facts that never overrode hardware stay analytic
+    assert hardware_constants(_fresh_facts())["source"] == "analytic"
+    f = _fresh_facts()
+    f.hardware["hbm_bw"] = 100e9
+    hw = hardware_constants(f)
+    assert hw["source"] == "measured" and hw["hbm_bw"] == 100e9
+    assert hw["ici_bw"] == ANALYTIC_HARDWARE["ici_bw"]
+
+
+# ---------------------------------------------------------------------------
+# CostModel: analytic parity + monotonicity
+# ---------------------------------------------------------------------------
+
+def test_analytic_shard_runtimes_byte_identical():
+    cfg = _cfg()
+    cm = CostModel(None)
+    weights = [3.7e9, 1.2e8, 5.5e9]
+    got = cm.shard_runtimes(cfg, weights, batch=2, seq=64)
+    want = [(w * 1e-12, 2 * (w * 1e-12)) for w in weights]
+    assert got == want      # same values AND same float evaluation order
+    assert cm.provenance[f"partition:{cfg.name}"]["source"] == "analytic"
+
+
+def test_monotone_grid_clamps_noise():
+    noisy = [[2.0, 1.0], [1.5, 0.5]]
+    g = _monotone_grid(noisy)
+    for i in range(2):
+        assert g[i][0] <= g[i][1]
+        assert g[0][i] <= g[1][i]
+
+
+def test_costmodel_more_tokens_never_cheaper():
+    cfg = _cfg()
+    cm = CostModel(_measured_facts(cfg))
+    assert cm.has_decode_facts(cfg)
+    # sweep across, between, and beyond the probed grid
+    points = [1, 2, 3, 8]
+    seqs = [16, 32, 48, 64, 200]
+    prev = None
+    for s in seqs:
+        v = cm.decode_step_seconds(cfg, 1, s)
+        if prev is not None:
+            assert v >= prev
+        prev = v
+    for b, b2 in zip(points, points[1:]):
+        for s in seqs:
+            assert cm.decode_step_seconds(cfg, b2, s) >= \
+                cm.decode_step_seconds(cfg, b, s)
+            assert cm.prefill_seconds(cfg, b2, s) >= \
+                cm.prefill_seconds(cfg, b, s)
+        # prefill also monotone in seq at fixed batch
+        for s, s2 in zip(seqs, seqs[1:]):
+            assert cm.prefill_seconds(cfg, b, s2) >= \
+                cm.prefill_seconds(cfg, b, s)
+    rec = cm.provenance[f"decode_step:{cfg.name}"]
+    assert rec["source"] == "measured" and rec["probe_arch"] == cfg.name
+
+
+def test_transfer_seconds_monotone_and_sourced():
+    cm = CostModel(None)
+    a = cm.transfer_seconds(10**6)
+    b = cm.transfer_seconds(10**8)
+    assert b > a and cm.provenance["transfer:h2d"]["source"] == "analytic"
+    facts = _fresh_facts(transfer={"h2d": [
+        {"bytes": 2 ** 10, "seconds": 1e-4},
+        {"bytes": 2 ** 20, "seconds": 2e-4},
+    ]})
+    cm = CostModel(facts)
+    a = cm.transfer_seconds(10**6)
+    b = cm.transfer_seconds(10**8)
+    assert b > a > 0
+    assert cm.provenance["transfer:h2d"]["source"] == "measured"
+
+
+def test_draft_plan_picks_cheaper_draft():
+    cfg = _cfg()
+    cm = CostModel(None)
+    choice = cm.draft_plan(cfg)
+    assert 1 <= choice.draft_k <= 8
+    assert choice.draft_cfg.n_active_params <= cfg.n_active_params
+    rec = cm.provenance[f"draft:{cfg.name}"]
+    assert rec["draft_model"] == choice.draft_cfg.name
+    assert rec["expected_tok_per_s"] > 0
+    # fixing k respects it
+    assert cm.draft_plan(cfg, draft_k=3).draft_k == 3
+
+
+# ---------------------------------------------------------------------------
+# plan provenance: present, serialized, stable across plan -> JSON -> run
+# ---------------------------------------------------------------------------
+
+def _plan(profile):
+    cfg = _cfg()
+    session = Session(_hc(), profile=profile)
+    session.submit(TrainJob(cfg, make_loader(cfg, seed=0), epochs=1,
+                            steps_per_epoch=2, seed=0, batch=2, seq=64))
+    return session, session.plan()
+
+
+def test_plan_provenance_round_trips():
+    session, plan = _plan(profile=None)
+    assert plan.provenance["n_analytic"] > 0
+    assert plan.provenance["n_measured"] == 0
+    assert plan.provenance["profile"] is None
+    text = plan.to_json()
+    reloaded = Plan.from_json(text)
+    assert reloaded.provenance == plan.provenance
+    assert reloaded.to_json() == text
+    assert plan.summary()["cost_source"] == "analytic"
+    # provenance survives execution untouched
+    rt = session.run(reloaded)
+    assert reloaded.provenance == plan.provenance
+    assert rt.train is not None
+
+
+def test_plan_cites_measured_facts_when_profiled(tmp_path):
+    cfg = _cfg()
+    path = _measured_facts(cfg).save(str(tmp_path / "p.json"))
+    _, plan_a = _plan(profile=None)
+    _, plan_b = _plan(profile=path)
+    assert plan_b.provenance["n_measured"] > 0
+    assert plan_b.provenance["profile"] is not None
+    assert cfg.family in plan_b.provenance["profile"]["decode_families"]
+    assert plan_b.summary()["cost_source"] == "measured"
+    assert plan_a.provenance != plan_b.provenance
+    prov = plan_b.provenance["queries"]
+    assert prov[f"partition:{cfg.name}"]["source"] == "measured"
+
+
+def test_pre_profiler_plan_json_still_loads():
+    _, plan = _plan(profile=None)
+    d = json.loads(plan.to_json())
+    d.pop("provenance")
+    old = Plan.from_json(json.dumps(d))
+    assert old.provenance == {}
+    assert old.summary().get("cost_source") is None
+
+
+def test_session_rejects_bad_profile_arg():
+    with pytest.raises(TypeError):
+        Session(_hc(), profile=42)
+
+
+def test_unprofiled_session_emits_no_warnings():
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", StaleProfileWarning)
+        _plan(profile=None)
