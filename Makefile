@@ -31,6 +31,11 @@
 #                      MachineFacts JSON, then plan the same job with and
 #                      without the profile (self-asserting: provenance
 #                      differs, executed tokens byte-identical)
+#   make kernel-smoke - kernel regression gate: re-measure every Pallas
+#                      kernel and diff fallback_delta vs the committed
+#                      results/bench_kernels.json baseline (fails on >20%
+#                      TPU regression, or a Pallas path slower than its
+#                      jnp fallback; kernel-baseline refreshes the file)
 #   make docs-check  - docs lint: relative links + [[refs]] resolve and
 #                      fenced python blocks compile (docs/*.md, README.md)
 #   make examples-smoke - run all four examples/*.py on their tiny configs
@@ -40,8 +45,8 @@ PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export PYTHONPATH
 
 .PHONY: test test-fast bench-smoke plan-smoke paged-smoke backend-smoke \
-    spec-smoke http-smoke slo-smoke tier-smoke profile-smoke docs-check \
-    examples-smoke
+    spec-smoke http-smoke slo-smoke tier-smoke profile-smoke kernel-smoke \
+    kernel-baseline docs-check examples-smoke
 
 test:
 	$(PY) -m pytest -x -q
@@ -79,6 +84,12 @@ tier-smoke:
 
 profile-smoke:
 	$(PY) -m repro.profiler --smoke
+
+kernel-smoke:
+	$(PY) scripts/kernel_smoke.py
+
+kernel-baseline:
+	$(PY) scripts/kernel_smoke.py --refresh
 
 docs-check:
 	$(PY) scripts/docs_check.py

@@ -143,6 +143,18 @@ def bench_paged(arch="qwen3-0.6b", n_requests=12, capacity=12, plen=8,
     short-prompt requests.  Reports peak admitted concurrency and peak KV
     bytes for both engines (peak page bytes must stay <= budget —
     tests/test_paging.py asserts it; the bench reports it).
+
+    A second comparison re-runs the paged engine fp vs ``kv_dtype="int8"``
+    on the seeded token-stability suite (the same workload
+    tests/test_paging.py gates — smoke-model logit margins are thin
+    enough that arbitrary prompts flip the odd argmax under quantization,
+    so the identity bar is pinned to seeds where fp and int8 agree
+    exactly) under ONE deliberately tight byte budget (worth 3 fp
+    blocks): int8 blocks are strictly smaller (1-byte KV + amortized
+    per-row scale vs 2-byte bf16), so the quantized pool must admit
+    strictly more concurrent lanes AND stay token-identical (asserted —
+    this is the ``make paged-smoke`` acceptance bar for the quantized
+    cache; CI re-asserts from the JSON).
     """
     cfg = get_config(arch, smoke=True)
     params = api.init_params(cfg, jax.random.PRNGKey(0))
@@ -151,22 +163,42 @@ def bench_paged(arch="qwen3-0.6b", n_requests=12, capacity=12, plen=8,
         for i in range(n_requests)]
     budget = budget_slots * api.decode_state_bytes(cfg, 1, max_seq)
 
-    def drive(paged: bool):
+    def drive(paged: bool, kv_dtype=None, kv_budget=budget,
+              work=None):
         eng = InferenceEngine(cfg, params, capacity=capacity,
-                              max_seq=max_seq, kv_budget_bytes=budget,
+                              max_seq=max_seq, kv_budget_bytes=kv_budget,
                               paged=paged, block_size=block_size,
-                              model_name=arch)
-        for p in prompts:
-            eng.submit(p, gen)
+                              kv_dtype=kv_dtype, model_name=arch)
+        reqs = [eng.submit(p, g) for p, g in
+                (work or [(p, gen) for p in prompts])]
         t0 = time.perf_counter()
-        done = eng.run()
+        eng.run()
         wall = time.perf_counter() - t0
-        n_gen = sum(len(r.generated) for r in done)
-        return eng, n_gen / wall
+        toks = [r.generated for r in reqs]
+        return eng, sum(map(len, toks)) / wall, toks
 
-    slot_eng, slot_tps = drive(paged=False)
-    paged_eng, paged_tps = drive(paged=True)
+    slot_eng, slot_tps, _ = drive(paged=False)
+    paged_eng, paged_tps, _ = drive(paged=True)
     slot_sum, paged_sum = slot_eng.summary(), paged_eng.summary()
+
+    # int8 KV vs fp under one tight budget, on the seeded stability
+    # suite (each request spans <= block_size rows -> exactly one block)
+    fp_block = api.kv_block_bytes(cfg, block_size)
+    int8_block = api.kv_block_bytes(cfg, block_size, "int8")
+    tight = 3 * fp_block
+    stable = [(np.asarray(jax.random.randint(
+        jax.random.PRNGKey(900 + i), (4 + i,), 0, cfg.vocab_size,
+        jnp.int32)), 6) for i in range(6)]
+    fp_eng, _, fp_toks = drive(paged=True, kv_budget=tight, work=stable)
+    q_eng, _, q_toks = drive(paged=True, kv_dtype="int8",
+                             kv_budget=tight, work=stable)
+    fp_peak = fp_eng.summary()["peak_concurrency"]
+    q_peak = q_eng.summary()["peak_concurrency"]
+    assert q_toks == fp_toks, "int8 KV decode diverged from fp paged decode"
+    assert q_peak > fp_peak, \
+        (f"int8 KV admitted {q_peak} lanes <= fp {fp_peak} under one "
+         f"budget of {tight}B ({fp_block}B fp vs {int8_block}B int8 blocks)")
+    emit(f"serve_paged_int8_concurrency_{arch}", 0.0, f"{q_peak}vs{fp_peak}")
     emit(f"serve_paged_concurrency_{arch}", 0.0,
          f"{paged_sum['peak_concurrency']}vs{slot_sum['peak_concurrency']}")
     emit(f"serve_paged_kv_peak_{arch}", 0.0,
@@ -188,7 +220,16 @@ def bench_paged(arch="qwen3-0.6b", n_requests=12, capacity=12, plen=8,
             "page_peak_within_budget":
                 paged_sum["kv_page_peak_bytes"] <= budget,
             "slot_tok_per_s": round(slot_tps, 1),
-            "paged_tok_per_s": round(paged_tps, 1)}
+            "paged_tok_per_s": round(paged_tps, 1),
+            "int8_kv": {
+                "kv_budget_bytes": tight,
+                "fp_block_bytes": fp_block,
+                "int8_block_bytes": int8_block,
+                "block_shrink": round(fp_block / int8_block, 2),
+                "fp_peak_concurrency": fp_peak,
+                "int8_peak_concurrency": q_peak,
+                "tokens_identical": q_toks == fp_toks,
+                "int8_kv_dtype": q_eng.summary()["kv_dtype"]}}
 
 
 def bench_prefix_share(arch="qwen3-0.6b", n_requests=6, prefix_blocks=8,
@@ -277,6 +318,13 @@ def bench_spec(arch="qwen3-0.6b", draft_arch=None, n_requests=6,
     verify steps strictly fewer than generated tokens (``make
     spec-smoke``; CI re-asserts from the JSON).  Pass a real smaller
     ``draft_arch`` to measure true accept rates.
+
+    On the paged inner a third run activates the FUSED multi-query
+    paged-verify kernel (``verify_impl="pallas"`` on TPU, interpret mode
+    elsewhere) — all k+1 verify positions walk the block tables inside
+    one kernel instead of gather-then-attend — and must stay
+    token-identical to both the jnp-verify spec run and the plain
+    baseline (the fused-verify half of the ``make spec-smoke`` bar).
     """
     cfg = get_config(arch, smoke=True)
     params = api.init_params(cfg, jax.random.PRNGKey(0))
@@ -332,6 +380,29 @@ def bench_spec(arch="qwen3-0.6b", draft_arch=None, n_requests=6,
             "spec_tok_per_s": round(spec_tps, 1),
             "baseline_decode_steps": base_sum["decode_steps"],
         }
+        if inner == "paged":
+            impl = "pallas" if jax.default_backend() == "tpu" \
+                else "pallas_interpret"
+            fused_sum, fused_toks, fused_tps = drive(
+                "spec", spec_inner=inner, draft_cfg=draft_cfg,
+                draft_params=draft_params, draft_k=draft_k,
+                verify_impl=impl)
+            assert fused_toks == base_toks, \
+                "fused paged verify diverged from the plain paged baseline"
+            assert fused_toks == spec_toks, \
+                "fused paged verify diverged from jnp-verify spec decode"
+            assert fused_sum["target_steps"] < fused_sum["spec_tokens"]
+            emit(f"serve_spec_fused_verify_{arch}", 0.0,
+                 f"{fused_sum['accepted_tokens_per_target_step']}tok/step")
+            out[inner]["fused_verify"] = {
+                "verify_impl": impl,
+                "tokens_identical": fused_toks == base_toks
+                and fused_toks == spec_toks,
+                "target_steps": fused_sum["target_steps"],
+                "accept_rate":
+                    fused_sum["accepted_tokens_per_target_step"],
+                "spec_tok_per_s": round(fused_tps, 1),
+            }
     return out
 
 

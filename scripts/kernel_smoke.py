@@ -1,0 +1,150 @@
+#!/usr/bin/env python
+"""Kernel-regression smoke: re-measure every Pallas kernel and diff it
+against the committed baseline (``results/bench_kernels.json``).
+
+The gate (per kernel row, matched by name):
+
+* the kernel must still exist — a probe row vanishing from the fresh run
+  (or a fresh row missing from the baseline) fails, so the baseline file
+  can never silently drift out of sync with ``probe_kernels``;
+* ``fallback_delta`` (reference-path seconds / kernel seconds; > 1 means
+  the Pallas kernel beats the jnp fallback) must not regress more than
+  the allowed factor vs baseline.  On a real TPU the bar is 0.8 (the
+  ISSUE's "no >20% regression"); on interpret-mode hosts Pallas timing is
+  emulation noise, so the bar is a loose 0.1 plus best-of-3 retries —
+  enough to catch a kernel that suddenly lowers to garbage, loose enough
+  to survive CI jitter;
+* "never slower than the jnp fallback" (delta >= 1.0 after the same
+  regression slack) is enforced ONLY where the probe would actually pick
+  the kernel (``default_impl == "pallas"``, i.e. a TPU host) — interpret
+  mode is a correctness vehicle, not a perf target;
+* rows measured under a different ``default_impl`` than the baseline
+  (e.g. a baseline refreshed on TPU, smoke running on CPU) skip the
+  ratio check with a note — cross-machine-class deltas are not
+  comparable.
+
+``--refresh`` rewrites the baseline from a fresh ``bench_kernels.run()``
+(the same writer CI dashboards read), then re-checks against it.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+BASELINE = os.path.join("results", "bench_kernels.json")
+
+# allowed fallback_delta ratio (current / baseline) before we call it a
+# regression, per the impl class the measurement ran under.  Interpret-
+# mode Pallas timing jitters ~4x run-to-run on shared CPU hosts, so its
+# bar is an order of magnitude — a lowering that turns into garbage is
+# 100-1000x, which this still catches.
+REGRESSION_FACTOR = {"pallas": 0.8, "interpret": 0.1}
+
+# noisy-host retries: re-measure and keep the per-kernel BEST delta
+# before declaring a regression (a true regression survives retries;
+# scheduler jitter does not)
+MAX_ATTEMPTS = 3
+
+
+def _load_baseline(path: str) -> dict:
+    with open(path) as f:
+        return json.load(f)["kernels"]
+
+
+def _fresh(path: str | None = None) -> dict:
+    if path is not None:
+        # full bench pass: CSV rows + rewrite the JSON baseline.  The
+        # benchmarks package lives at the repo root (next to scripts/),
+        # which is not on sys.path when this runs as a plain script.
+        sys.path.insert(0, os.path.dirname(os.path.dirname(
+            os.path.abspath(__file__))))
+        from benchmarks.bench_kernels import run
+        run(json_out=path)
+        return _load_baseline(path)
+    from repro.profiler.probes import probe_kernels
+    return probe_kernels(quick=True)
+
+
+def check(baseline: dict, current: dict) -> list[str]:
+    failures: list[str] = []
+    missing = sorted(set(baseline) - set(current))
+    extra = sorted(set(current) - set(baseline))
+    if missing:
+        failures.append(f"kernels gone from the probe: {missing}")
+    if extra:
+        failures.append(
+            f"kernels missing from the baseline: {extra} — refresh it "
+            "with `python scripts/kernel_smoke.py --refresh` and commit")
+    for name in sorted(set(baseline) & set(current)):
+        base, cur = baseline[name], current[name]
+        b_delta, c_delta = base["fallback_delta"], cur["fallback_delta"]
+        impl = cur.get("default_impl", "interpret")
+        if impl != base.get("default_impl", "interpret"):
+            print(f"  ~ {name}: baseline impl "
+                  f"{base.get('default_impl')!r} != current {impl!r} — "
+                  "cross-machine-class, ratio check skipped")
+            continue
+        factor = REGRESSION_FACTOR.get(impl, 0.25)
+        floor = factor * b_delta
+        status = "ok"
+        if c_delta < floor:
+            status = "REGRESSED"
+            failures.append(
+                f"{name}: fallback_delta {c_delta:.3f} < {factor} x "
+                f"baseline {b_delta:.3f} (floor {floor:.3f})")
+        if impl == "pallas" and c_delta < factor * 1.0:
+            status = "BELOW-FALLBACK"
+            failures.append(
+                f"{name}: Pallas path ({c_delta:.3f}x) fell below the jnp "
+                "fallback on a TPU host — the dispatcher would be faster "
+                "never picking it")
+        print(f"  {'!' if status != 'ok' else '-'} {name}: "
+              f"delta {b_delta:.3f} -> {c_delta:.3f} "
+              f"[{impl}, floor {floor:.3f}] {status}")
+    return failures
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--baseline", default=BASELINE)
+    ap.add_argument("--refresh", action="store_true",
+                    help="rewrite the baseline from a fresh bench run, "
+                         "then check against it")
+    args = ap.parse_args()
+    if args.refresh:
+        print(f"# refreshing baseline -> {args.baseline}")
+        current = _fresh(args.baseline)
+    else:
+        current = _fresh()
+    if not os.path.exists(args.baseline):
+        print(f"kernel-smoke: no baseline at {args.baseline}; run "
+              "`python scripts/kernel_smoke.py --refresh` and commit it",
+              file=sys.stderr)
+        return 2
+    baseline = _load_baseline(args.baseline)
+    print(f"# kernel-smoke: {len(current)} kernels vs {args.baseline}")
+    failures = check(baseline, current)
+    for attempt in range(2, MAX_ATTEMPTS + 1):
+        if not failures:
+            break
+        print(f"# retrying noisy measurement (attempt {attempt}/"
+              f"{MAX_ATTEMPTS}, keeping best-of deltas)")
+        for name, row in _fresh().items():
+            if name in current and \
+                    row["fallback_delta"] > current[name]["fallback_delta"]:
+                current[name] = row
+        failures = check(baseline, current)
+    if failures:
+        print("\nkernel-smoke FAILED:", file=sys.stderr)
+        for f in failures:
+            print(f"  * {f}", file=sys.stderr)
+        return 1
+    print(f"# kernel-smoke OK ({len(current)} kernels)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -114,6 +114,15 @@ class ServeJob(JobSpec):
     paged: bool = False                         # legacy alias: backend="paged"
     block_size: int = 16                        # KV rows per physical block
     prefix_share: bool = True                   # COW prefix sharing (paged)
+    # kv_dtype='int8' quantizes the paged KV pool (per-row scales stored
+    # alongside the pages; dequantized inside the attention kernel), so
+    # the same byte budget admits ~4x the blocks.  Default None keeps
+    # full-precision KV.  Needs a paged pool (backend='paged', or 'spec'
+    # with spec_inner='paged') and a family declaring ``kv_quant``.
+    kv_dtype: Optional[str] = None              # None|"fp"|"int8"
+    # verify_impl picks the spec backend's paged-verify kernel ("pallas"
+    # enables the fused multi-query kernel; None follows the decode impl)
+    verify_impl: Optional[str] = None
     # "auto" lets Session.submit pick the draft and/or k from the machine
     # profile's measured draft-vs-target step times (repro.profiler);
     # resolved before validation, recorded in plan meta as ``draft_auto``
@@ -233,6 +242,35 @@ class ServeJob(JobSpec):
             raise ValueError(
                 "conflicting spec: params_from names a TrainJob to serve "
                 "from, but explicit params were also given; drop one")
+        self._validate_kv_dtype()
+
+    def _validate_kv_dtype(self) -> None:
+        """Fail fast on KV-quantization misconfiguration: int8 needs a
+        paged pool and a family that declares the quantized layout."""
+        if self.kv_dtype not in (None, "fp", "int8"):
+            raise ValueError(
+                f"kv_dtype={self.kv_dtype!r}: expected None, 'fp', or "
+                "'int8'")
+        req = self.requested_backend()
+        has_pages = req == "paged" or (
+            req == "spec" and self.resolved_spec_inner() == "paged")
+        if self.kv_dtype == "int8":
+            if not has_pages:
+                raise ValueError(
+                    "kv_dtype='int8' quantizes the paged block pool, but "
+                    f"this job requests {req!r} — serve with "
+                    "backend='paged' (or backend='spec', "
+                    "spec_inner='paged')")
+            from repro.models.registry import spec as family_spec
+            fspec = family_spec(self.cfg)
+            if not fspec.kv_quant:
+                raise ValueError(
+                    f"{self.cfg.name} ({self.cfg.family}): "
+                    f"{fspec.why_not('kv_quant')}")
+        if self.verify_impl is not None and req != "spec":
+            raise ValueError(
+                "verify_impl selects the spec backend's paged-verify "
+                f"kernel, but this job requests {req!r}")
 
     def requested_backend(self) -> str:
         """The backend this spec asks for, before capability fallback."""

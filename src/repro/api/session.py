@@ -391,10 +391,12 @@ class Session:
         meta["paged"] = backend == "paged"
         if backend == "paged":
             from repro.serving import blocks_for_rows
-            block_bytes = spec.kv_block_bytes(job.cfg, job.block_size)
+            block_bytes = spec.kv_block_bytes(job.cfg, job.block_size,
+                                              job.kv_dtype)
             per_req = blocks_for_rows(job.max_seq, job.block_size)
             meta.update(
                 block_size=job.block_size,
+                kv_dtype=job.kv_dtype or "fp",
                 block_bytes=block_bytes,
                 max_blocks_per_request=per_req,
                 # worst case every lane pinned at max_seq — the cap the
@@ -702,7 +704,8 @@ class Session:
                       draft_k=job.draft_k,
                       spec_inner=job.resolved_spec_inner(),
                       block_size=job.block_size,
-                      prefix_share=job.prefix_share)
+                      prefix_share=job.prefix_share,
+                      kv_dtype=job.kv_dtype, verify_impl=job.verify_impl)
             if job.kv_budget_bytes is None:
                 # target KV (incl. verify headroom) AND draft state charge
                 # the session's device-0 ledger — the budget SHARP
@@ -713,6 +716,7 @@ class Session:
         elif effective == "paged":
             kw.update(block_size=job.block_size,
                       prefix_share=job.prefix_share,
+                      kv_dtype=job.kv_dtype,
                       tiered_kv=job.tiered_kv,
                       prefetch_ticks=job.prefetch_ticks)
             if job.kv_budget_bytes is None:

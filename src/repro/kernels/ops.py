@@ -15,7 +15,10 @@ import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention_bhsd
-from repro.kernels.paged_attention import paged_attention_lanes
+from repro.kernels.fused_decode import fused_decode_layer as _fused_layer
+from repro.kernels.paged_attention import (paged_attention_lanes,
+                                           paged_attention_quant_lanes)
+from repro.kernels.paged_verify import paged_verify_lanes
 from repro.kernels.rmsnorm import rms_norm_2d
 from repro.kernels.ssd_scan import ssd_scan_bshpn
 from repro.kernels.swiglu import swiglu_2d
@@ -65,6 +68,67 @@ def paged_attention(q, k_pages, v_pages, tables, lengths, *,
     return paged_attention_lanes(q, k_pages, v_pages, tables, lengths,
                                  window=window,
                                  interpret=(impl == "pallas_interpret"))
+
+
+@partial(jax.jit, static_argnames=("window", "impl"))
+def paged_verify(q, k_pages, v_pages, tables, lengths, *,
+                 window=None, impl: str = "jnp"):
+    """Multi-query (speculative verify) attention through a block table.
+
+    q: (n, k, nh, hd) — all k draft positions per lane, already scattered
+    into the pages; tables/lengths as `paged_attention` except ``lengths``
+    counts rows committed BEFORE the round (query ``i`` attends through
+    logical row ``lengths + i``).  ``impl``: 'jnp' (gathered fallback,
+    the historical path) | 'pallas' | 'pallas_interpret'.
+    """
+    if impl == "jnp":
+        return ref.paged_verify_ref(q, k_pages, v_pages, tables, lengths,
+                                    window=window)
+    if impl not in ("pallas", "pallas_interpret"):
+        raise ValueError(f"paged_verify impl={impl!r}: expected "
+                         "'jnp', 'pallas', or 'pallas_interpret'")
+    return paged_verify_lanes(q, k_pages, v_pages, tables, lengths,
+                              window=window,
+                              interpret=(impl == "pallas_interpret"))
+
+
+@partial(jax.jit, static_argnames=("window", "impl"))
+def paged_attention_quant(q, k_pages, v_pages, k_scales, v_scales,
+                          tables, lengths, *, window=None,
+                          impl: str = "jnp"):
+    """int8-KV single-token attention: pages are int8 with per-row f32
+    scales (`ref.quantize_kv` layout); dequantization happens inside the
+    kernel (or on the gathered rows for the jnp fallback)."""
+    if impl == "jnp":
+        return ref.paged_attention_quant_ref(
+            q, k_pages, v_pages, k_scales, v_scales, tables, lengths,
+            window=window)
+    if impl not in ("pallas", "pallas_interpret"):
+        raise ValueError(f"paged_attention_quant impl={impl!r}: expected "
+                         "'jnp', 'pallas', or 'pallas_interpret'")
+    return paged_attention_quant_lanes(
+        q, k_pages, v_pages, k_scales, v_scales, tables, lengths,
+        window=window, interpret=(impl == "pallas_interpret"))
+
+
+@partial(jax.jit, static_argnames=("window", "eps", "impl"))
+def fused_decode_layer(h, q, k_pages, v_pages, tables, lengths, wo,
+                       mlp_scale, w_gate, w_up, w_down, *, window=None,
+                       eps: float = 1e-6, impl: str = "jnp"):
+    """Fused paged decode layer: attention through the block table + wo
+    projection + residual + RMSNorm + SwiGLU + residual, one launch per
+    layer (see `fused_decode.fused_decode_layer`).  The jnp fallback
+    composes the same epilogue from the oracles."""
+    if impl == "jnp":
+        return ref.fused_decode_layer_ref(
+            h, q, k_pages, v_pages, tables, lengths, wo, mlp_scale,
+            w_gate, w_up, w_down, window=window, eps=eps)
+    if impl not in ("pallas", "pallas_interpret"):
+        raise ValueError(f"fused_decode_layer impl={impl!r}: expected "
+                         "'jnp', 'pallas', or 'pallas_interpret'")
+    return _fused_layer(h, q, k_pages, v_pages, tables, lengths, wo,
+                        mlp_scale, w_gate, w_up, w_down, window=window,
+                        eps=eps, interpret=(impl == "pallas_interpret"))
 
 
 @partial(jax.jit, static_argnames=("chunk", "interpret"))

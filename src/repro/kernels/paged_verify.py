@@ -1,0 +1,124 @@
+"""Pallas TPU multi-query paged attention for speculative-decode verify.
+
+`SpecDecodeBackend` verifies all k draft tokens in one batched forward;
+historically that forward gathered each lane's pages into a contiguous
+``(n, B*bs)`` copy (`models/layers.paged_attention_verify`'s inline jnp
+path, now `ref.paged_verify_ref`).  This kernel reads K/V straight
+through the block table instead — same grid and scalar-prefetch layout
+as `paged_attention.paged_attention_lanes`, but the q block carries all
+k query positions at once and the causal mask is per-position: query
+``i`` of a lane sits at logical row ``lengths[lane] + i`` (its own K/V
+row is already scattered) and attends to ``[0, lengths + i]``.
+
+The k query rows and the GQA groups are flattened into one
+``(k * groups)`` row axis so the online-softmax scratch carries across
+the block dimension exactly like the single-token kernel.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _verify_kernel(tables_ref, lengths_ref, q_ref, k_ref, v_ref, o_ref,
+                   m_scr, l_scr, acc_scr, *,
+                   scale: float, block_size: int, n_queries: int, window):
+    lane = pl.program_id(0)
+    b = pl.program_id(2)
+    nb = pl.num_programs(2)
+
+    @pl.when(b == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    kk = n_queries
+    groups = q_ref.shape[2]
+    q = q_ref[0].astype(jnp.float32).reshape(kk * groups, -1)
+    k = k_ref[0, :, 0].astype(jnp.float32)       # (block_size, hd)
+    v = v_ref[0, :, 0].astype(jnp.float32)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale
+
+    length = lengths_ref[lane]                   # rows committed pre-round
+    rows = kk * groups
+    k_pos = b * block_size + jax.lax.broadcasted_iota(
+        jnp.int32, (rows, block_size), 1)
+    # flattened row r holds query position r // groups, at logical row
+    # lengths[lane] + (r // groups)
+    q_pos = length + jax.lax.broadcasted_iota(
+        jnp.int32, (rows, block_size), 0) // groups
+    mask = k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    l_prev = l_scr[...]
+    m_cur = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    p = jnp.exp(s - m_cur[:, None])
+    alpha = jnp.exp(m_prev - m_cur)
+    l_scr[...] = l_prev * alpha + jnp.sum(p, axis=-1)
+    acc_scr[...] = acc_scr[...] * alpha[:, None] + p @ v
+    m_scr[...] = m_cur
+
+    @pl.when(b == nb - 1)
+    def _finish():
+        denom = jnp.maximum(l_scr[...], 1e-30)[:, None]
+        out = acc_scr[...] / denom
+        o_ref[0] = out.reshape(kk, groups, -1).astype(o_ref.dtype)
+
+
+def paged_verify_lanes(q, k_pages, v_pages, tables, lengths, *,
+                       window=None, interpret: bool = False):
+    """q: (n, k, nh, hd) roped queries, already scattered into the pages;
+    k/v_pages: (P, bs, nkv, hd); tables: (n, B) physical block ids (pad
+    with the garbage block); lengths: (n,) rows committed BEFORE this
+    verify round (query ``i`` attends through row ``lengths + i``).
+    Returns (n, k, nh, hd) in q's dtype."""
+    n, kk, nh, hd = q.shape
+    _, block_size, nkv, _ = k_pages.shape
+    n_blocks = tables.shape[1]
+    assert nh % nkv == 0
+    groups = nh // nkv
+    scale = 1.0 / math.sqrt(hd)
+
+    kernel = functools.partial(_verify_kernel, scale=scale,
+                               block_size=block_size, n_queries=kk,
+                               window=window)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,                   # tables, lengths
+        grid=(n, nkv, n_blocks),
+        in_specs=[
+            pl.BlockSpec((1, kk, groups, hd),
+                         lambda i, kv, b, t, le: (i, 0, kv, 0)),
+            pl.BlockSpec((1, block_size, 1, hd),
+                         lambda i, kv, b, t, le: (t[i, b], 0, kv, 0)),
+            pl.BlockSpec((1, block_size, 1, hd),
+                         lambda i, kv, b, t, le: (t[i, b], 0, kv, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, kk, groups, hd),
+                               lambda i, kv, b, t, le: (i, 0, kv, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((kk * groups,), jnp.float32),     # running max m
+            pltpu.VMEM((kk * groups,), jnp.float32),     # running denom l
+            pltpu.VMEM((kk * groups, hd), jnp.float32),  # output accumulator
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n, kk, nh, hd), q.dtype),
+        interpret=interpret,
+    )(tables.astype(jnp.int32), lengths.astype(jnp.int32), q,
+      k_pages, v_pages)

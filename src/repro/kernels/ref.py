@@ -60,6 +60,143 @@ def paged_attention_ref(q, k_pages, v_pages, tables, lengths, *, window=None):
     return out.reshape(n, nh, hd).astype(q.dtype)
 
 
+def paged_verify_ref(q, k_pages, v_pages, tables, lengths, *, window=None):
+    """Gather-based oracle for multi-query (speculative verify) paged
+    attention.
+
+    q: (n, k, nh, hd) — k query positions per lane, position ``i`` sitting
+    at logical row ``lengths[lane] + i`` (its K/V row is already written);
+    k/v_pages: (P, bs, nkv, hd); tables: (n, B); lengths: (n,) rows
+    committed BEFORE this round (so query ``i`` attends to
+    ``[0, lengths + i]``).  This is exactly the gathered math
+    ``models/layers.paged_attention_verify`` historically ran inline — now
+    the oracle (and jnp fallback) for the fused multi-query kernel."""
+    n, kk, nh, hd = q.shape
+    _, bs, nkv, _ = k_pages.shape
+    nb = tables.shape[1]
+    groups = nh // nkv
+    kg = k_pages[tables].reshape(n, nb * bs, nkv, hd)
+    vg = v_pages[tables].reshape(n, nb * bs, nkv, hd)
+    qg = q.reshape(n, kk, nkv, groups, hd).astype(jnp.float32)
+    logits = jnp.einsum("nqkgh,nskh->nkgqs", qg,
+                        kg.astype(jnp.float32)) / math.sqrt(hd)
+    positions = lengths[:, None] + jnp.arange(kk)[None, :]        # (n, k)
+    kv_pos = jnp.arange(nb * bs)[None, None, :]
+    mask = kv_pos <= positions[:, :, None]                        # (n, k, s)
+    if window is not None:
+        mask &= kv_pos > positions[:, :, None] - window
+    logits = jnp.where(mask[:, None, None, :, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("nkgqs,nskh->nqkgh", probs, vg.astype(jnp.float32))
+    return out.reshape(n, kk, nh, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# int8 KV quantization (per-row symmetric; scales stored alongside pages)
+# ---------------------------------------------------------------------------
+
+QUANT_EPS = 1e-8
+
+
+def quantize_kv(x):
+    """Symmetric per-row int8 quantization over the trailing (head_dim)
+    axis: ``scale = max|x| / 127`` (clamped away from zero so all-zero
+    rows — fresh pages, the garbage block — round-trip to exact zeros).
+    Returns ``(q int8, scale f32)`` with ``scale`` shaped like ``x`` minus
+    its last axis."""
+    x32 = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(x32), axis=-1)
+    scale = jnp.maximum(amax, QUANT_EPS) / 127.0
+    q = jnp.clip(jnp.round(x32 / scale[..., None]), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def dequantize_kv(q, scale):
+    """Inverse of ``quantize_kv``: f32 rows from int8 values + scales."""
+    return q.astype(jnp.float32) * scale[..., None].astype(jnp.float32)
+
+
+def paged_attention_quant_ref(q, k_pages, v_pages, k_scales, v_scales,
+                              tables, lengths, *, window=None):
+    """Gather-based oracle for int8-quantized paged attention.
+
+    k/v_pages: (P, bs, nkv, hd) int8; k/v_scales: (P, bs, nkv) f32 per-row
+    scales.  Gathers the int8 blocks + scales through the table,
+    dequantizes, and runs the same grouped-GQA f32 softmax as
+    ``paged_attention_ref`` — the allclose ground truth for the
+    dequantizing Pallas kernel AND the jnp serving fallback."""
+    n, nh, hd = q.shape
+    _, bs, nkv, _ = k_pages.shape
+    nb = tables.shape[1]
+    groups = nh // nkv
+    k = dequantize_kv(k_pages[tables].reshape(n, nb * bs, nkv, hd),
+                      k_scales[tables].reshape(n, nb * bs, nkv))
+    v = dequantize_kv(v_pages[tables].reshape(n, nb * bs, nkv, hd),
+                      v_scales[tables].reshape(n, nb * bs, nkv))
+    qg = q.reshape(n, nkv, groups, hd).astype(jnp.float32)
+    logits = jnp.einsum("nkgh,nskh->nkgs", qg, k) / math.sqrt(hd)
+    kv_pos = jnp.arange(nb * bs)[None, :]
+    mask = kv_pos < lengths[:, None]
+    if window is not None:
+        mask &= kv_pos > (lengths[:, None] - 1) - window
+    logits = jnp.where(mask[:, None, None, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("nkgs,nskh->nkgh", probs, v)
+    return out.reshape(n, nh, hd).astype(q.dtype)
+
+
+def paged_verify_quant_ref(q, k_pages, v_pages, k_scales, v_scales,
+                           tables, lengths, *, window=None):
+    """Multi-query verify over int8 pages: gather + dequantize, then the
+    `paged_verify_ref` math.  This IS the int8 verify path (spec decode
+    over a quantized inner) — a dedicated multi-query quant kernel is not
+    worth its surface at draft depths k<=8."""
+    n, kk, nh, hd = q.shape
+    _, bs, nkv, _ = k_pages.shape
+    nb = tables.shape[1]
+    groups = nh // nkv
+    kg = dequantize_kv(k_pages[tables].reshape(n, nb * bs, nkv, hd),
+                       k_scales[tables].reshape(n, nb * bs, nkv))
+    vg = dequantize_kv(v_pages[tables].reshape(n, nb * bs, nkv, hd),
+                       v_scales[tables].reshape(n, nb * bs, nkv))
+    qg = q.reshape(n, kk, nkv, groups, hd).astype(jnp.float32)
+    logits = jnp.einsum("nqkgh,nskh->nkgqs", qg, kg) / math.sqrt(hd)
+    positions = lengths[:, None] + jnp.arange(kk)[None, :]
+    kv_pos = jnp.arange(nb * bs)[None, None, :]
+    mask = kv_pos <= positions[:, :, None]
+    if window is not None:
+        mask &= kv_pos > positions[:, :, None] - window
+    logits = jnp.where(mask[:, None, None, :, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("nkgqs,nskh->nqkgh", probs, vg)
+    return out.reshape(n, kk, nh, hd).astype(q.dtype)
+
+
+def fused_decode_layer_ref(h, q, k_pages, v_pages, tables, lengths, wo,
+                           mlp_scale, w_gate, w_up, w_down, *,
+                           window=None, eps: float = 1e-6):
+    """Oracle for the fused paged decode layer: paged attention through
+    the block table, output projection + residual add, RMSNorm, SwiGLU,
+    second residual — the whole per-layer epilogue after QKV projection /
+    rope / the KV scatter (which stay outside: they write the pages).
+
+    h: (n, d) residual stream; q: (n, nh, hd) roped queries;
+    lengths: valid rows per lane INCLUDING the current token (the
+    ``paged_attention`` convention).  Returns the next (n, d) residual."""
+    n, nh, hd = q.shape
+    attn = paged_attention_ref(q, k_pages, v_pages, tables, lengths,
+                               window=window)
+    h32 = h.astype(jnp.float32)
+    h1 = h32 + attn.reshape(n, nh * hd).astype(jnp.float32) \
+        @ wo.astype(jnp.float32)
+    var = jnp.mean(jnp.square(h1), axis=-1, keepdims=True)
+    hn = h1 * jax.lax.rsqrt(var + eps) * mlp_scale.astype(jnp.float32)
+    g = hn @ w_gate.astype(jnp.float32)
+    u = hn @ w_up.astype(jnp.float32)
+    out = h1 + (jax.nn.silu(g) * u) @ w_down.astype(jnp.float32)
+    return out.astype(h.dtype)
+
+
 def ssd_scan_ref(x, log_a, b_coef, c_coef, *, chunk: int):
     """Sequential-recurrence oracle (O(s) scan, independent of the chunked
     algorithm): S_t = exp(a_t) S_{t-1} + B_t x_t^T ; y_t = C_t · S_t."""

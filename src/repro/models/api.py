@@ -66,20 +66,41 @@ def param_count(params) -> int:
 # serving helpers (capability decisions live in the FamilySpec registry)
 # ---------------------------------------------------------------------------
 
-def init_kv_pages(cfg, n_blocks: int, block_size: int):
+def init_kv_pages(cfg, n_blocks: int, block_size: int, kv_dtype=None):
     """Physical KV block pool: {"k","v"} of (L, n_blocks, block_size,
     n_kv_heads, head_dim) in ``cfg.kv_cache_dtype`` — the same layout as
     ``init_kv_cache`` with the block axis where batch was, so one page
-    plane per layer scans exactly like the contiguous cache."""
+    plane per layer scans exactly like the contiguous cache.
+
+    ``kv_dtype='int8'`` allocates the quantized pool instead: int8 pages
+    plus per-row f32 {"k_scale","v_scale"} planes of (L, n_blocks,
+    block_size, n_kv_heads) — rows are quantized on write
+    (``kernels.ref.quantize_kv``) and dequantized inside the attention
+    kernel, so the f32 cache never exists."""
     from repro.models import layers as nn
+    if kv_dtype not in (None, "fp", "int8"):
+        raise ValueError(f"kv_dtype={kv_dtype!r}: expected None, 'fp', "
+                         "or 'int8'")
+    if kv_dtype == "int8":
+        spec = registry.spec(cfg)
+        if not spec.kv_quant:
+            raise ValueError(f"{cfg.name} ({cfg.family}): "
+                             f"{spec.why_not('kv_quant')}")
+        shape = (cfg.n_layers, n_blocks, block_size, cfg.n_kv_heads,
+                 cfg.head_dim)
+        return {"k": jnp.zeros(shape, jnp.int8),
+                "v": jnp.zeros(shape, jnp.int8),
+                "k_scale": jnp.zeros(shape[:-1], jnp.float32),
+                "v_scale": jnp.zeros(shape[:-1], jnp.float32)}
     pages = nn.init_kv_cache(cfg, n_blocks, block_size)
     return {"k": pages["k"], "v": pages["v"]}
 
 
-def kv_block_bytes(cfg, block_size: int) -> int:
-    """Residency cost of ONE physical block across all layers (K and V) —
-    the unit page-granular admission charges against the device ledger."""
-    return registry.spec(cfg).kv_block_bytes(cfg, block_size)
+def kv_block_bytes(cfg, block_size: int, kv_dtype=None) -> int:
+    """Residency cost of ONE physical block across all layers (K and V,
+    plus scale planes for int8 pools) — the unit page-granular admission
+    charges against the device ledger."""
+    return registry.spec(cfg).kv_block_bytes(cfg, block_size, kv_dtype)
 
 
 def paged_decode_step(cfg, params, pages, tables, lengths, tokens, *,

@@ -263,44 +263,113 @@ def attention(params: Params, x: jnp.ndarray, cfg, *,
     return out @ params["wo"].astype(dt), new_cache
 
 
+def _scatter_kv_rows(pages: dict, blk, off, k, v) -> dict:
+    """Write K/V rows through the block table into a pages pytree.
+
+    pages: {"k","v"} of (P, bs, nkv, hd) — plus {"k_scale","v_scale"} of
+    (P, bs, nkv) when the pool is int8-quantized, in which case the rows
+    are quantized per-row on write (`ref.quantize_kv`) and the scales land
+    at the same table-addressed slots.  blk/off index rows; k/v are the
+    new rows broadcast-compatible with pages[blk, off]."""
+    from repro.kernels import ref as kref
+    if "k_scale" in pages:
+        kq, ksc = kref.quantize_kv(k)
+        vq, vsc = kref.quantize_kv(v)
+        return {"k": pages["k"].at[blk, off].set(kq),
+                "v": pages["v"].at[blk, off].set(vq),
+                "k_scale": pages["k_scale"].at[blk, off].set(ksc),
+                "v_scale": pages["v_scale"].at[blk, off].set(vsc)}
+    return {"k": pages["k"].at[blk, off].set(k.astype(pages["k"].dtype)),
+            "v": pages["v"].at[blk, off].set(v.astype(pages["v"].dtype))}
+
+
 def paged_attention_decode(params: Params, x: jnp.ndarray, cfg, *,
-                           k_pages: jnp.ndarray, v_pages: jnp.ndarray,
+                           pages: dict,
                            tables: jnp.ndarray, lengths: jnp.ndarray,
                            window: Optional[int] = None,
                            impl: str = "jnp"):
     """One-token attention block over a paged KV cache (one layer's pages).
 
     x: (n, 1, d) *normed* hidden states, one decode lane per row.
-    k/v_pages: (P, bs, nkv, hd) physical blocks; tables: (n, B) block ids
+    pages: {"k","v"} of (P, bs, nkv, hd) physical blocks (+ per-row
+    {"k_scale","v_scale"} when int8-quantized); tables: (n, B) block ids
     (unused entries must name a valid block — the pool's garbage block);
     lengths: (n,) rows already written, i.e. this token's row index.
 
     Writes this step's K/V row through the block table (one scatter across
     lanes — inactive lanes all land in the shared garbage block) and
     attends to the ``[0, lengths]`` logical prefix via
-    ``kernels.ops.paged_attention``.  Returns (out, (k_pages, v_pages)).
+    ``kernels.ops.paged_attention`` (the dequantizing
+    ``paged_attention_quant`` for int8 pools).  Returns (out, pages).
     """
     n = x.shape[0]
     q, k, v = _project_qkv(params, x, x, cfg)
     positions = lengths[:, None]                       # (n, 1)
     q = apply_rope(q, positions, cfg.rope_theta)
     k = apply_rope(k, positions, cfg.rope_theta)
-    bs = k_pages.shape[1]
+    bs = pages["k"].shape[1]
     blk = tables[jnp.arange(n), lengths // bs]
     off = lengths % bs
-    k_pages = k_pages.at[blk, off].set(k[:, 0].astype(k_pages.dtype))
-    v_pages = v_pages.at[blk, off].set(v[:, 0].astype(v_pages.dtype))
+    pages = _scatter_kv_rows(pages, blk, off, k[:, 0], v[:, 0])
     from repro.kernels import ops as kops
-    out = kops.paged_attention(q[:, 0], k_pages, v_pages, tables,
-                               lengths + 1, window=window, impl=impl)
+    # the fused-layer impl falls back to plain paged attention here (the
+    # quantized / non-SwiGLU configs the fused kernel doesn't cover)
+    attn_impl = {"fused": "pallas",
+                 "fused_interpret": "pallas_interpret"}.get(impl, impl)
+    if "k_scale" in pages:
+        out = kops.paged_attention_quant(
+            q[:, 0], pages["k"], pages["v"], pages["k_scale"],
+            pages["v_scale"], tables, lengths + 1, window=window,
+            impl=attn_impl)
+    else:
+        out = kops.paged_attention(q[:, 0], pages["k"], pages["v"], tables,
+                                   lengths + 1, window=window,
+                                   impl=attn_impl)
     out = out.reshape(n, 1, cfg.n_heads * cfg.head_dim)
-    return out @ params["wo"].astype(x.dtype), (k_pages, v_pages)
+    return out @ params["wo"].astype(x.dtype), pages
+
+
+def paged_decode_layer_fused(lp: Params, h: jnp.ndarray, cfg, *,
+                             pages: dict,
+                             tables: jnp.ndarray, lengths: jnp.ndarray,
+                             window: Optional[int] = None,
+                             interpret: bool = False):
+    """One FULL pre-norm decode block through the fused Pallas kernel:
+    attn-norm + QKV projection + rope + KV scatter run here (they write
+    the pages); attention through the block table, wo projection,
+    residual, MLP RMSNorm, SwiGLU, and the second residual all run inside
+    one `kernels.fused_decode` launch.  Requires ``cfg.norm == 'rms'`` and
+    ``cfg.mlp == 'swiglu'`` and an fp (non-quantized) pool — callers gate
+    on that and fall back to the unfused path otherwise.
+
+    h: (n, 1, d) raw residual stream.  Returns (new_h, pages).
+    """
+    n = h.shape[0]
+    x = rms_norm(lp["attn_norm"], h)
+    q, k, v = _project_qkv(lp["attn"], x, x, cfg)
+    positions = lengths[:, None]
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    bs = pages["k"].shape[1]
+    blk = tables[jnp.arange(n), lengths // bs]
+    off = lengths % bs
+    pages = _scatter_kv_rows(pages, blk, off, k[:, 0], v[:, 0])
+    from repro.kernels import ops as kops
+    dt = h.dtype
+    out = kops.fused_decode_layer(
+        h[:, 0], q[:, 0], pages["k"], pages["v"], tables, lengths + 1,
+        lp["attn"]["wo"].astype(dt), lp["mlp_norm"]["scale"].astype(dt),
+        lp["mlp"]["w_gate"].astype(dt), lp["mlp"]["w_up"].astype(dt),
+        lp["mlp"]["w_down"].astype(dt), window=window,
+        impl="pallas_interpret" if interpret else "pallas")
+    return out[:, None, :], pages
 
 
 def paged_attention_verify(params: Params, x: jnp.ndarray, cfg, *,
-                           k_pages: jnp.ndarray, v_pages: jnp.ndarray,
+                           pages: dict,
                            tables: jnp.ndarray, lengths: jnp.ndarray,
-                           window: Optional[int] = None):
+                           window: Optional[int] = None,
+                           impl: str = "jnp"):
     """k-token attention block over a paged KV cache (speculative verify).
 
     The multi-token twin of ``paged_attention_decode``: x is ``(n, k, d)``
@@ -309,38 +378,34 @@ def paged_attention_verify(params: Params, x: jnp.ndarray, cfg, *,
     scatter (rows ``lengths + [0, k)``; lanes whose table names only the
     garbage block park their rows there harmlessly), then attends each of
     the k query positions to its own causal prefix ``[0, lengths + i]``
-    through a gathered view of the table.  k is small (the draft depth), so
-    the gather is cheap relative to the k decode steps it replaces; a
-    Mosaic multi-query kernel is a follow-on.  Returns
-    ``(out, (k_pages, v_pages))``.
+    via ``kernels.ops.paged_verify`` — the Mosaic multi-query kernel for
+    ``impl='pallas'``, the historical gathered path for ``'jnp'``.  int8
+    pools take the gathered dequant path regardless of ``impl`` (draft
+    depths are too small to earn a dedicated quant kernel).  Returns
+    ``(out, pages)``.
     """
     n, kk, _ = x.shape
-    nh, nkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
     q, k, v = _project_qkv(params, x, x, cfg)
     positions = lengths[:, None] + jnp.arange(kk)[None, :]        # (n, k)
     q = apply_rope(q, positions, cfg.rope_theta)
     k = apply_rope(k, positions, cfg.rope_theta)
-    bs = k_pages.shape[1]
+    bs = pages["k"].shape[1]
     blk = jnp.take_along_axis(tables, positions // bs, axis=1)    # (n, k)
     off = positions % bs
-    k_pages = k_pages.at[blk, off].set(k.astype(k_pages.dtype))
-    v_pages = v_pages.at[blk, off].set(v.astype(v_pages.dtype))
-    nb = tables.shape[1]
-    kg = k_pages[tables].reshape(n, nb * bs, nkv, hd)
-    vg = v_pages[tables].reshape(n, nb * bs, nkv, hd)
-    groups = nh // nkv
-    qg = q.reshape(n, kk, nkv, groups, hd).astype(jnp.float32)
-    logits = jnp.einsum("nqkgh,nskh->nkgqs", qg,
-                        kg.astype(jnp.float32)) / math.sqrt(hd)
-    kv_pos = jnp.arange(nb * bs)[None, None, :]
-    mask = kv_pos <= positions[:, :, None]                        # (n, k, s)
-    if window is not None:
-        mask &= kv_pos > positions[:, :, None] - window
-    logits = jnp.where(mask[:, None, None, :, :], logits, -1e30)
-    probs = jax.nn.softmax(logits, axis=-1)
-    out = jnp.einsum("nkgqs,nskh->nqkgh", probs, vg.astype(jnp.float32))
-    out = out.reshape(n, kk, nh * hd).astype(x.dtype)
-    return out @ params["wo"].astype(x.dtype), (k_pages, v_pages)
+    pages = _scatter_kv_rows(pages, blk, off, k, v)
+    from repro.kernels import ops as kops
+    from repro.kernels import ref as kref
+    attn_impl = {"fused": "pallas",
+                 "fused_interpret": "pallas_interpret"}.get(impl, impl)
+    if "k_scale" in pages:
+        out = kref.paged_verify_quant_ref(
+            q, pages["k"], pages["v"], pages["k_scale"], pages["v_scale"],
+            tables, lengths, window=window)
+    else:
+        out = kops.paged_verify(q, pages["k"], pages["v"], tables, lengths,
+                                window=window, impl=attn_impl)
+    out = out.reshape(n, kk, cfg.n_heads * cfg.head_dim).astype(x.dtype)
+    return out @ params["wo"].astype(x.dtype), pages
 
 
 def init_kv_cache(cfg, batch: int, max_seq: int, n_layers: Optional[int] = None,

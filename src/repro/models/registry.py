@@ -70,11 +70,13 @@ class FamilySpec:
     token_stream_data: bool = True  # train/eval batches are {tokens, labels}
     spec_draftable: bool = False    # multi-token verify + KV rollback work:
     #   the family can be the target (or draft) of speculative decoding
+    kv_quant: bool = False          # paged KV pool can be int8-quantized
+    #   (per-row scales stored alongside pages; requires paging)
     # capability -> one-line reason it is absent (warnings / plan meta)
     notes: dict = field(default_factory=dict)
     # -- cost fns (admission control charges these against the ledger) ------
     decode_state_cost: Optional[Callable[[Any, int, int], int]] = None
-    kv_block_cost: Optional[Callable[[Any, int], int]] = None
+    kv_block_cost: Optional[Callable[..., int]] = None
 
     def decode_state_bytes(self, cfg, batch: int, max_seq: int) -> int:
         """Residency bytes of one decode state (slot-granular admission)."""
@@ -82,12 +84,20 @@ class FamilySpec:
             return self.decode_state_cost(cfg, batch, max_seq)
         return _default_decode_state_bytes(self.module, cfg, batch, max_seq)
 
-    def kv_block_bytes(self, cfg, block_size: int) -> int:
+    def kv_block_bytes(self, cfg, block_size: int, kv_dtype=None) -> int:
         """Residency bytes of ONE physical KV block across all layers
-        (page-granular admission).  Only meaningful when ``paging``."""
-        if self.kv_block_cost is not None:
-            return self.kv_block_cost(cfg, block_size)
-        return _default_kv_block_bytes(cfg, block_size)
+        (page-granular admission).  Only meaningful when ``paging``.
+        ``kv_dtype='int8'`` prices the quantized pool (pages + per-row
+        scale planes) and requires the ``kv_quant`` capability."""
+        if kv_dtype in (None, "fp"):
+            if self.kv_block_cost is not None:
+                return self.kv_block_cost(cfg, block_size)
+            return _default_kv_block_bytes(cfg, block_size)
+        if not self.kv_quant:
+            raise ValueError(
+                f"{self.family}: kv_dtype={kv_dtype!r} unsupported — "
+                f"{self.why_not('kv_quant')}")
+        return self.kv_block_cost(cfg, block_size, kv_dtype)
 
     @property
     def preemptible(self) -> bool:
@@ -106,9 +116,15 @@ class FamilySpec:
                 "pure_kv_state": self.pure_kv_state,
                 "servable": self.servable,
                 "spec_draftable": self.spec_draftable,
+                "kv_quant": self.kv_quant,
                 "preemptible": self.preemptible}
 
     def why_not(self, capability: str) -> str:
+        if capability == "kv_quant" and "kv_quant" not in self.notes:
+            return ("int8 KV quantizes paged blocks on write; " +
+                    ("the family has not declared a quantized page "
+                     "layout + cost model" if self.paging
+                     else self.why_not("paging")))
         if capability == "preemptible" and "preemptible" not in self.notes:
             # derived from paging: explain through the underlying flag
             return ("preemption snapshots paged block tables; " +

@@ -132,31 +132,42 @@ def paged_decode_step(cfg, params, pages, tables, lengths, tokens, *,
                       window=None, impl="jnp"):
     """One decode step over a paged KV cache shared by all lanes.
 
-    tokens: (n, 1); pages: {"k","v"} of (L, P, bs, nkv, hd); tables: (n, B)
-    physical block ids per lane; lengths: (n,) rows already written (this
-    token's row index).  Batched over lanes rather than vmapped — the pages
-    are shared state, so the per-lane programs are not independent — with
-    the per-layer page planes scanned exactly like ``decode_step`` scans
-    the contiguous cache.  Returns (logits (n, 1, V), new pages).
+    tokens: (n, 1); pages: {"k","v"} of (L, P, bs, nkv, hd) — plus per-row
+    {"k_scale","v_scale"} planes of (L, P, bs, nkv) when the pool is
+    int8-quantized; tables: (n, B) physical block ids per lane; lengths:
+    (n,) rows already written (this token's row index).  Batched over
+    lanes rather than vmapped — the pages are shared state, so the
+    per-lane programs are not independent — with the per-layer page
+    pytree scanned exactly like ``decode_step`` scans the contiguous
+    cache.  ``impl='fused'``/``'fused_interpret'`` runs the whole block
+    through ``kernels.fused_decode`` when the config qualifies (RMSNorm +
+    SwiGLU, fp pool); other configs quietly take the equivalent unfused
+    Pallas path.  Returns (logits (n, 1, V), new pages).
     """
     x = nn.embed(params["embed"], tokens, cfg.dtype)
+    win = window if window is not None else cfg.window
+    fused = (impl in ("fused", "fused_interpret") and cfg.norm == "rms"
+             and cfg.mlp == "swiglu" and "k_scale" not in pages)
 
     def body(h, xs):
-        lp, kp, vp = xs
-        a, (nkp, nvp) = nn.paged_attention_decode(
+        lp, pg = xs
+        if fused:
+            return nn.paged_decode_layer_fused(
+                lp, h, cfg, pages=pg, tables=tables, lengths=lengths,
+                window=win, interpret=(impl == "fused_interpret"))
+        a, npg = nn.paged_attention_decode(
             lp["attn"], _norm(cfg, lp["attn_norm"], h), cfg,
-            k_pages=kp, v_pages=vp, tables=tables, lengths=lengths,
-            window=window if window is not None else cfg.window, impl=impl)
+            pages=pg, tables=tables, lengths=lengths,
+            window=win, impl=impl)
         h = h + a
         hn = _norm(cfg, lp["mlp_norm"], h)
         m = (nn.swiglu(lp["mlp"], hn) if cfg.mlp == "swiglu"
              else nn.gelu_mlp(lp["mlp"], hn))
-        return h + m, (nkp, nvp)
+        return h + m, npg
 
-    x, (nk, nv) = jax.lax.scan(body, x,
-                               (params["layers"], pages["k"], pages["v"]))
+    x, new_pages = jax.lax.scan(body, x, (params["layers"], pages))
     x = _norm(cfg, params["final_norm"], x)
-    return nn.unembed(params["embed"], x), {"k": nk, "v": nv}
+    return nn.unembed(params["embed"], x), new_pages
 
 
 def decode_step(cfg, params, state, tokens, *, window=None):
@@ -212,26 +223,26 @@ def paged_verify_step(cfg, params, pages, tables, lengths, tokens, *,
     ``(logits (n, k, V), new pages)``.  The caller owns rollback: advance
     ``lengths`` by only the accepted rows and free/rewind tail blocks —
     rows past a lane's length are masked to zero weight, so rejected
-    draft rows never perturb later decode."""
-    del impl        # verify always uses the gathered multi-query path
+    draft rows never perturb later decode.  ``impl`` routes the per-lane
+    attention: 'jnp' is the historical gathered path, 'pallas' the Mosaic
+    multi-query kernel (`kernels/paged_verify.py`)."""
     x = nn.embed(params["embed"], tokens, cfg.dtype)
 
     def body(h, xs):
-        lp, kp, vp = xs
-        a, (nkp, nvp) = nn.paged_attention_verify(
+        lp, pg = xs
+        a, npg = nn.paged_attention_verify(
             lp["attn"], _norm(cfg, lp["attn_norm"], h), cfg,
-            k_pages=kp, v_pages=vp, tables=tables, lengths=lengths,
-            window=window if window is not None else cfg.window)
+            pages=pg, tables=tables, lengths=lengths,
+            window=window if window is not None else cfg.window, impl=impl)
         h = h + a
         hn = _norm(cfg, lp["mlp_norm"], h)
         m = (nn.swiglu(lp["mlp"], hn) if cfg.mlp == "swiglu"
              else nn.gelu_mlp(lp["mlp"], hn))
-        return h + m, (nkp, nvp)
+        return h + m, npg
 
-    x, (nk, nv) = jax.lax.scan(body, x,
-                               (params["layers"], pages["k"], pages["v"]))
+    x, new_pages = jax.lax.scan(body, x, (params["layers"], pages))
     x = _norm(cfg, params["final_norm"], x)
-    return nn.unembed(params["embed"], x), {"k": nk, "v": nv}
+    return nn.unembed(params["embed"], x), new_pages
 
 
 # ---------------------------------------------------------------------------
@@ -249,11 +260,17 @@ def _kv_state_bytes(cfg, batch: int, max_seq: int) -> int:
     return kv + jnp.dtype(jnp.int32).itemsize
 
 
-def _kv_block_bytes(cfg, block_size: int) -> int:
-    """Analytic residency of ONE physical KV block across all layers."""
+def _kv_block_bytes(cfg, block_size: int, kv_dtype=None) -> int:
+    """Analytic residency of ONE physical KV block across all layers.
+
+    ``kv_dtype='int8'`` prices the quantized pool: one int8 byte per
+    cache element plus a 4-byte f32 scale per (row, kv head) — the page
+    layout ``models.api.init_kv_pages`` allocates."""
+    rows = 2 * cfg.n_layers * block_size * cfg.n_kv_heads
+    if kv_dtype == "int8":
+        return rows * (cfg.head_dim + jnp.dtype(jnp.float32).itemsize)
     item = jnp.dtype(cfg.kv_cache_dtype).itemsize
-    return 2 * cfg.n_layers * block_size * cfg.n_kv_heads \
-        * cfg.head_dim * item
+    return rows * cfg.head_dim * item
 
 
 def _register():
@@ -266,6 +283,7 @@ def _register():
             family=family, module=mod,
             batched_prefill=True, padded_prefill=True, paging=True,
             pure_kv_state=True, servable=True, spec_draftable=True,
+            kv_quant=True,
             token_stream_data=tokens_only,
             notes={} if tokens_only else {
                 "token_stream_data": "VLM batches carry fused patch+text "

@@ -276,13 +276,25 @@ class CostModel:
         """Pick ``draft_model``/``draft_k`` from draft-vs-target step times.
 
         With acceptance probability α per drafted token (greedy-exact
-        acceptance; ``accept_prior`` until measured), a round of k drafts
-        yields E = (1-α^(k+1))/(1-α) tokens and costs k draft steps plus
-        one batched target verify, so expected throughput is
-        E / (k·t_draft + t_target) — maximized over candidates × k.
+        acceptance), a round of k drafts yields E = (1-α^(k+1))/(1-α)
+        tokens and costs k draft steps plus one batched target verify, so
+        expected throughput is E / (k·t_draft + t_target) — maximized
+        over candidates × k.  α prefers the machine profile's MEASURED
+        per-family acceptance rate (``probe_accept_rates``); the fixed
+        ``accept_prior`` is the provenance-tagged fallback for hosts that
+        never probed (or probed before the probe existed).
         """
         t_target = self.tok_seconds(target_cfg)
         src = "measured" if self.has_decode_facts(target_cfg) else "analytic"
+        accept_src, accept_meta = "prior", None
+        if self.facts is not None:
+            rec = (self.facts.accept_rates or {}).get(target_cfg.family)
+            if rec and rec.get("accept_rate") is not None:
+                accept_prior = float(rec["accept_rate"])
+                accept_src = "measured"
+                accept_meta = {k: rec.get(k)
+                               for k in ("target", "draft", "draft_k",
+                                         "rounds")}
 
         if draft_cfg is not None and draft_cfg != "auto":
             candidates = [draft_cfg]
@@ -310,6 +322,8 @@ class CostModel:
         rec = {"source": src, "draft_model": cand.name, "draft_k": k,
                "t_target_s": t_target, "t_draft_s": t_draft,
                "accept_prior": accept_prior,
+               "accept_source": accept_src,
+               "accept_probe": accept_meta,
                "expected_tok_per_s": best[0],
                "n_candidates": len(candidates)}
         self.provenance[f"draft:{target_cfg.name}"] = rec

@@ -86,6 +86,10 @@ class MachineFacts:
     transfer: dict = field(default_factory=dict)    # {"h2d":[rows],"d2h":[..]}
     decode: dict = field(default_factory=dict)      # family -> grid record
     kernels: dict = field(default_factory=dict)     # name -> timing record
+    # family -> measured draft-acceptance record from probe_accept_rates
+    # ({"target","draft","draft_k","accept_rate","rounds"}); absent for
+    # profiles written before the probe existed (from_dict defaults it)
+    accept_rates: dict = field(default_factory=dict)
     notes: dict = field(default_factory=dict)       # probe provenance/knobs
 
     # -- identity -----------------------------------------------------------
@@ -139,6 +143,7 @@ class MachineFacts:
                                 for d, rows in self.transfer.items()},
             "decode_families": sorted(self.decode),
             "kernels": sorted(self.kernels),
+            "accept_rate_families": sorted(self.accept_rates),
         }
 
 

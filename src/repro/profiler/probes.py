@@ -211,6 +211,60 @@ def probe_kernels(*, quick: bool = False, iters: int = 3) -> dict:
     kern_s = _time_call(lambda *a: ops.swiglu(*a), xm, wg, wu, wd,
                         iters=iters)
     out["swiglu"] = _kernel_row(ref_s, kern_s, rows=m)
+
+    # paged decode hot path: shared block-table fixture for the four
+    # paged kernels (decode attention, multi-query verify, fused layer,
+    # int8-dequant attention)
+    impl = "pallas" if jax.default_backend() == "tpu" else "pallas_interpret"
+    n, nkv, g, hd, bs, B = (4, 2, 2, 32, 8, 4) if quick \
+        else (8, 2, 4, 64, 16, 8)
+    kk, P = 3, n * B + 1
+    ks = jax.random.split(key, 4)
+    kp = jax.random.normal(ks[0], (P, bs, nkv, hd), jnp.float32)
+    vp = jax.random.normal(ks[1], (P, bs, nkv, hd), jnp.float32)
+    qd = jax.random.normal(ks[2], (n, nkv * g, hd), jnp.float32)
+    qv = jax.random.normal(ks[3], (n, kk, nkv * g, hd), jnp.float32)
+    rng = np.random.default_rng(0)
+    tables = jnp.asarray(
+        (rng.permutation(P - 1)[: n * B] + 1).reshape(n, B), jnp.int32)
+    lengths = jnp.asarray(rng.integers(1, B * bs - kk, n), jnp.int32)
+
+    ref_s = _time_call(jax.jit(ref.paged_attention_ref),
+                       qd, kp, vp, tables, lengths, iters=iters)
+    kern_s = _time_call(lambda *a: ops.paged_attention(*a, impl=impl),
+                        qd, kp, vp, tables, lengths, iters=iters)
+    out["paged_attention"] = _kernel_row(ref_s, kern_s, rows=n)
+
+    ref_s = _time_call(jax.jit(ref.paged_verify_ref),
+                       qv, kp, vp, tables, lengths, iters=iters)
+    kern_s = _time_call(lambda *a: ops.paged_verify(*a, impl=impl),
+                        qv, kp, vp, tables, lengths, iters=iters)
+    out["paged_verify"] = _kernel_row(ref_s, kern_s, rows=n * kk)
+
+    kq, ksc = ref.quantize_kv(kp)
+    vq, vsc = ref.quantize_kv(vp)
+    ref_s = _time_call(jax.jit(ref.paged_attention_quant_ref),
+                       qd, kq, vq, ksc, vsc, tables, lengths, iters=iters)
+    kern_s = _time_call(
+        lambda *a: ops.paged_attention_quant(*a, impl=impl),
+        qd, kq, vq, ksc, vsc, tables, lengths, iters=iters)
+    out["paged_attention_quant"] = _kernel_row(ref_s, kern_s, rows=n)
+
+    d = nkv * g * hd
+    f = 2 * d
+    ks = jax.random.split(key, 7)
+    h = jax.random.normal(ks[0], (n, d))
+    wo = jax.random.normal(ks[1], (nkv * g * hd, d)) * 0.05
+    mscale = jax.random.normal(ks[2], (d,)) * 0.1 + 1.0
+    wg2 = jax.random.normal(ks[3], (d, f)) * 0.05
+    wu2 = jax.random.normal(ks[4], (d, f)) * 0.05
+    wd2 = jax.random.normal(ks[5], (f, d)) * 0.05
+    args = (h, qd, kp, vp, tables, lengths, wo, mscale, wg2, wu2, wd2)
+    ref_s = _time_call(jax.jit(ref.fused_decode_layer_ref), *args,
+                       iters=iters)
+    kern_s = _time_call(lambda *a: ops.fused_decode_layer(*a, impl=impl),
+                        *args, iters=iters)
+    out["fused_decode_layer"] = _kernel_row(ref_s, kern_s, rows=n)
     return out
 
 
@@ -221,6 +275,61 @@ def _kernel_row(ref_s: float, kern_s: float, *, rows: int) -> dict:
             "kernel_rows_per_s": rows / max(kern_s, 1e-12),
             "default_impl": "pallas" if jax.default_backend() == "tpu"
             else "interpret"}
+
+
+# ---------------------------------------------------------------------------
+# draft-acceptance rates (speculative decode priors)
+# ---------------------------------------------------------------------------
+
+def probe_accept_rates(*, quick: bool = False) -> dict:
+    """Measured greedy-exact draft-acceptance rate per spec-draftable
+    family: a tiny spec workload with the canonical shrunk draft (the
+    family's smoke arch at half depth, same vocab) through the real
+    ``SpecDecodeBackend``.  ``CostModel.draft_plan`` prefers these over
+    its fixed 0.8 prior — acceptance is a property of THIS model family's
+    logit landscape, not a universal constant.
+
+    A family whose probe fails is simply absent (the prior stays), the
+    same degrade-to-analytic contract as ``probe_decode``.
+    """
+    from repro.configs import get_config
+    from repro.models import api as mapi
+    from repro.models.registry import spec as family_spec
+    from repro.serving import InferenceEngine
+    out: dict[str, dict] = {}
+    errors: dict[str, str] = {}
+    n_req, gen = (3, 6) if quick else (6, 12)
+    for fam, arch in PROBE_FAMILY_ARCHS.items():
+        fspec = family_spec(fam)
+        if not (fspec.spec_draftable and fspec.servable):
+            continue
+        try:
+            cfg = get_config(arch, smoke=True)
+            draft_cfg = cfg.replace(n_layers=max(1, cfg.n_layers // 2),
+                                    name=f"{cfg.name}-draft-probe")
+            params = mapi.init_params(cfg, jax.random.PRNGKey(0))
+            draft_params = mapi.init_params(draft_cfg, jax.random.PRNGKey(0))
+            eng = InferenceEngine(cfg, params, capacity=min(4, n_req),
+                                  max_seq=64, backend="spec",
+                                  draft_cfg=draft_cfg,
+                                  draft_params=draft_params, draft_k=3,
+                                  model_name=f"accept-probe-{cfg.name}")
+            for r in range(n_req):
+                prompt = np.asarray(jax.random.randint(
+                    jax.random.PRNGKey(7000 + r), (4 + r,), 0,
+                    cfg.vocab_size, jnp.int32))
+                eng.submit(prompt, gen)
+            eng.run()
+            s = eng.summary()
+            out[fam] = {"target": cfg.name, "draft": draft_cfg.name,
+                        "draft_k": 3,
+                        "accept_rate": s["draft_accept_rate"],
+                        "rounds": s["spec_rounds"]}
+        except Exception as e:      # record, don't abort the profile
+            errors[fam] = f"{type(e).__name__}: {e}"
+    if errors:
+        out["_errors"] = errors
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -240,6 +349,9 @@ def build_facts(*, quick: bool = False,
         decode = probe_decode(quick=quick, families=families)
         facts.notes["decode_errors"] = decode.pop("_errors", {})
         facts.decode = decode
+        accept = probe_accept_rates(quick=quick)
+        facts.notes["accept_errors"] = accept.pop("_errors", {})
+        facts.accept_rates = accept
     if not skip_kernels:
         facts.kernels = probe_kernels(quick=quick)
     return facts

@@ -193,16 +193,18 @@ def _compiled_draft_prefill(cfg, window):
 
 
 @lru_cache(maxsize=None)
-def _compiled_page_scatter(block_size):
+def _compiled_page_scatter(block_size, quant=False):
     """Scatter freshly prefilled contiguous KV rows into physical blocks.
 
     k/v_new: (n, L, 1, W, nkv, hd) stacked prefill output, W a multiple of
     ``block_size``; ids: (n * W/bs,) physical block per logical block, all
     requests concatenated (aliased blocks are redirected to the garbage
-    block — their owner already holds identical rows).  Pages are donated
-    — the scatter updates the pool in place instead of copying every page
-    per admission."""
-    def scatter(kp, vp, k_new, v_new, ids):
+    block — their owner already holds identical rows).  The pages pytree
+    is donated — the scatter updates the pool in place instead of copying
+    every page per admission.  ``quant`` pools quantize the rows per-row
+    on the way in and land the scales in the scale planes — prefill
+    states stay fp; only the pool is int8."""
+    def scatter(pages, k_new, v_new, ids):
         n, L, _, W, nkv, hd = k_new.shape
         nb = W // block_size
 
@@ -210,37 +212,45 @@ def _compiled_page_scatter(block_size):
             a = a[:, :, 0].transpose(1, 0, 2, 3, 4)        # (L, n, W, kv, hd)
             return a.reshape(L, n * nb, block_size, nkv, hd)
 
-        kp = kp.at[:, ids].set(resh(k_new).astype(kp.dtype))
-        vp = vp.at[:, ids].set(resh(v_new).astype(vp.dtype))
-        return kp, vp
+        k_r, v_r = resh(k_new), resh(v_new)
+        if quant:
+            from repro.kernels import ref as kref
+            kq, ks = kref.quantize_kv(k_r)
+            vq, vs = kref.quantize_kv(v_r)
+            return {"k": pages["k"].at[:, ids].set(kq),
+                    "v": pages["v"].at[:, ids].set(vq),
+                    "k_scale": pages["k_scale"].at[:, ids].set(ks),
+                    "v_scale": pages["v_scale"].at[:, ids].set(vs)}
+        return {"k": pages["k"].at[:, ids].set(
+                    k_r.astype(pages["k"].dtype)),
+                "v": pages["v"].at[:, ids].set(
+                    v_r.astype(pages["v"].dtype))}
 
-    return jax.jit(scatter, donate_argnums=(0, 1))
+    return jax.jit(scatter, donate_argnums=(0,))
 
 
 @lru_cache(maxsize=None)
 def _compiled_page_copy():
-    """Copy one physical block's rows (all layers) src -> dst: the
-    copy-on-write primitive.  Pages donated — an in-place row copy, not a
-    pool copy."""
-    def copy(kp, vp, src, dst):
-        kp = kp.at[:, dst].set(kp[:, src])
-        vp = vp.at[:, dst].set(vp[:, src])
-        return kp, vp
+    """Copy one physical block's rows (all layers, every pages leaf —
+    scale planes included for int8 pools) src -> dst: the copy-on-write
+    primitive.  Pages donated — an in-place row copy, not a pool copy."""
+    def copy(pages, src, dst):
+        return jax.tree.map(lambda p: p.at[:, dst].set(p[:, src]), pages)
 
-    return jax.jit(copy, donate_argnums=(0, 1))
+    return jax.jit(copy, donate_argnums=(0,))
 
 
 @lru_cache(maxsize=None)
 def _compiled_block_write():
-    """Write one block's host rows into a physical block (all layers):
-    the tiered-KV prefetch landing step.  Pages donated, like the CoW
-    copy — an in-place row write, not a pool copy."""
-    def write(kp, vp, bid, kb, vb):
-        kp = kp.at[:, bid].set(kb)
-        vp = vp.at[:, bid].set(vb)
-        return kp, vp
+    """Write one block's host rows (a per-leaf dict mirroring the pages
+    pytree) into a physical block across all layers: the tiered-KV
+    prefetch landing step.  Pages donated, like the CoW copy — an
+    in-place row write, not a pool copy."""
+    def write(pages, bid, rows):
+        return jax.tree.map(
+            lambda p, r: p.at[:, bid].set(r.astype(p.dtype)), pages, rows)
 
-    return jax.jit(write, donate_argnums=(0, 1))
+    return jax.jit(write, donate_argnums=(0,))
 
 
 # ---------------------------------------------------------------------------
@@ -350,7 +360,8 @@ class PagedBackend:
                  kv_budget_bytes: Optional[int] = None, ledger=None,
                  paged_impl: Optional[str] = None,
                  prefix_share: bool = True, verify_headroom: int = 0,
-                 tiered: bool = False, prefetch_ticks: int = 1):
+                 tiered: bool = False, prefetch_ticks: int = 1,
+                 kv_dtype: Optional[str] = None):
         from repro.core.spilling import DeviceMemory
         from repro.kernels import ops as kops
         if ledger is not None and kv_budget_bytes is not None:
@@ -362,13 +373,19 @@ class PagedBackend:
         self.max_seq = max_seq
         self.block_size = block_size
         self.prefix_share = bool(prefix_share)
+        # kv_dtype='int8' quantizes the paged pool (per-row scales stored
+        # alongside the pages); block_bytes shrinks ~3.8x, so the same
+        # byte budget admits proportionally more blocks.  Validated (and
+        # priced) through the family registry's kv_quant capability.
+        self.kv_dtype = "fp" if kv_dtype in (None, "fp") else kv_dtype
         # extra rows per lane a wrapping speculative backend's k-token
         # verify may transiently write past the decode extent; folded into
         # every worst-case reservation so verify allocation can never fail
         self.verify_headroom = verify_headroom
         self.max_blocks = blocks_for_rows(max_seq + verify_headroom,
                                           block_size)
-        block_bytes = family_spec(cfg).kv_block_bytes(cfg, block_size)
+        block_bytes = family_spec(cfg).kv_block_bytes(cfg, block_size,
+                                                      self.kv_dtype)
         worst = default_n_blocks(capacity, max_seq + verify_headroom,
                                  block_size, n_blocks)
         if ledger is None:
@@ -385,11 +402,12 @@ class PagedBackend:
             # cap the physical pool at the budget's worth of blocks
             worst = max(2, min(worst,
                                int(ledger.budget) // block_bytes + 1))
-        self.pool = BlockPool(cfg, worst, block_size)
+        self.pool = BlockPool(cfg, worst, block_size, self.kv_dtype)
         self.budget = PagedKVBudget(ledger, self.pool.block_bytes)
         self.paged_impl = paged_impl or kops.default_paged_impl()
         self._decode = _compiled_paged_decode(cfg, window, self.paged_impl)
-        self._page_scatter = _compiled_page_scatter(block_size)
+        self._page_scatter = _compiled_page_scatter(
+            block_size, self.kv_dtype == "int8")
         self._page_copy = _compiled_page_copy()
         self._tables = np.full((capacity, self.max_blocks),
                                BlockPool.GARBAGE, np.int32)
@@ -696,7 +714,7 @@ class PagedBackend:
         # them like ordinary owned blocks by completing the bookkeeping
         st = self._prefetching.pop(rid, None)
         if st is not None:
-            for j, (bid, _k, _v) in st["rows"].items():
+            for j, (bid, _rows) in st["rows"].items():
                 blocks[j] = bid
                 owned.add(bid)
         hostmap = self._demoted.pop(rid, {})
@@ -752,9 +770,9 @@ class PagedBackend:
                 break
             if bid < 0 or not self._demotable(bid, owned):
                 continue
-            k_rows = np.array(self.pool.pages["k"][:, bid])
-            v_rows = np.array(self.pool.pages["v"][:, bid])
-            hostmap[j] = self.host_pool.put(k_rows, v_rows)
+            hostmap[j] = self.host_pool.put(
+                {name: np.array(leaf[:, bid])
+                 for name, leaf in self.pool.pages.items()})
             owned.discard(bid)
             self.pool.decref(bid)
             blocks[j] = -1
@@ -814,8 +832,7 @@ class PagedBackend:
         self._committed_blocks += n
         rows = {}
         for (j, key), bid in zip(sorted(hostmap.items()), ids):
-            k_rows, v_rows = self.host_pool.pop(key)
-            rows[j] = (bid, k_rows, v_rows)
+            rows[j] = (bid, self.host_pool.pop(key))
         del self._demoted[rid]
         self._prefetching[rid] = {"rows": rows,
                                   "ticks": self.prefetch_ticks,
@@ -833,11 +850,10 @@ class PagedBackend:
             if st["ticks"] > 0:
                 continue
             blocks, owned, _length = self._preempted[rid]
-            for j, (bid, k_rows, v_rows) in sorted(st["rows"].items()):
-                kp, vp = self._block_write(
-                    self.pool.pages["k"], self.pool.pages["v"], bid,
-                    jnp.asarray(k_rows), jnp.asarray(v_rows))
-                self.pool.pages = {"k": kp, "v": vp}
+            for j, (bid, host_rows) in sorted(st["rows"].items()):
+                self.pool.pages = self._block_write(
+                    self.pool.pages, bid,
+                    {name: jnp.asarray(r) for name, r in host_rows.items()})
                 blocks[j] = bid
                 owned.add(bid)
             self.kv_prefetch_block_moves += len(st["rows"])
@@ -882,10 +898,9 @@ class PagedBackend:
             [bid if bid in self._lane_owned[r.slot] else BlockPool.GARBAGE
              for bid in self._lane_blocks[r.slot]]
             for r in group]).astype(np.int32)
-        kp, vp = self._page_scatter(
-            self.pool.pages["k"], self.pool.pages["v"],
-            states["kv"]["k"], states["kv"]["v"], jnp.asarray(ids))
-        self.pool.pages = {"k": kp, "v": vp}
+        self.pool.pages = self._page_scatter(
+            self.pool.pages, states["kv"]["k"], states["kv"]["v"],
+            jnp.asarray(ids))
         for r in group:
             self._lengths[r.slot] = r.prompt_len
 
@@ -910,9 +925,8 @@ class PagedBackend:
                 if blocks[j] not in owned:
                     (dst,) = self.pool.alloc(1)
                     src = blocks[j]
-                    kp, vp = self._page_copy(
-                        self.pool.pages["k"], self.pool.pages["v"], src, dst)
-                    self.pool.pages = {"k": kp, "v": vp}
+                    self.pool.pages = self._page_copy(
+                        self.pool.pages, src, dst)
                     self._tables[lane, j] = dst
                     blocks[j] = dst
                     owned.add(dst)
@@ -956,6 +970,7 @@ class PagedBackend:
     def summary(self) -> dict:
         out = {
             "block_size": self.block_size,
+            "kv_dtype": self.kv_dtype,
             "block_bytes": self.pool.block_bytes,
             "n_blocks": self.pool.n_blocks,
             "kv_page_peak_bytes": self.pool.peak_bytes(),
@@ -1045,7 +1060,9 @@ class SpecDecodeBackend:
                  kv_budget_bytes: Optional[int] = None, ledger=None,
                  block_size: int = 16, n_blocks: Optional[int] = None,
                  paged_impl: Optional[str] = None,
-                 prefix_share: bool = True):
+                 prefix_share: bool = True,
+                 kv_dtype: Optional[str] = None,
+                 verify_impl: Optional[str] = None):
         if draft_cfg is None or draft_params is None:
             raise ValueError(
                 "the spec backend needs a draft member model: pass "
@@ -1082,7 +1099,12 @@ class SpecDecodeBackend:
         if inner == "paged":
             inner_kw.update(block_size=block_size, n_blocks=n_blocks,
                             paged_impl=paged_impl,
-                            prefix_share=prefix_share)
+                            prefix_share=prefix_share, kv_dtype=kv_dtype)
+        elif kv_dtype not in (None, "fp"):
+            raise ValueError(
+                f"kv_dtype={kv_dtype!r} needs the paged block pool: serve "
+                "with inner='paged' (the slot inner keeps contiguous fp "
+                "decode state)")
         self.inner = BACKENDS[inner](cfg, capacity, max_seq, **inner_kw)
         # draft decode state: one stacked pool over the same lane ids the
         # inner backend assigns; k extra rows absorb the round's writes.
@@ -1102,10 +1124,21 @@ class SpecDecodeBackend:
         self._draft_rollback = _compiled_rollback(draft_cfg)
         self._rollback = _compiled_rollback(cfg)
         if inner == "slot":
+            if verify_impl is not None:
+                raise ValueError(
+                    f"verify_impl={verify_impl!r} selects a paged verify "
+                    "kernel: serve with inner='paged' (the slot inner "
+                    "verifies against contiguous decode state)")
+            self.verify_impl = None
             self._verify = _compiled_verify(cfg, window)
         else:
+            # default: verify through whatever impl decode uses; the
+            # fused multi-query kernel activates with verify_impl=
+            # 'pallas' (or 'pallas_interpret' off-TPU) — one launch
+            # scores all k draft rows through the block tables.
+            self.verify_impl = verify_impl or self.inner.paged_impl
             self._verify = _compiled_paged_verify(cfg, window,
-                                                  self.inner.paged_impl)
+                                                  self.verify_impl)
         self._pending: dict[int, deque] = {}    # lane -> emitted tokens
         self.degraded = False       # soft-overload shed: draft model off
         # round stats (summary / bench --spec)
@@ -1327,10 +1360,11 @@ _BACKEND_KWARGS = {
     "slot": ("window", "kv_budget_bytes", "ledger", "verify_headroom"),
     "paged": ("window", "kv_budget_bytes", "ledger", "block_size",
               "n_blocks", "paged_impl", "prefix_share", "verify_headroom",
-              "tiered", "prefetch_ticks"),
+              "tiered", "prefetch_ticks", "kv_dtype"),
     "spec": ("window", "kv_budget_bytes", "ledger", "block_size",
              "n_blocks", "paged_impl", "prefix_share", "draft_cfg",
-             "draft_params", "draft_k", "inner"),
+             "draft_params", "draft_k", "inner", "kv_dtype",
+             "verify_impl"),
 }
 
 

@@ -108,9 +108,10 @@ class InferenceEngine:
                  paged: bool = False, block_size: int = 16,
                  n_blocks: Optional[int] = None, ledger=None,
                  paged_impl: Optional[str] = None,
-                 prefix_share: bool = True,
+                 prefix_share: bool = True, kv_dtype: Optional[str] = None,
                  draft_cfg=None, draft_params=None, draft_k: int = 4,
                  spec_inner: Optional[str] = None,
+                 verify_impl: Optional[str] = None,
                  completed_cap: Optional[int] = None,
                  policy: Union[str, object] = "slo",
                  default_slo: Optional[SLO] = None,
@@ -182,6 +183,7 @@ class InferenceEngine:
                 kv_budget_bytes=kv_budget_bytes, ledger=ledger,
                 block_size=block_size, n_blocks=n_blocks,
                 paged_impl=paged_impl, prefix_share=prefix_share,
+                kv_dtype=kv_dtype, verify_impl=verify_impl,
                 draft_cfg=draft_cfg, draft_params=draft_params,
                 draft_k=draft_k, inner=spec_inner,
                 tiered=tiered_kv, prefetch_ticks=prefetch_ticks)

@@ -34,7 +34,7 @@ class BlockPool:
 
     GARBAGE = 0          # reserved physical block; never allocated
 
-    def __init__(self, cfg, n_blocks: int, block_size: int):
+    def __init__(self, cfg, n_blocks: int, block_size: int, kv_dtype=None):
         if block_size < 1:
             raise ValueError("block_size must be >= 1")
         if n_blocks < 2:
@@ -43,8 +43,13 @@ class BlockPool:
                 "on top of the reserved garbage block 0")
         self.block_size = block_size
         self.n_blocks = n_blocks
-        self.block_bytes = api.kv_block_bytes(cfg, block_size)
-        self.pages = api.init_kv_pages(cfg, n_blocks, block_size)
+        # kv_dtype='int8' allocates int8 pages + per-row f32 scale planes
+        # (~3.8x smaller blocks at head_dim 64, so the same byte budget
+        # admits proportionally more blocks); block_bytes prices the whole
+        # pytree either way, so ledger charges stay exact.
+        self.kv_dtype = "fp" if kv_dtype is None else kv_dtype
+        self.block_bytes = api.kv_block_bytes(cfg, block_size, kv_dtype)
+        self.pages = api.init_kv_pages(cfg, n_blocks, block_size, kv_dtype)
         # low ids handed out first (stable layouts in tests); 0 is reserved
         self._free = list(range(n_blocks - 1, 0, -1))
         self._ref: dict[int, int] = {}          # allocated block -> refcount
@@ -127,18 +132,21 @@ class BlockPool:
 class HostBlockPool:
     """Host-DRAM side of the tiered KV cache (ROADMAP item 3b).
 
-    Holds the *contents* of demoted KV blocks — per block, the
-    ``(L, block_size, n_kv_heads, head_dim)`` k/v rows as numpy arrays —
-    keyed by an opaque handle.  Byte accounting mirrors the device pool's
-    ``block_bytes`` so ``DeviceMemory.host_kv_bytes`` reconciles exactly
-    with ``used_bytes()`` here.  Unlike the device pool there is no free
-    list or budget: host DRAM is the backing tier, bounded only by what
-    was demoted out of the device budget.
+    Holds the *contents* of demoted KV blocks — per block, a dict of the
+    pages pytree's per-block rows as numpy arrays ({"k","v"} of
+    ``(L, block_size, n_kv_heads, head_dim)``, plus the per-row scale
+    planes for int8 pools) — keyed by an opaque handle.  Byte accounting
+    mirrors the device pool's ``block_bytes`` so
+    ``DeviceMemory.host_kv_bytes`` reconciles exactly with
+    ``used_bytes()`` here (an int8 pool demotes int8 rows: the snapshot
+    is as small as the device block).  Unlike the device pool there is no
+    free list or budget: host DRAM is the backing tier, bounded only by
+    what was demoted out of the device budget.
     """
 
     def __init__(self, block_bytes: int):
         self.block_bytes = block_bytes
-        self._data: dict[int, tuple] = {}       # key -> (k_rows, v_rows)
+        self._data: dict[int, dict] = {}        # key -> per-leaf rows
         self._next = 0
         self.total_demotions = 0     # lifetime blocks parked here
         self.total_prefetches = 0    # lifetime blocks pulled back out
@@ -151,16 +159,17 @@ class HostBlockPool:
     def used_bytes(self) -> int:
         return self.n_blocks * self.block_bytes
 
-    def put(self, k_rows, v_rows) -> int:
-        """Park one demoted block's rows; returns its handle."""
+    def put(self, rows: dict) -> int:
+        """Park one demoted block's rows (per-leaf dict); returns its
+        handle."""
         key = self._next
         self._next += 1
-        self._data[key] = (k_rows, v_rows)
+        self._data[key] = rows
         self.total_demotions += 1
         self.peak_blocks = max(self.peak_blocks, self.n_blocks)
         return key
 
-    def pop(self, key: int) -> tuple:
+    def pop(self, key: int) -> dict:
         """Pull a block back out for prefetch (host -> device)."""
         if key not in self._data:
             raise RuntimeError(f"HostBlockPool.pop({key}): no such block")

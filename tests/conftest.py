@@ -11,6 +11,20 @@ def rng():
     return jax.random.PRNGKey(0)
 
 
+@pytest.fixture(autouse=True, scope="module")
+def _bound_jit_memory():
+    """Drop compiled-executable caches between test modules.
+
+    The whole tier-1 suite runs in ONE process, and every module compiles
+    its own engines/kernels; the accumulated XLA:CPU JIT state eventually
+    segfaults a *later, unrelated* compile (deterministically, ~300 tests
+    in).  Modules don't share jitted callables — fixtures are module-
+    scoped and cross-module helpers recompile transparently — so clearing
+    at module teardown bounds JIT memory without changing any test."""
+    yield
+    jax.clear_caches()
+
+
 def make_loader(cfg, batch=2, seq=64, seed=0):
     """Model-family-aware synthetic loader (audio/vlm need embeds)."""
     from repro.models import api

@@ -230,3 +230,33 @@ def test_physical_pool_capped_by_budget(dense):
                            paged=True, block_size=8, n_blocks=10,
                            kv_budget_bytes=3 * block_bytes)
     assert eng2.pool.n_blocks == 10
+
+
+def test_int8_kv_admits_more_under_same_budget(dense):
+    """int8 KV pages under the SAME byte budget: strictly higher admitted
+    concurrency than the fp pool, and token-identical outputs.  The
+    budget is sized so fp can hold exactly 2 in-flight reservations (2
+    blocks each) — int8 blocks are strictly smaller (1 byte + amortized
+    scale per row element vs 2+ for bf16, 4 for f32), so the quantized
+    pool must run strictly more lanes at once (the whole point of paying
+    for quantization)."""
+    cfg, params = dense
+    fp_block = api.kv_block_bytes(cfg, 8)
+    assert api.kv_block_bytes(cfg, 8, "int8") < fp_block
+    # every request below reserves 2 blocks (prompt + gen - 1 <= 16 rows)
+    budget = 4 * fp_block
+    results = {}
+    for kv_dtype in (None, "int8"):
+        eng = InferenceEngine(cfg, params, capacity=6, max_seq=MAX_SEQ,
+                              paged=True, block_size=8, kv_dtype=kv_dtype,
+                              kv_budget_bytes=budget)
+        reqs = [eng.submit(_prompt(cfg, 900 + i, 4 + i), 6)
+                for i in range(6)]
+        peak = 0
+        while eng.step():
+            peak = max(peak, len(eng.active_requests()))
+        results[kv_dtype] = (peak, [r.generated for r in reqs])
+    (fp_peak, fp_toks), (q_peak, q_toks) = results[None], results["int8"]
+    assert q_peak > fp_peak, \
+        f"int8 admitted {q_peak} lanes vs fp {fp_peak} under one budget"
+    assert q_toks == fp_toks, "int8 KV decode diverged from fp"

@@ -185,8 +185,42 @@ def test_draft_plan_picks_cheaper_draft():
     rec = cm.provenance[f"draft:{cfg.name}"]
     assert rec["draft_model"] == choice.draft_cfg.name
     assert rec["expected_tok_per_s"] > 0
+    # unprofiled: the fixed prior, tagged as such
+    assert rec["accept_source"] == "prior"
+    assert rec["accept_prior"] == 0.8
     # fixing k respects it
     assert cm.draft_plan(cfg, draft_k=3).draft_k == 3
+
+
+def test_draft_plan_prefers_measured_accept_rate():
+    """A profile with a per-family measured acceptance rate overrides the
+    fixed ``accept_prior=0.8``, with provenance recording the probe; a
+    family the probe never measured falls back to the tagged prior."""
+    cfg = _cfg()
+    facts = _fresh_facts(accept_rates={
+        cfg.family: {"target": cfg.name, "draft": f"{cfg.name}-draft-probe",
+                     "draft_k": 3, "accept_rate": 0.35, "rounds": 20}})
+    cm = CostModel(facts)
+    choice = cm.draft_plan(cfg, draft_k=4)
+    rec = cm.provenance[f"draft:{cfg.name}"]
+    assert rec["accept_source"] == "measured"
+    assert rec["accept_prior"] == 0.35          # α actually used
+    assert rec["accept_probe"]["rounds"] == 20
+    assert rec["accept_probe"]["draft"] == f"{cfg.name}-draft-probe"
+    # the measured α changes the throughput estimate vs the fixed prior:
+    # E(k=4) = (1-α^5)/(1-α) is strictly smaller at α=.35 than α=.8
+    prior_rec = CostModel(None).draft_plan(cfg, draft_k=4).record
+    assert choice.record["expected_tok_per_s"] < \
+        prior_rec["expected_tok_per_s"]
+    # a low measured α also steers the optimizer toward shallower drafts
+    assert cm.draft_plan(cfg).draft_k <= CostModel(None).draft_plan(cfg).draft_k
+    # unmeasured family -> tagged fallback to the prior
+    cm2 = CostModel(_fresh_facts())
+    cm2.draft_plan(cfg)
+    assert cm2.provenance[f"draft:{cfg.name}"]["accept_source"] == "prior"
+    # measured rates round-trip through the profile JSON
+    assert MachineFacts.from_dict(facts.to_dict()).accept_rates == \
+        facts.accept_rates
 
 
 # ---------------------------------------------------------------------------

@@ -330,6 +330,98 @@ def test_session_spec_job_end_to_end(dense):
     assert session.devices[0].kv_reserved_bytes == 0
 
 
+# ---------------------------------------------------------------------------
+# fused multi-query paged-verify kernel (kernels/paged_verify.py)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=6, deadline=None)
+@given(draft=st.sampled_from(["self", 7, 13]),
+       draft_k=st.sampled_from([1, 3]),
+       seed=st.integers(min_value=0, max_value=2))
+def test_fused_verify_token_identical_to_gathered(draft, draft_k, seed):
+    """Property: the fused multi-query verify kernel (all k draft rows
+    scored through block tables in ONE launch) is token-identical to the
+    gathered-jnp verify path — across accept-rate extremes and k."""
+    cfg, params = _dense()
+    prompts, gens = _workload(cfg, seed)
+    _, toks = _run(cfg, params, prompts, gens, backend="spec",
+                   spec_inner="paged", draft_cfg=cfg,
+                   draft_params=_drafts()[draft], draft_k=draft_k,
+                   block_size=4, verify_impl="pallas_interpret")
+    assert toks == _baseline(seed), \
+        f"fused verify(draft={draft}, k={draft_k}) diverged from greedy"
+
+
+def test_fused_verify_staggered_joins(dense, drafts):
+    """Mid-flight joins under the fused verify kernel: fresh lanes enter
+    rounds through the same batched launch as buffered lanes."""
+    cfg, params = dense
+    prompts, gens = _workload(cfg, 4, n=5)
+    base = []
+    for p, g in zip(prompts, gens):
+        _, t = _run(cfg, params, [p], [g])
+        base.append(t[0])
+    eng = InferenceEngine(cfg, params, capacity=2, max_seq=MAX_SEQ,
+                          backend="spec", spec_inner="paged", draft_cfg=cfg,
+                          draft_params=drafts[7], draft_k=3, block_size=4,
+                          verify_impl="pallas_interpret")
+    reqs = [eng.submit(prompts[0], gens[0])]
+    n = 1
+    while eng.has_work() or n < len(prompts):
+        if n < len(prompts):
+            reqs.append(eng.submit(prompts[n], gens[n]))
+            n += 1
+        eng.step()
+    eng.run()
+    assert [r.generated for r in reqs] == base
+    assert eng.backend.verify_impl == "pallas_interpret"
+    assert eng.backend.inner.pool.n_used == 0
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 10**6), kk=st.sampled_from([1, 3]))
+def test_fused_verify_on_preemption_shaped_tables(seed, kk):
+    """Preempt/resume leaves lanes with interleaved, non-monotone block
+    tables (resumed snapshots re-attach wherever free blocks landed) and
+    aliased prefix blocks (COW sharing).  The kernel must match the
+    gathered oracle on exactly that table-state space: scrambled physical
+    order, shared blocks across lanes, rewound lengths, garbage tails."""
+    from repro.kernels import ops, ref
+    n, nkv, groups, hd, bs, B = 3, 2, 2, 32, 4, 4
+    rng = np.random.default_rng(seed)
+    P = n * B + 2
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    kp = jax.random.normal(k1, (P, bs, nkv, hd), jnp.float32)
+    vp = jax.random.normal(k2, (P, bs, nkv, hd), jnp.float32)
+    q = jax.random.normal(k3, (n, kk, nkv * groups, hd), jnp.float32)
+    # scrambled physical order per lane (resume re-attach)
+    tables = (rng.permutation(P - 1)[: n * B] + 1).reshape(n, B)
+    # lanes 1 and 2 alias lane 0's first block (shared prompt prefix)
+    tables[1, 0] = tables[2, 0] = tables[0, 0]
+    # lane 2's tail points at the garbage block (short, rewound lane)
+    tables[2, 2:] = 0
+    tables = jnp.asarray(tables, jnp.int32)
+    # rewound lengths: mid-block accept points, one lane at a boundary
+    lengths = jnp.asarray(
+        [int(rng.integers(0, B * bs - kk + 1)), bs, 2], jnp.int32)
+    out = ops.paged_verify(q, kp, vp, tables, lengths,
+                           impl="pallas_interpret")
+    exp = ref.paged_verify_ref(q, kp, vp, tables, lengths)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_verify_impl_rejected_on_slot_inner(dense):
+    cfg, params = dense
+    with pytest.raises(ValueError, match="verify_impl"):
+        SpecDecodeBackend(cfg, 2, 32, draft_cfg=cfg, draft_params=params,
+                          inner="slot", verify_impl="pallas")
+    from repro.api import ServeJob
+    with pytest.raises(ValueError, match="verify_impl"):
+        ServeJob(cfg, backend="paged",
+                 verify_impl="pallas").validate_tiering()
+
+
 def test_serve_job_spec_validation(dense):
     from repro.api import ServeJob
     cfg, _ = dense
